@@ -1,0 +1,91 @@
+//! Activation zoo: sweep every Fig. 6 standard cell across process nodes,
+//! biasing regimes and temperatures; write CSVs and a compact robustness
+//! report — the full Sec. IV characterization in one binary.
+//!
+//! Run: `cargo run --release --example activation_zoo [-- <outdir>]`
+
+use std::path::PathBuf;
+
+use sac::analysis::dc;
+use sac::cells::activations::CellKind;
+use sac::cells::CircuitCorner;
+use sac::pdk::{regime::Regime, ProcessNode};
+use sac::util::table::{write_xy_csv, Table};
+
+fn main() -> anyhow::Result<()> {
+    let outdir = PathBuf::from(
+        std::env::args().nth(1).unwrap_or_else(|| "results/zoo".into()),
+    );
+    std::fs::create_dir_all(&outdir)?;
+    let zs = dc::grid(-2.0, 2.0, 33);
+
+    let mut report = Table::new(
+        "activation-cell robustness (max normalized deviation from 180nm/WI/27C)",
+        &["cell", "vs 7nm", "vs SI", "vs 125C", "vs -45C"],
+    );
+
+    for kind in CellKind::all() {
+        let base = CircuitCorner::new(
+            ProcessNode::by_name("180nm").unwrap(),
+            Regime::WeakInversion,
+        );
+        let y0 = dc::normalize(&dc::sweep_cell(kind, &base, &zs));
+
+        let mut devs = Vec::new();
+        let corners: Vec<(&str, CircuitCorner)> = vec![
+            (
+                "7nm",
+                CircuitCorner::new(
+                    ProcessNode::by_name("7nm").unwrap(),
+                    Regime::WeakInversion,
+                ),
+            ),
+            (
+                "SI",
+                CircuitCorner::new(
+                    ProcessNode::by_name("180nm").unwrap(),
+                    Regime::StrongInversion,
+                ),
+            ),
+            (
+                "125C",
+                CircuitCorner::new(
+                    ProcessNode::by_name("180nm").unwrap(),
+                    Regime::WeakInversion,
+                )
+                .at_temp(125.0),
+            ),
+            (
+                "-45C",
+                CircuitCorner::new(
+                    ProcessNode::by_name("180nm").unwrap(),
+                    Regime::WeakInversion,
+                )
+                .at_temp(-45.0),
+            ),
+        ];
+        let mut all_series: Vec<(String, Vec<f64>)> =
+            vec![("base".to_string(), y0.clone())];
+        for (name, corner) in &corners {
+            let y = dc::normalize(&dc::sweep_cell(kind, corner, &zs));
+            let (mx, _) = dc::curve_deviation(&y0, &y);
+            devs.push(mx);
+            all_series.push((name.to_string(), y));
+        }
+        let refs: Vec<(&str, &[f64])> = all_series
+            .iter()
+            .map(|(n, v)| (n.as_str(), v.as_slice()))
+            .collect();
+        write_xy_csv(&outdir.join(format!("zoo_{}.csv", kind.name())), "x", &zs, &refs)?;
+        report.row(vec![
+            kind.name().to_string(),
+            format!("{:.4}", devs[0]),
+            format!("{:.4}", devs[1]),
+            format!("{:.4}", devs[2]),
+            format!("{:.4}", devs[3]),
+        ]);
+    }
+    println!("{}", report.render());
+    println!("CSV sweeps written to {}", outdir.display());
+    Ok(())
+}

@@ -1,0 +1,172 @@
+"""AOT export: lower the S-AC graphs to HLO *text* for the rust runtime.
+
+This is the only bridge between the python build path and the rust request
+path.  Interchange is HLO **text**, never ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the crate's xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts written to ``--outdir`` (default ``../artifacts``):
+
+  * ``gmp_kernel.hlo.txt``    — the Layer-1 Pallas GMP kernel alone
+                                (B x M batched solve), the rust hot path's
+                                microkernel and the runtime smoke test.
+  * ``<task>_mlp.hlo.txt``    — full S-AC inference graphs (weights are
+                                *parameters*, so rust feeds the trained
+                                weights from ``weights_<task>.json``).
+  * ``goldens_gmp.json``      — deterministic input/output vectors consumed
+                                by rust unit tests (cross-language parity).
+  * ``manifest.json``         — shapes/dtypes/parameter order per artifact.
+
+Python never runs at serving time: ``make artifacts`` is a no-op when
+outputs are newer than their inputs (Makefile dependency).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .kernels.gmp import gmp_solve_pallas
+from .kernels.ref import gmp_solve_ref
+from .sacml import nets, ops
+
+# Batch sizes baked into the AOT executables (one compiled variant each).
+GMP_B, GMP_M = 4096, 8
+TASK_BATCH = {"xor": 64, "arem": 64, "digits": 64}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_gmp_kernel(outdir: str, manifest: dict) -> None:
+    """Lower the Pallas GMP kernel (interpret=True -> plain HLO)."""
+    c = 1.0
+
+    def fn(x):
+        return (gmp_solve_pallas(x, c),)
+
+    spec = jax.ShapeDtypeStruct((GMP_B, GMP_M), jnp.float32)
+    text = to_hlo_text(jax.jit(fn).lower(spec))
+    path = os.path.join(outdir, "gmp_kernel.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    manifest["gmp_kernel"] = {
+        "file": "gmp_kernel.hlo.txt",
+        "params": [{"name": "x", "shape": [GMP_B, GMP_M], "dtype": "f32"}],
+        "outputs": [{"name": "h", "shape": [GMP_B], "dtype": "f32"}],
+        "c": c,
+    }
+    print(f"  gmp_kernel.hlo.txt  ({len(text)} chars)")
+
+
+def export_task_mlp(task: str, outdir: str, manifest: dict) -> bool:
+    """Lower one task's S-AC inference graph. Weights are parameters."""
+    wpath = os.path.join(outdir, f"weights_{task}.json")
+    if not os.path.exists(wpath):
+        print(f"  !! weights_{task}.json missing — run training first; skipped")
+        return False
+    with open(wpath) as f:
+        blob = json.load(f)
+    sizes = blob["sizes"]
+    s, c = blob["splines"], blob["c"]
+    act = blob["activation"]
+    batch = TASK_BATCH[task]
+
+    # Inference routes through the bisection solver — the same algorithm the
+    # Pallas kernel and the rust solver implement (DESIGN.md §6 tier chain).
+    def fn(*args):
+        nl = len(sizes) - 1
+        params = {}
+        for li in range(nl):
+            params[f"w{li + 1}"] = args[2 * li]
+            params[f"b{li + 1}"] = args[2 * li + 1]
+        x = args[-1]
+        ops.set_solver("bisect")
+        try:
+            logits = nets.sac_forward(params, x, s=s, c=c, activation=act)
+        finally:
+            ops.set_solver("exact")
+        return (logits,)
+
+    specs = []
+    pspec = []
+    for li in range(len(sizes) - 1):
+        specs.append(jax.ShapeDtypeStruct((sizes[li], sizes[li + 1]), jnp.float32))
+        specs.append(jax.ShapeDtypeStruct((sizes[li + 1],), jnp.float32))
+        pspec.append({"name": f"w{li + 1}", "shape": [sizes[li], sizes[li + 1]], "dtype": "f32"})
+        pspec.append({"name": f"b{li + 1}", "shape": [sizes[li + 1]], "dtype": "f32"})
+    specs.append(jax.ShapeDtypeStruct((batch, sizes[0]), jnp.float32))
+    pspec.append({"name": "x", "shape": [batch, sizes[0]], "dtype": "f32"})
+
+    text = to_hlo_text(jax.jit(fn).lower(*specs))
+    fname = f"{task}_mlp.hlo.txt"
+    with open(os.path.join(outdir, fname), "w") as f:
+        f.write(text)
+    manifest[f"{task}_mlp"] = {
+        "file": fname,
+        "params": pspec,
+        "outputs": [{"name": "logits", "shape": [batch, sizes[-1]], "dtype": "f32"}],
+        "sizes": sizes, "splines": s, "c": c, "activation": act,
+    }
+    print(f"  {fname}  ({len(text)} chars)")
+    return True
+
+
+def export_goldens(outdir: str) -> None:
+    """Deterministic GMP + cell golden vectors for rust cross-checks."""
+    rng = np.random.RandomState(42)
+    cases = []
+    for (b, m, c) in [(4, 3, 1.0), (8, 6, 2.0), (2, 12, 0.25), (16, 8, 5.0)]:
+        x = rng.uniform(-3.0, 3.0, size=(b, m)).astype(np.float32)
+        h = np.asarray(gmp_solve_ref(x, c))
+        cases.append({"c": c, "x": x.tolist(), "h": h.tolist()})
+    z = np.linspace(-3.0, 1.5, 19).astype(np.float32)
+    cells = {
+        "proto_s1": np.asarray(ops.proto_unit(jnp.asarray(z), 1, 1.0)).tolist(),
+        "proto_s3": np.asarray(ops.proto_unit(jnp.asarray(z), 3, 1.0)).tolist(),
+        "relu": np.asarray(ops.relu_cell(jnp.asarray(z), 0.05)).tolist(),
+        "phi1": np.asarray(ops.phi1_cell(jnp.asarray(z))).tolist(),
+        "cosh": np.asarray(ops.cosh_cell(jnp.asarray(z))).tolist(),
+        "sinh": np.asarray(ops.sinh_cell(jnp.asarray(z))).tolist(),
+    }
+    a, sc = ops.calibrate_multiplier(3, 1.0)
+    with open(os.path.join(outdir, "goldens_gmp.json"), "w") as f:
+        json.dump({"gmp": cases, "z": z.tolist(), "cells": cells,
+                   "mult_calib_s3_c1": {"a": a, "scale": sc}}, f)
+    print("  goldens_gmp.json")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--skip-mlp", action="store_true",
+                    help="only export the GMP kernel + goldens")
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+    manifest: dict = {}
+    print("AOT export:")
+    export_gmp_kernel(args.outdir, manifest)
+    export_goldens(args.outdir)
+    if not args.skip_mlp:
+        for task in TASK_BATCH:
+            export_task_mlp(task, args.outdir, manifest)
+    with open(os.path.join(args.outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print("  manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,138 @@
+"""Layer-1 Pallas kernel: batched Generalized Margin Propagation solve.
+
+The compute hot-spot of the whole S-AC stack is the implicit solve
+
+    find h[b]  s.t.  sum_j g(X[b, j] - h[b]) = C        (paper eq. 9)
+
+evaluated for millions of rows per network forward pass (every synapse of
+the S-AC multiplier and every activation cell is one such solve).  This
+kernel maps it onto the TPU as a *branchless fixed-iteration bisection*:
+
+  * grid over batch blocks; each program instance owns a ``(BLOCK_B, M)``
+    VMEM tile of ``X`` plus three ``(BLOCK_B, 1)`` vectors (lo/hi/mid);
+  * every iteration is one masked reduce + two selects over the tile —
+    pure VPU work with data-independent control flow (``fori_loop`` with a
+    static trip count), which is exactly what the TPU wants;
+  * no HBM traffic inside the loop: the tile is streamed HBM->VMEM once by
+    the BlockSpec pipeline and all 60 iterations run on-chip.
+
+Hardware adaptation note (DESIGN.md §Hardware-Adaptation): the paper's
+"hardware" is an analog transistor array that solves eq. 9 by KCL in one
+shot.  On a digital tensor core the same fixed point is reached by
+bisection; 60 halvings of the bracket localize ``h`` to ~2^-60 of the
+bracket width, far below analog mismatch noise (Fig. 4b: ~5%).
+
+Run with ``interpret=True`` everywhere in this repo: the CPU PJRT client
+cannot execute Mosaic custom-calls, and interpret-mode lowers the kernel
+to plain HLO so the *same* artifact runs under the rust runtime.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import GMP_ITERS, SHAPE_RELU, SHAPE_SOFTPLUS
+
+# Default batch-block size.  VMEM budget (v4: ~16 MiB/core): a tile of
+# f32[BLOCK_B, M] with M <= 64 plus three f32[BLOCK_B] vectors is
+# 256*64*4 B = 64 KiB << VMEM, leaving room for double buffering of the
+# next tile while this one iterates.
+BLOCK_B = 256
+
+
+def _gmp_kernel(x_ref, o_ref, *, c: float, shape: int, width: float,
+                iters: int):
+    """Kernel body: one batch block, full solve in VMEM."""
+    x = x_ref[...]  # (block_b, M)
+    hi = jnp.max(x, axis=-1)
+    pad = 4.0 * width if shape != SHAPE_RELU else 0.0
+    lo = hi - c - pad
+
+    def g(z):
+        if shape == SHAPE_RELU:
+            return jnp.maximum(z, 0.0)
+        w = jnp.float32(width)
+        return w * jnp.logaddexp(jnp.zeros_like(z), z / w)
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = 0.5 * (lo + hi)
+        s = jnp.sum(g(x - mid[:, None]), axis=-1)
+        gt = s > c
+        return jnp.where(gt, mid, lo), jnp.where(gt, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    o_ref[...] = 0.5 * (lo + hi)
+
+
+def gmp_solve_pallas(x, c: float, shape: int = SHAPE_RELU,
+                     width: float = 0.05, iters: int = GMP_ITERS,
+                     block_b: int = BLOCK_B, interpret: bool = True):
+    """Batched GMP solve as a Pallas kernel.
+
+    Args:
+      x:        ``[B, M]`` f32 spline-expanded inputs.
+      c:        normalization constant (static python float).
+      shape:    ``SHAPE_RELU`` / ``SHAPE_SOFTPLUS``.
+      width:    knee width for the soft shape.
+      iters:    bisection iterations (static).
+      block_b:  batch tile size (grid = ceil(B / block_b)).
+      interpret: keep True on CPU (Mosaic custom-calls don't run on the
+        CPU PJRT plugin); structure is identical either way.
+
+    Returns:
+      ``h`` of shape ``[B]``.
+    """
+    b, m = x.shape
+    block_b = min(block_b, b)
+    grid = (pl.cdiv(b, block_b),)
+    kern = functools.partial(_gmp_kernel, c=float(c), shape=shape,
+                             width=float(width), iters=iters)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_b, m), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), x.dtype),
+        interpret=interpret,
+    )(x)
+
+
+# ---------------------------------------------------------------------------
+# Differentiable wrapper: implicit-function VJP so the S-AC network can be
+# trained through the solve (bisection itself is not differentiated).
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4))
+def gmp(x, c: float, shape: int = SHAPE_RELU, width: float = 0.05,
+        use_pallas: bool = False):
+    """Differentiable GMP solve over the last axis of ``x``.
+
+    ``use_pallas=True`` routes the forward pass through the Pallas kernel
+    (2-D inputs only); otherwise the pure-jnp oracle is used.  Both are the
+    same math; the flag exists so the AOT export can embed the kernel while
+    training uses the cheaper-to-trace oracle.
+    """
+    from .ref import gmp_solve_ref
+    if use_pallas and x.ndim == 2:
+        return gmp_solve_pallas(x, c, shape=shape, width=width)
+    return gmp_solve_ref(x, c, shape=shape, width=width)
+
+
+def _gmp_fwd(x, c, shape, width, use_pallas):
+    h = gmp(x, c, shape, width, use_pallas)
+    return h, (x, h)
+
+
+def _gmp_bwd(c, shape, width, use_pallas, res, dh):
+    from .ref import gmp_grad_ref
+    x, h = res
+    grad = gmp_grad_ref(x, h, shape=shape, width=width)
+    return (grad * dh[..., None],)
+
+
+gmp.defvjp(_gmp_fwd, _gmp_bwd)

@@ -1,0 +1,99 @@
+"""S-AC neural networks (Sec. V): algorithm -> S-AC hardware mapping.
+
+A dense layer is mapped per eq. 40: every MAC is the four-quadrant S-AC
+multiplier (four proto-unit evaluations), the accumulation is KCL (plain
+addition of currents), the bias a constant current.  The nonlinearity is an
+S-AC activation cell from ``ops``.
+
+Two forward paths:
+
+  * ``sac_forward``   — the S-AC network (what the silicon computes).
+  * ``mlp_forward``   — a vanilla float MLP with the same topology: the
+                        paper's "S/W" baseline column in Table IV.
+
+Both are pure functions of a params pytree so they can be trained with
+plain JAX autodiff.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ops
+
+Params = Dict[str, jnp.ndarray]
+
+
+def init_params(sizes: Sequence[int], seed: int = 0,
+                scale: float | None = None) -> Params:
+    """Glorot-ish init for an MLP with layer ``sizes`` (e.g. [256, 15, 10])."""
+    rng = np.random.RandomState(seed)
+    params: Params = {}
+    for li in range(len(sizes) - 1):
+        fan_in, fan_out = sizes[li], sizes[li + 1]
+        sd = scale if scale is not None else np.sqrt(2.0 / (fan_in + fan_out))
+        params[f"w{li + 1}"] = jnp.asarray(
+            rng.normal(0.0, sd, size=(fan_in, fan_out)).astype(np.float32))
+        params[f"b{li + 1}"] = jnp.zeros((fan_out,), jnp.float32)
+    return params
+
+
+def n_layers(params: Params) -> int:
+    return sum(1 for k in params if k.startswith("w"))
+
+
+def sac_dense(x, w, b, s: int = 3, c: float = 1.0, calib=None):
+    """Eq. 40 dense layer: ``eta_k = sum_i multiply(x_i, w_ik) + b_k``.
+
+    ``x: [B, in]``, ``w: [in, out]`` -> ``[B, out]``.  The multiply
+    broadcasts to ``[B, in, out]`` (each element one 4-unit multiplier
+    cell); KCL-sums over the input axis.
+    """
+    y = ops.multiply(x[:, :, None], w[None, :, :], s=s, c=c, calib=calib)
+    return jnp.sum(y, axis=1) + b
+
+
+def sac_forward(params: Params, x, s: int = 3, c: float = 1.0,
+                activation: str = "phi2", act_gain: float = 4.0) -> jnp.ndarray:
+    """S-AC network forward pass -> logits ``[B, n_out]``.
+
+    ``act_gain`` maps the pre-activation current range into the activation
+    cell's input range (a current-mirror ratio in the circuit).
+    """
+    calib = ops.calibrate_multiplier(s, c)
+    nl = n_layers(params)
+    h = x
+    for li in range(1, nl + 1):
+        h = sac_dense(h, params[f"w{li}"], params[f"b{li}"], s=s, c=c, calib=calib)
+        if li < nl:
+            z = h * act_gain
+            if activation == "phi2":
+                h = ops.phi2_cell(z, k=1.0, s=s, c=0.5) - 1.0  # recentre
+            elif activation == "phi1":
+                h = ops.phi1_cell(z, k=1.0, s=s, c=0.5)
+            elif activation == "relu":
+                h = ops.relu_cell(z, c=0.05)
+            elif activation == "softplus":
+                h = ops.softplus_cell(z, s=s, c=0.5)
+            else:
+                raise ValueError(activation)
+    return h
+
+
+def mlp_forward(params: Params, x, activation: str = "tanh") -> jnp.ndarray:
+    """Vanilla float MLP ("S/W" baseline of Table IV)."""
+    nl = n_layers(params)
+    h = x
+    for li in range(1, nl + 1):
+        h = h @ params[f"w{li}"] + params[f"b{li}"]
+        if li < nl:
+            h = jnp.tanh(h) if activation == "tanh" else jax.nn.relu(h)
+    return h
+
+
+def accuracy(logits, labels) -> float:
+    return float(jnp.mean(jnp.argmax(logits, axis=-1) == labels))

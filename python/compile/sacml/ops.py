@@ -1,0 +1,285 @@
+"""S-AC computational algebra on top of the GMP primitive (Layer 2).
+
+Every cell in the paper's standard-cell library (Sec. IV) is a composition
+of the one primitive: the GMP solve ``h: sum_j [x_j - h]_+ = C`` (with the
+output clamped to ``h >= 0`` — it is a current).  This module provides
+
+  * ``gmp_exact``      — O(M log M) sort-based *exact* solve for the ReLU
+                         shape (the classic MP algorithm).  Differentiable
+                         through JAX's sort; used for training.
+  * ``gmp_bisect``     — fixed-iteration bisection wrapper (``kernels.gmp``),
+                         shape-generic; used for AOT export so the artifact
+                         embeds the same algorithm as the rust runtime and
+                         the Pallas kernel.
+  * ``proto_unit``     — the basic S-AC proto-shape h(x) of Fig. 3 (input
+                         branch + reference branch, spline expanded).
+  * activation cells   — relu / soft-plus / phi1 (tanh-like) / phi2
+                         (sigmoid-like) / cosh / sinh   (Fig. 6, eq. 15-21).
+  * ``multiply``       — the four-quadrant multiplier (Fig. 11, eq. 24-30)
+                         with its operating-point/scale calibration.
+  * ``wta`` family     — winner-take-all / N-of-M / SoftArgMax / Max
+                         (Fig. 9, eq. 22-23).
+
+All functions broadcast over leading batch dimensions.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels.gmp import gmp as _gmp_bisect_diff
+from .splines import schedule
+
+# ---------------------------------------------------------------------------
+# GMP solves
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def gmp_exact(x, c):
+    """Exact ReLU-shape GMP solve over the last axis (unclamped).
+
+    With ``x`` sorted descending and ``S_k`` the prefix sums, the solution
+    with ``k`` active branches is ``h_k = (S_k - C)/k``; the consistent ``k``
+    is the largest one with ``x_(k) > h_k``.  The condition is monotone in
+    ``k`` so a prefix count selects it branchlessly.
+
+    The backward pass is the implicit-function gradient
+    ``dh/dx_j = 1{x_j > h}/k`` (custom VJP — the sort is not differentiated;
+    this also sidesteps a jaxlib gather-gradient incompatibility).
+    """
+    x = jnp.asarray(x)
+    cc = jnp.asarray(c, dtype=x.dtype)
+    xs = -jnp.sort(-x, axis=-1)                     # descending
+    cs = jnp.cumsum(xs, axis=-1)
+    m = x.shape[-1]
+    ks = jnp.arange(1, m + 1, dtype=x.dtype)
+    cond = xs * ks > cs - cc                         # true on a prefix
+    k = jnp.sum(cond, axis=-1)                       # active count >= 1
+    idx = (k - 1)[..., None]
+    csk = jnp.take_along_axis(cs, idx, axis=-1)[..., 0]
+    return (csk - cc) / k.astype(x.dtype)
+
+
+def _gmp_exact_fwd(x, c):
+    h = gmp_exact(x, c)
+    return h, (x, h)
+
+
+def _gmp_exact_bwd(c, res, dh):
+    x, h = res
+    act = (x > h[..., None]).astype(x.dtype)
+    denom = jnp.maximum(jnp.sum(act, axis=-1, keepdims=True), 1.0)
+    return ((act / denom) * dh[..., None],)
+
+
+gmp_exact.defvjp(_gmp_exact_fwd, _gmp_exact_bwd)
+
+
+def gmp_bisect(x, c, use_pallas: bool = False):
+    """Bisection GMP solve (differentiable, ReLU shape) over the last axis."""
+    return _gmp_bisect_diff(x, float(c), 0, 0.05, use_pallas)
+
+
+# Which solver the algebra below routes through.  Training uses the exact
+# solver; `aot.py` flips this to the bisection/Pallas path so the exported
+# HLO contains the Layer-1 kernel's algorithm.
+_SOLVER = {"fn": gmp_exact}
+
+
+def set_solver(kind: str, use_pallas: bool = False) -> None:
+    """Select the GMP backend: ``"exact"`` or ``"bisect"``."""
+    if kind == "exact":
+        _SOLVER["fn"] = gmp_exact
+    elif kind == "bisect":
+        _SOLVER["fn"] = functools.partial(gmp_bisect, use_pallas=use_pallas)
+    else:
+        raise ValueError(kind)
+
+
+def gmp(x, c):
+    """Active GMP solve (see ``set_solver``)."""
+    return _SOLVER["fn"](x, c)
+
+
+def sac_h(x, c):
+    """S-AC unit output: GMP solve clamped to non-negative (it is a current)."""
+    return jnp.maximum(gmp(x, c), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Proto-shape and activation cells
+# ---------------------------------------------------------------------------
+
+
+def _spline_rows(z, s: int, c: float):
+    """Spline-expand scalar input ``z`` and a ground branch: ``[z+O_j, O_j]``."""
+    offs, c_prime = schedule(s, c)
+    offs = jnp.asarray(offs, dtype=jnp.result_type(z, jnp.float32))
+    zx = z[..., None] + offs
+    zr = jnp.broadcast_to(offs, zx.shape)
+    return jnp.concatenate([zx, zr], axis=-1), c_prime
+
+
+def proto_unit(z, s: int = 3, c: float = 1.0):
+    """Basic S-AC proto-shape ``h(z)`` (Fig. 3): input + reference branch.
+
+    For S=1 this is the two-segment MP knee; for S>=3 the knee region tracks
+    ``e^z`` (log-sum-exp margin) increasingly well — the Fig. 2a story.
+    """
+    rows, c_prime = _spline_rows(z, s, c)
+    return jnp.maximum(gmp(rows, c_prime), 0.0)
+
+
+def relu_cell(z, c: float = 0.05):
+    """ReLU (eq. 19): 2-input unit, ``C -> 0`` limit. ``h = [z - C]_+``."""
+    rows = jnp.stack([z, jnp.zeros_like(z)], axis=-1)
+    return jnp.maximum(gmp(rows, c), 0.0)
+
+
+def softplus_cell(z, s: int = 3, c: float = 1.0):
+    """Soft-plus (Fig. 6e): proto-unit with moderate C — a softened knee."""
+    return proto_unit(z, s=s, c=c)
+
+
+def phi1_cell(z, k: float = 1.0, s: int = 3, c: float = 0.5):
+    """Compressive nonlinearity φ1 (eq. 20-21), tanh-equivalent.
+
+    ``φ1(z) = h(0, z+K) − h(z, K)`` — two 2-input S-AC units.
+    """
+    rows_a, cp = _spline_rows_pair(jnp.zeros_like(z), z + k, s, c)
+    rows_b, _ = _spline_rows_pair(z, jnp.full_like(z, k), s, c)
+    ha = jnp.maximum(gmp(rows_a, cp), 0.0)
+    hb = jnp.maximum(gmp(rows_b, cp), 0.0)
+    return ha - hb
+
+
+def phi2_cell(z, k: float = 1.0, s: int = 3, c: float = 0.5):
+    """Sigmoid-equivalent φ2 (Sec. IV-E): shifted φ1 (add constant K)."""
+    return phi1_cell(z, k=k, s=s, c=c) + k
+
+
+def _spline_rows_pair(a, b, s: int, c: float):
+    """Spline-expand a 2-input unit: rows ``[a+O_j] ++ [b+O_j]``."""
+    offs, c_prime = schedule(s, c)
+    offs = jnp.asarray(offs, dtype=jnp.result_type(a, jnp.float32))
+    ra = a[..., None] + offs
+    rb = b[..., None] + offs
+    return jnp.concatenate([ra, rb], axis=-1), c_prime
+
+
+def cosh_cell(z, s: int = 3, c: float = 1.0):
+    """cosh (eq. 16): ``h(z) + h(−z)`` with ``h ~ e^z/2`` proto-units."""
+    return proto_unit(z, s, c) + proto_unit(-z, s, c)
+
+
+def sinh_cell(z, s: int = 3, c: float = 1.0):
+    """sinh (eq. 18): ``h(z) − h(−z)`` (N-type minus P-type unit by KCL)."""
+    return proto_unit(z, s, c) - proto_unit(-z, s, c)
+
+
+# ---------------------------------------------------------------------------
+# Four-quadrant multiplier (eq. 24-30)
+# ---------------------------------------------------------------------------
+
+
+def _gmp_exact_np(x: np.ndarray, c: float) -> np.ndarray:
+    """Numpy clone of ``gmp_exact`` — used by calibration, which must run
+    eagerly even when the caller is inside a jit trace."""
+    xs = -np.sort(-x, axis=-1)
+    cs = np.cumsum(xs, axis=-1)
+    ks = np.arange(1, x.shape[-1] + 1, dtype=x.dtype)
+    cond = xs * ks > cs - c
+    k = cond.sum(axis=-1)
+    csk = np.take_along_axis(cs, (k - 1)[..., None], axis=-1)[..., 0]
+    return (csk - c) / k.astype(x.dtype)
+
+
+def _proto_unit_np(z: np.ndarray, s: int, c: float) -> np.ndarray:
+    offs, c_prime = schedule(s, c)
+    rows = np.concatenate(
+        [z[..., None] + offs, np.broadcast_to(offs, z.shape + (s,))], axis=-1)
+    return np.maximum(_gmp_exact_np(rows.astype(np.float32), c_prime), 0.0)
+
+
+@functools.lru_cache(maxsize=None)
+def calibrate_multiplier(s: int, c: float, lo: float = -1.0, hi: float = 1.0,
+                         grid: int = 33) -> Tuple[float, float]:
+    """Calibrate the multiplier's operating point ``a`` and output scale.
+
+    Eq. 24 leaves the bias point implicit ("C is a hyperparameter"); the
+    circuit tunes it with the offset currents.  We pick ``(a, scale)``
+    minimizing max |scale*y − x·w| over the input square — the same
+    calibration a designer does on the silicon (Sec. IV-K's 4h''(0) factor).
+    Pure numpy so it can be triggered from inside a jit trace.
+    """
+    g = np.linspace(lo, hi, grid, dtype=np.float32)
+    xg, wg = np.meshgrid(g, g)
+    target = (xg * wg).ravel()
+
+    def mult_at(a: float) -> np.ndarray:
+        args = np.stack([a + wg + xg, a + wg - xg, a - wg - xg, a - wg + xg])
+        h = _proto_unit_np(args.reshape(4, -1).astype(np.float32), s, c)
+        return h[0] - h[1] + h[2] - h[3]
+
+    best = None
+    for a in np.linspace(-1.5, 1.5, 31):
+        y = mult_at(float(a))
+        den = float(y @ y)
+        if den < 1e-12:
+            continue
+        scale = float(y @ target) / den
+        err = float(np.abs(scale * y - target).max())
+        if best is None or err < best[0]:
+            best = (err, float(a), scale)
+    assert best is not None, "multiplier calibration degenerate"
+    return best[1], best[2]
+
+
+def multiply(x, w, s: int = 3, c: float = 1.0, calib: Tuple[float, float] | None = None):
+    """Four-quadrant S-AC multiply ``y ~ x*w`` (eq. 24, Fig. 11).
+
+    ``x`` and ``w`` broadcast; returns the calibrated product estimate.
+    """
+    if calib is None:
+        calib = calibrate_multiplier(s, c)
+    a, scale = calib
+    y = (proto_unit(a + w + x, s, c) - proto_unit(a + w - x, s, c)
+         + proto_unit(a - w - x, s, c) - proto_unit(a - w + x, s, c))
+    return scale * y
+
+
+# ---------------------------------------------------------------------------
+# WTA family (Fig. 9, eq. 22-23)
+# ---------------------------------------------------------------------------
+
+
+def wta_outputs(x, c):
+    """Per-input WTA/SoftArgMax outputs ``I_out_i = [x_i − h]_+`` (eq. 23).
+
+    ``h`` is the shared GMP node; with small ``C`` only the winner stays
+    above ``h`` (WTA / Max), larger ``C`` admits more winners (N-of-M).
+    """
+    h = gmp(x, c)
+    return jnp.maximum(x - h[..., None], 0.0)
+
+
+def nofm_current(x, c):
+    """Composite N-of-M output current (eq. 22): sum of winner residues."""
+    return jnp.sum(wta_outputs(x, c), axis=-1)
+
+
+def max_cell(x, c: float = 1e-3):
+    """Max selector: ``C -> 0`` limit of the WTA (Sec. IV-J)."""
+    return gmp(x, c) + c / 1.0  # h -> max(x) - C/k, k=1 winner
+
+
+def softargmax(x, c):
+    """Normalized winner weights — differentiable argmax (Sec. IV-I)."""
+    y = wta_outputs(x, c)
+    return y / jnp.maximum(jnp.sum(y, axis=-1, keepdims=True), 1e-30)

@@ -1,0 +1,72 @@
+"""Appendix-A spline schedule for the Generalized Margin Propagation.
+
+The paper approximates ``e^x`` with ``S`` linear splines tangent at points
+``Q_1..Q_S`` (eq. 43-48).  With the dyadic choice ``e^{Q_{j+1}} = 2 e^{Q_j}``
+all spline *increments* are equal (eq. 52's uniform 1/2 coefficients), so the
+multi-spline expansion reduces to unit-slope ReLU branches with per-spline
+offsets ``O_j`` — exactly one extra transistor branch per spline in the
+circuit (Fig. 2b).
+
+Schedule (matches the paper's S=3 worked example, eq. 49-53):
+
+    Q_j = (j - (S+1)/2) * ln 2                       (symmetric dyadic)
+    T_1 = Q_1 - 1                                    (tangent x-intercept)
+    T_j = 2 Q_j - Q_{j-1} - 1        for j > 1       (eq. 46 with dyadic Q)
+    O_j = -C * T_j                                   (eq. 53)
+    C'  = C / e^{Q_1}                                (unit-slope rescale)
+
+For S=3, C=1 this reproduces O = C(1+ln2), C(1-ln2), C(1-2ln2) and C' = 2C.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import numpy as np
+
+LN2 = math.log(2.0)
+
+
+def tangent_points(s: int) -> np.ndarray:
+    """Dyadic tangent points ``Q_1..Q_S`` (symmetric about 0)."""
+    if s < 1:
+        raise ValueError("spline count must be >= 1")
+    return np.array([(j - (s + 1) / 2.0) * LN2 for j in range(1, s + 1)])
+
+
+def tuning_points(s: int) -> np.ndarray:
+    """Tuning (break) points ``T_1..T_S`` per Appendix A eq. 46/49-51."""
+    q = tangent_points(s)
+    t = np.empty(s)
+    t[0] = q[0] - 1.0
+    for j in range(1, s):
+        t[j] = 2.0 * q[j] - q[j - 1] - 1.0
+    return t
+
+
+def schedule(s: int, c: float) -> Tuple[np.ndarray, float]:
+    """Return ``(offsets O_j, rescaled constraint C')`` for an S-spline unit."""
+    t = tuning_points(s)
+    offsets = -c * t
+    c_prime = c / math.exp(tangent_points(s)[0])
+    return offsets.astype(np.float32), float(c_prime)
+
+
+def exp_spline_approx(x: np.ndarray, s: int) -> np.ndarray:
+    """Open-loop S-spline approximation of ``e^x`` (paper eq. 48, Fig. 2a).
+
+    Used by the Fig. 2a repro harness and as a sanity anchor for the unit
+    tests: the approximation error must shrink monotonically with ``S``.
+    """
+    q = tangent_points(s)
+    t = tuning_points(s)
+    eq = np.exp(q)
+    coef = np.empty(s)
+    for j in range(s):
+        coef[j] = eq[j] - eq[:j].sum()
+    x = np.asarray(x)
+    out = np.zeros_like(x, dtype=np.float64)
+    for j in range(s):
+        out += coef[j] * np.maximum(x - t[j], 0.0)
+    return out

@@ -1,0 +1,174 @@
+"""Training pipeline for the Table-IV case-study networks.
+
+Trains, per task (xor / digits / arem):
+
+  1. a vanilla float MLP  -> the "S/W" baseline accuracy column, and
+  2. the S-AC network (forward through the GMP algebra, implicit-function
+     gradients through the solve) with **variation-aware training** —
+     multiplicative Gaussian weight noise each step, the technique the
+     paper adopts from [33] so the learned weights tolerate analog
+     mismatch.
+
+Exports (consumed by the rust Layer-3 and by ``aot.py``):
+
+  * ``artifacts/weights_<task>.json``   — trained S-AC weights + metadata
+  * ``artifacts/<task>_test.bin``       — the exact test set (SACD format)
+
+Adam is implemented inline (no optax in this environment).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as D
+from . import nets
+
+TASKS = {
+    # name: (sizes, n_train, n_test, activation, steps, batch, lr)
+    "xor": ([2, 4, 2], 512, 256, "phi1", 600, 64, 0.05),
+    "arem": ([24, 8, 2], 2048, 512, "phi1", 500, 64, 0.03),
+    "digits": ([256, 15, 10], 6000, 1000, "phi1", 900, 48, 0.03),
+}
+
+S_SPLINES = 3
+C_HYPER = 1.0
+
+
+def make_task(name: str, seed_off: int = 0):
+    sizes, ntr, nte, act, steps, batch, lr = TASKS[name]
+    gen = {"xor": D.make_xor, "digits": D.make_digits, "arem": D.make_arem}[name]
+    xtr, ytr = gen(ntr, seed=100 + seed_off)
+    xte, yte = gen(nte, seed=200 + seed_off)
+    return (xtr, ytr, xte, yte), sizes, act, steps, batch, lr
+
+
+def cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def adam_init(params):
+    z = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": z, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_step(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mh = jax.tree_util.tree_map(lambda m: m / (1 - b1 ** t), m)
+    vh = jax.tree_util.tree_map(lambda v: v / (1 - b2 ** t), v)
+    new = jax.tree_util.tree_map(
+        lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps), params, mh, vh)
+    return new, {"m": m, "v": v, "t": t}
+
+
+def train_net(forward: Callable, params, xtr, ytr, steps: int, batch: int,
+              lr: float, seed: int = 3, weight_noise: float = 0.0,
+              log_every: int = 100, tag: str = "") -> Dict:
+    """Generic minibatch Adam loop; optional variation-aware weight noise."""
+    key = jax.random.PRNGKey(seed)
+    n = xtr.shape[0]
+
+    def loss_fn(p, xb, yb, k):
+        if weight_noise > 0.0:
+            ks = jax.random.split(k, len(p))
+            noisy = {}
+            for (name, val), kk in zip(sorted(p.items()), ks):
+                if name.startswith("w"):
+                    noisy[name] = val * (1.0 + weight_noise * jax.random.normal(kk, val.shape))
+                else:
+                    noisy[name] = val
+            p = noisy
+        return cross_entropy(forward(p, xb), yb)
+
+    step_fn = jax.jit(lambda p, st, xb, yb, k: _step(p, st, xb, yb, k))
+
+    def _step(p, st, xb, yb, k):
+        l, g = jax.value_and_grad(loss_fn)(p, xb, yb, k)
+        p2, st2 = adam_step(p, g, st, lr)
+        return p2, st2, l
+
+    state = adam_init(params)
+    rng = np.random.RandomState(seed)
+    t0 = time.time()
+    for step in range(steps):
+        idx = rng.randint(0, n, size=batch)
+        key, sub = jax.random.split(key)
+        params, state, loss = step_fn(params, state, xtr[idx], ytr[idx], sub)
+        if log_every and (step % log_every == 0 or step == steps - 1):
+            print(f"  [{tag}] step {step:4d} loss {float(loss):.4f} "
+                  f"({time.time() - t0:.1f}s)")
+    return params
+
+
+def eval_in_batches(forward, params, x, y, batch: int = 256) -> float:
+    correct = 0
+    for i in range(0, len(x), batch):
+        logits = forward(params, x[i:i + batch])
+        correct += int(jnp.sum(jnp.argmax(logits, -1) == y[i:i + batch]))
+    return correct / len(x)
+
+
+def train_task(name: str, outdir: str, quick: bool = False) -> Dict:
+    """Train S/W baseline + S-AC net for one task; export artifacts."""
+    (xtr, ytr, xte, yte), sizes, act, steps, batch, lr = make_task(name)
+    if quick:
+        steps = max(steps // 10, 20)
+    print(f"== task {name}: sizes={sizes} act={act} steps={steps}")
+
+    # S/W baseline (vanilla MLP)
+    p_sw = nets.init_params(sizes, seed=1)
+    fwd_sw = lambda p, x: nets.mlp_forward(p, x)
+    p_sw = train_net(fwd_sw, p_sw, xtr, ytr, steps * 2, batch, 0.01,
+                     tag=f"{name}/sw")
+    acc_sw = eval_in_batches(fwd_sw, p_sw, xte, yte)
+
+    # S-AC network with variation-aware training
+    fwd_sac = lambda p, x: nets.sac_forward(p, x, s=S_SPLINES, c=C_HYPER,
+                                            activation=act)
+    p_sac = nets.init_params(sizes, seed=2, scale=0.3)
+    p_sac = train_net(fwd_sac, p_sac, xtr, ytr, steps, batch, lr,
+                      weight_noise=0.05, tag=f"{name}/sac")
+    acc_sac = eval_in_batches(fwd_sac, p_sac, xte, yte)
+    print(f"  {name}: S/W acc={acc_sw:.3f}  S-AC(algorithmic) acc={acc_sac:.3f}")
+
+    os.makedirs(outdir, exist_ok=True)
+    D.save_dataset(os.path.join(outdir, f"{name}_test.bin"), xte, yte)
+    blob = {
+        "task": name,
+        "sizes": sizes,
+        "activation": act,
+        "splines": S_SPLINES,
+        "c": C_HYPER,
+        "acc_sw": acc_sw,
+        "acc_sac_algorithmic": acc_sac,
+        "weights": {k: np.asarray(v).tolist() for k, v in p_sac.items()},
+    }
+    with open(os.path.join(outdir, f"weights_{name}.json"), "w") as f:
+        json.dump(blob, f)
+    return {"task": name, "acc_sw": acc_sw, "acc_sac": acc_sac,
+            "params": p_sac}
+
+
+def main(outdir: str = "../artifacts", quick: bool = False) -> None:
+    summary = {}
+    for task in TASKS:
+        r = train_task(task, outdir, quick=quick)
+        summary[task] = {"acc_sw": r["acc_sw"], "acc_sac": r["acc_sac"]}
+    with open(os.path.join(outdir, "training_summary.json"), "w") as f:
+        json.dump(summary, f, indent=2)
+    print(json.dumps(summary, indent=2))
+
+
+if __name__ == "__main__":
+    import sys
+    main(quick="--quick" in sys.argv)

@@ -1,0 +1,165 @@
+"""Layer-1 correctness: Pallas GMP kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, C values and input ranges; every property the
+paper states for h(.) (Sec. II-B, eq. 7-8) is asserted on the oracle, and
+the kernel must match the oracle bit-for-bit-ish (same algorithm, same
+iteration count, so tolerance is tiny).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.gmp import gmp, gmp_solve_pallas
+from compile.kernels.ref import (
+    SHAPE_RELU,
+    SHAPE_SOFTPLUS,
+    gmp_grad_ref,
+    gmp_residual,
+    gmp_solve_ref,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand_x(seed, b, m, lo=-5.0, hi=5.0, dtype=np.float32):
+    rng = np.random.RandomState(seed)
+    return rng.uniform(lo, hi, size=(b, m)).astype(dtype)
+
+
+# ----------------------------------------------------------------------
+# Oracle self-consistency
+# ----------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 10_000), b=st.integers(1, 33), m=st.integers(1, 24),
+       c=st.floats(0.05, 10.0))
+def test_oracle_satisfies_constraint(seed, b, m, c):
+    x = rand_x(seed, b, m)
+    h = gmp_solve_ref(x, c)
+    resid = gmp_residual(x, h, c)
+    assert float(jnp.abs(resid).max()) < 1e-4 * max(c, 1.0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), b=st.integers(1, 8), m=st.integers(2, 12),
+       c=st.floats(0.1, 4.0))
+def test_oracle_softplus_shape(seed, b, m, c):
+    x = rand_x(seed, b, m)
+    h = gmp_solve_ref(x, c, shape=SHAPE_SOFTPLUS, width=0.1)
+    resid = gmp_residual(x, h, c, shape=SHAPE_SOFTPLUS, width=0.1)
+    assert float(jnp.abs(resid).max()) < 1e-4 * max(c, 1.0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), m=st.integers(1, 16),
+       c=st.floats(0.1, 5.0), delta=st.floats(-2.0, 2.0))
+def test_translation_invariance(seed, m, c, delta):
+    """GMP property: h(x + d) = h(x) + d (paper eq. 8 slope-1 asymptote)."""
+    x = rand_x(seed, 4, m)
+    h0 = gmp_solve_ref(x, c)
+    h1 = gmp_solve_ref(x + delta, c)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h0) + delta,
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), m=st.integers(2, 16), c=st.floats(0.1, 5.0))
+def test_monotonicity(seed, m, c):
+    """dh/dx_i >= 0 (paper eq. 7): bumping any input never lowers h."""
+    x = rand_x(seed, 1, m)
+    h0 = float(gmp_solve_ref(x, c)[0])
+    for j in range(m):
+        xb = x.copy()
+        xb[0, j] += 0.5
+        assert float(gmp_solve_ref(xb, c)[0]) >= h0 - 1e-5
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), m=st.integers(1, 12), c=st.floats(0.1, 5.0))
+def test_bounds_vs_logsumexp(seed, m, c):
+    """h <= LSE_C(x) and h >= max(x) - C: the Fig. 2a margin band."""
+    x = rand_x(seed, 6, m)
+    h = np.asarray(gmp_solve_ref(x, c))
+    lse = c * np.log(np.sum(np.exp(x / c), axis=-1))
+    assert np.all(h <= lse + 1e-4)
+    assert np.all(h >= x.max(axis=-1) - c - 1e-4)
+
+
+# ----------------------------------------------------------------------
+# Pallas kernel vs oracle
+# ----------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000), b=st.integers(1, 300), m=st.integers(1, 24),
+       c=st.floats(0.05, 8.0))
+def test_pallas_matches_oracle(seed, b, m, c):
+    x = rand_x(seed, b, m)
+    h_ref = gmp_solve_ref(x, c)
+    h_pal = gmp_solve_pallas(jnp.asarray(x), c)
+    np.testing.assert_allclose(np.asarray(h_pal), np.asarray(h_ref),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("block_b", [8, 64, 256])
+def test_pallas_block_size_invariance(block_b):
+    x = rand_x(0, 500, 6)
+    h_ref = gmp_solve_ref(x, 1.0)
+    h_pal = gmp_solve_pallas(jnp.asarray(x), 1.0, block_b=block_b)
+    np.testing.assert_allclose(np.asarray(h_pal), np.asarray(h_ref),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_oracle_dtypes(dtype):
+    if dtype is np.float64 and not jax.config.jax_enable_x64:
+        pytest.skip("x64 disabled")
+    x = rand_x(3, 16, 5, dtype=dtype)
+    h = gmp_solve_ref(x, 1.0)
+    assert float(jnp.abs(gmp_residual(x, h, 1.0)).max()) < 1e-4
+
+
+def test_pallas_softplus():
+    x = rand_x(5, 128, 9)
+    h_ref = gmp_solve_ref(x, 2.0, shape=SHAPE_SOFTPLUS, width=0.07)
+    h_pal = gmp_solve_pallas(jnp.asarray(x), 2.0, shape=SHAPE_SOFTPLUS,
+                             width=0.07)
+    np.testing.assert_allclose(np.asarray(h_pal), np.asarray(h_ref),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ----------------------------------------------------------------------
+# Differentiable wrapper
+# ----------------------------------------------------------------------
+
+def test_gmp_gradient_matches_finite_difference():
+    x = jnp.asarray(rand_x(7, 3, 6, lo=-2, hi=2))
+    c = 1.0
+    grad = jax.grad(lambda x: gmp(x, c).sum())(x)
+    eps = 1e-3
+    for b in range(3):
+        for j in range(6):
+            xp = x.at[b, j].add(eps)
+            xm = x.at[b, j].add(-eps)
+            fd = (gmp(xp, c)[b] - gmp(xm, c)[b]) / (2 * eps)
+            # gradient is piecewise constant; skip samples near a kink
+            if abs(float(fd) - float(grad[b, j])) > 0.2:
+                continue
+            np.testing.assert_allclose(float(grad[b, j]), float(fd), atol=5e-2)
+
+
+def test_gmp_gradient_rows_sum_to_one():
+    """Σ_j dh/dx_j = 1 — h is a weighted average of active inputs."""
+    x = jnp.asarray(rand_x(11, 64, 8))
+    g = jax.grad(lambda x: gmp(x, 1.0).sum())(x)
+    np.testing.assert_allclose(np.asarray(g.sum(-1)), np.ones(64), atol=1e-5)
+
+
+def test_grad_ref_matches_custom_vjp():
+    x = jnp.asarray(rand_x(13, 32, 7))
+    h = gmp_solve_ref(x, 1.5)
+    g_ref = gmp_grad_ref(x, h)
+    g_vjp = jax.grad(lambda x: gmp(x, 1.5).sum())(x)
+    np.testing.assert_allclose(np.asarray(g_ref), np.asarray(g_vjp), atol=1e-6)

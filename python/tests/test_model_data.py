@@ -1,0 +1,155 @@
+"""Layer-2 model, dataset and export-format tests."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.sacml import data as D
+from compile.sacml import nets, ops
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ----------------------------------------------------------------------
+# Datasets
+# ----------------------------------------------------------------------
+
+def test_xor_labels_consistent():
+    x, y = D.make_xor(500, seed=1, noise=0.0)
+    expect = ((x[:, 0] > 0) ^ (x[:, 1] > 0)).astype(np.int64)
+    assert (y == expect).mean() > 0.98  # margin band keeps noise-free exact
+
+
+def test_xor_deterministic():
+    a = D.make_xor(64, seed=9)
+    b = D.make_xor(64, seed=9)
+    np.testing.assert_array_equal(a[0], b[0])
+    np.testing.assert_array_equal(a[1], b[1])
+
+
+def test_digits_shapes_and_range():
+    x, y = D.make_digits(50, seed=2)
+    assert x.shape == (50, 256) and y.shape == (50,)
+    assert x.min() >= 0.0 and x.max() <= 1.0
+    assert set(np.unique(y)).issubset(set(range(10)))
+
+
+def test_digits_classes_distinguishable():
+    """Nearest-centroid on clean renders must beat 60% — the task carries
+    class signal well above the 10% floor."""
+    xtr, ytr = D.make_digits(800, seed=3)
+    xte, yte = D.make_digits(200, seed=4)
+    cents = np.stack([xtr[ytr == d].mean(0) for d in range(10)])
+    pred = np.argmin(((xte[:, None, :] - cents[None]) ** 2).sum(-1), axis=1)
+    assert (pred == yte).mean() > 0.6
+
+
+def test_arem_features():
+    x, y = D.make_arem(300, seed=5)
+    assert x.shape == (300, 24)
+    assert 0.1 < y.mean() < 0.8  # both classes present
+    # normalized features
+    assert abs(float(x.mean())) < 0.15
+    assert 0.7 < float(x.std()) < 1.3
+
+
+def test_sacd_roundtrip(tmp_path):
+    x = np.random.RandomState(0).rand(17, 9).astype(np.float32)
+    y = np.random.RandomState(1).randint(0, 10, 17).astype(np.int64)
+    p = str(tmp_path / "t.bin")
+    D.save_dataset(p, x, y)
+    x2, y2 = D.load_dataset(p)
+    np.testing.assert_array_equal(x, x2)
+    np.testing.assert_array_equal(y, y2)
+
+
+def test_sacd_rejects_bad_magic(tmp_path):
+    p = tmp_path / "bad.bin"
+    p.write_bytes(b"NOPE" + b"\x00" * 16)
+    with pytest.raises(ValueError):
+        D.load_dataset(str(p))
+
+
+# ----------------------------------------------------------------------
+# Networks
+# ----------------------------------------------------------------------
+
+def test_init_params_shapes():
+    p = nets.init_params([256, 15, 10], seed=0)
+    assert p["w1"].shape == (256, 15)
+    assert p["b2"].shape == (10,)
+    assert nets.n_layers(p) == 2
+
+
+def test_sac_forward_shapes():
+    p = nets.init_params([8, 5, 3], seed=0, scale=0.3)
+    x = jnp.asarray(np.random.RandomState(0).rand(6, 8).astype(np.float32))
+    logits = nets.sac_forward(p, x, s=3, c=1.0, activation="phi1")
+    assert logits.shape == (6, 3)
+    assert np.all(np.isfinite(np.asarray(logits)))
+
+
+def test_sac_dense_approximates_linear():
+    """Small-signal: the S-AC dense layer tracks w^T x + b (eq. 40)."""
+    rng = np.random.RandomState(0)
+    w = jnp.asarray(rng.uniform(-0.5, 0.5, (4, 3)).astype(np.float32))
+    b = jnp.asarray(rng.uniform(-0.1, 0.1, 3).astype(np.float32))
+    x = jnp.asarray(rng.uniform(-0.5, 0.5, (5, 4)).astype(np.float32))
+    y_sac = nets.sac_dense(x, w, b, s=3, c=1.0)
+    y_lin = x @ w + b
+    assert float(jnp.abs(y_sac - y_lin).max()) < 0.15
+
+
+def test_sac_forward_differentiable():
+    p = nets.init_params([4, 3, 2], seed=1, scale=0.3)
+    x = jnp.asarray(np.random.RandomState(2).rand(8, 4).astype(np.float32))
+    y = jnp.asarray(np.random.RandomState(3).randint(0, 2, 8))
+
+    def loss(p):
+        logits = nets.sac_forward(p, x, activation="phi1")
+        lp = jax.nn.log_softmax(logits, -1)
+        return -jnp.mean(jnp.take_along_axis(lp, y[:, None], 1))
+
+    g = jax.grad(loss)(p)
+    total = sum(float(jnp.abs(v).sum()) for v in g.values())
+    assert np.isfinite(total) and total > 0
+
+
+def test_solver_switch_consistency():
+    """exact vs bisect backends agree on a full forward pass."""
+    p = nets.init_params([6, 4, 3], seed=4, scale=0.3)
+    x = jnp.asarray(np.random.RandomState(5).rand(4, 6).astype(np.float32))
+    ops.set_solver("exact")
+    a = np.asarray(nets.sac_forward(p, x, activation="phi1"))
+    ops.set_solver("bisect")
+    try:
+        b = np.asarray(nets.sac_forward(p, x, activation="phi1"))
+    finally:
+        ops.set_solver("exact")
+    np.testing.assert_allclose(a, b, atol=1e-4)
+
+
+# ----------------------------------------------------------------------
+# Trained-artifact sanity (skipped until `make artifacts` has run)
+# ----------------------------------------------------------------------
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "weights_xor.json")),
+                    reason="artifacts not built")
+def test_trained_xor_accuracy():
+    with open(os.path.join(ART, "weights_xor.json")) as f:
+        blob = json.load(f)
+    assert blob["acc_sac_algorithmic"] > 0.85
+    p = {k: jnp.asarray(np.asarray(v, np.float32))
+         for k, v in blob["weights"].items()}
+    x, y = D.load_dataset(os.path.join(ART, "xor_test.bin"))
+    logits = nets.sac_forward(p, jnp.asarray(x), s=blob["splines"],
+                              c=blob["c"], activation=blob["activation"])
+    acc = float(jnp.mean(jnp.argmax(logits, -1) == jnp.asarray(y)))
+    assert acc == pytest.approx(blob["acc_sac_algorithmic"], abs=0.02)

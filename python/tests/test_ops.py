@@ -1,0 +1,237 @@
+"""Layer-2 correctness: the S-AC cell algebra (Sec. IV) and spline math
+(Appendix A)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import gmp_solve_ref
+from compile.sacml import ops
+from compile.sacml.splines import (exp_spline_approx, schedule,
+                                   tangent_points, tuning_points)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ----------------------------------------------------------------------
+# Appendix A spline schedule
+# ----------------------------------------------------------------------
+
+def test_schedule_matches_paper_s3():
+    """S=3, C=1 must reproduce eq. 49-53: O = C(1±ln2), C(1−2ln2), C'=2C."""
+    ln2 = np.log(2.0)
+    offs, c_prime = schedule(3, 1.0)
+    np.testing.assert_allclose(offs, [1 + ln2, 1 - ln2, 1 - 2 * ln2], rtol=1e-6)
+    assert abs(c_prime - 2.0) < 1e-9
+
+
+def test_tuning_points_paper_values():
+    ln2 = np.log(2.0)
+    t = tuning_points(3)
+    np.testing.assert_allclose(t, [-ln2 - 1, ln2 - 1, 2 * ln2 - 1], rtol=1e-6)
+
+
+def test_tangent_points_symmetric():
+    for s in range(1, 8):
+        q = tangent_points(s)
+        np.testing.assert_allclose(q, -q[::-1], atol=1e-12)
+
+
+def test_exp_approx_error_shrinks_s1_to_s3():
+    """Fig. 2a: the margin narrows going from one spline to three.  (The
+    dyadic schedule extends *range* beyond S=3, so only this comparison is
+    monotone on a fixed window.)"""
+    x = np.linspace(-1.0, 1.0, 201)
+    e1 = np.abs(exp_spline_approx(x, 1) - np.exp(x)).max()
+    e3 = np.abs(exp_spline_approx(x, 3) - np.exp(x)).max()
+    assert e3 < e1
+
+
+def test_gmp_lse_error_shrinks_with_s():
+    """Multi-input GMP h approximates log-sum-exp better with more splines
+    — the operative Fig. 2a claim."""
+    pairs = np.array([[0.3, -0.4], [1.0, 0.2], [-0.8, -0.1], [0.5, 0.45]],
+                     np.float32)
+    def max_err(s):
+        offs, cp = schedule(s, 1.0)
+        rows = np.concatenate([pairs[:, :1] + offs, pairs[:, 1:] + offs],
+                              axis=1)
+        h = np.asarray(ops.gmp_exact(rows.astype(np.float32), cp))
+        lse = np.log(np.exp(pairs[:, 0]) + np.exp(pairs[:, 1]))
+        return np.abs(h - lse).max()
+    assert max_err(3) < max_err(1)
+
+
+def test_exp_approx_is_tangent():
+    """The first two splines are exactly tangent to e^x at their Q points;
+    later splines accumulate the PWL underestimate of the convex curve
+    (relative error grows towards the top of the range)."""
+    for s in (2, 3, 5):
+        q = tangent_points(s)
+        approx = exp_spline_approx(q, s)
+        rel = np.abs(approx - np.exp(q)) / np.exp(q)
+        assert rel[0] < 1e-12 and rel[1] < 1e-12
+        assert np.all(rel < 0.5)
+        # PWL of a convex function underestimates
+        x = np.linspace(q[0], q[-1], 50)
+        assert np.all(exp_spline_approx(x, s) <= np.exp(x) + 1e-9)
+
+
+# ----------------------------------------------------------------------
+# Exact solver vs bisection
+# ----------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 10_000), b=st.integers(1, 40), m=st.integers(1, 20),
+       c=st.floats(0.05, 8.0))
+def test_exact_matches_bisection(seed, b, m, c):
+    rng = np.random.RandomState(seed)
+    x = rng.uniform(-4, 4, size=(b, m)).astype(np.float32)
+    he = ops.gmp_exact(x, c)
+    hb = gmp_solve_ref(x, c)
+    np.testing.assert_allclose(np.asarray(he), np.asarray(hb),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_exact_gradient_rows_sum_to_one():
+    x = jnp.asarray(np.random.RandomState(0).randn(32, 6).astype(np.float32))
+    g = jax.grad(lambda x: ops.gmp_exact(x, 1.0).sum())(x)
+    np.testing.assert_allclose(np.asarray(g.sum(-1)), np.ones(32), atol=1e-5)
+
+
+# ----------------------------------------------------------------------
+# Cells
+# ----------------------------------------------------------------------
+
+def test_relu_cell_limit():
+    """eq. 19: as C -> 0 the cell is max(0, x)."""
+    z = jnp.linspace(-2, 2, 41)
+    y = ops.relu_cell(z, c=1e-4)
+    np.testing.assert_allclose(np.asarray(y), np.maximum(np.asarray(z), 0),
+                               atol=2e-4)
+
+
+def test_proto_unit_monotone_nonneg():
+    z = jnp.linspace(-5, 3, 200)
+    for s in (1, 2, 3, 4):
+        h = np.asarray(ops.proto_unit(z, s, 1.0))
+        assert np.all(h >= 0)
+        assert np.all(np.diff(h) >= -1e-6)
+
+
+def test_proto_unit_slope_saturates_at_one():
+    """eq. 8: dh/dx -> 1 for large x, -> 0 for very negative x."""
+    z = jnp.linspace(-8, 4, 400)
+    h = np.asarray(ops.proto_unit(z, 3, 1.0))
+    dz = float(z[1] - z[0])
+    slope = np.diff(h) / dz
+    assert slope[-1] == pytest.approx(1.0, abs=1e-3)
+    assert slope[0] == pytest.approx(0.0, abs=1e-3)
+
+
+def test_proto_unit_tracks_exp_in_margin():
+    """Fig. 3: inside the margin the S=3 knee tracks e^z (log-domain LSE)."""
+    z = np.linspace(-1.5, 0.0, 30).astype(np.float32)
+    h = np.asarray(ops.proto_unit(jnp.asarray(z), 3, 1.0))
+    lse = np.log1p(np.exp(z))  # 2-input LSE with ground branch, C=1
+    # correlation of shape, not absolute match
+    cc = np.corrcoef(h, lse)[0, 1]
+    assert cc > 0.99
+
+
+def test_phi1_antisymmetric_and_saturating():
+    """φ1 (eq. 20): odd function, saturates at ±K (tanh-equivalent)."""
+    k = 1.0
+    z = jnp.linspace(-4, 4, 81)
+    y = np.asarray(ops.phi1_cell(z, k=k))
+    np.testing.assert_allclose(y, -y[::-1], atol=1e-5)
+    assert y[-1] == pytest.approx(k, abs=1e-3)
+    assert y[0] == pytest.approx(-k, abs=1e-3)
+    assert np.all(np.diff(y) >= -1e-6)
+
+
+def test_phi2_is_shifted_phi1():
+    z = jnp.linspace(-3, 3, 31)
+    np.testing.assert_allclose(
+        np.asarray(ops.phi2_cell(z, k=1.0)),
+        np.asarray(ops.phi1_cell(z, k=1.0)) + 1.0, atol=1e-6)
+
+
+def test_cosh_sinh_symmetry():
+    z = jnp.linspace(-2, 2, 41)
+    ch = np.asarray(ops.cosh_cell(z))
+    sh = np.asarray(ops.sinh_cell(z))
+    np.testing.assert_allclose(ch, ch[::-1], atol=1e-5)   # even
+    np.testing.assert_allclose(sh, -sh[::-1], atol=1e-5)  # odd
+    # cosh^2 - sinh^2 structure: ch >= |sh|
+    assert np.all(ch >= np.abs(sh) - 1e-5)
+
+
+@pytest.mark.parametrize("s,max_err", [(1, 0.20), (3, 0.08)])
+def test_multiplier_error_budget(s, max_err):
+    """Table II trend: S=3 multiplier much tighter than S=1."""
+    g = jnp.linspace(-1, 1, 21)
+    x, w = jnp.meshgrid(g, g)
+    y = ops.multiply(x, w, s=s, c=1.0)
+    err = float(jnp.abs(y - x * w).max())
+    assert err < max_err
+
+
+def test_multiplier_four_quadrants():
+    for xv, wv in [(0.5, 0.5), (-0.5, 0.5), (0.5, -0.5), (-0.5, -0.5)]:
+        y = float(ops.multiply(jnp.asarray(xv), jnp.asarray(wv), 3, 1.0))
+        assert y == pytest.approx(xv * wv, abs=0.06)
+
+
+def test_multiplier_zero_lines():
+    z = jnp.linspace(-1, 1, 11)
+    y1 = np.asarray(ops.multiply(z, jnp.zeros_like(z), 3, 1.0))
+    y2 = np.asarray(ops.multiply(jnp.zeros_like(z), z, 3, 1.0))
+    assert np.abs(y1).max() < 0.05
+    assert np.abs(y2).max() < 0.05
+
+
+# ----------------------------------------------------------------------
+# WTA family
+# ----------------------------------------------------------------------
+
+def test_wta_single_winner_small_c():
+    x = jnp.asarray([1.0, 2.0, 3.0, 4.0, 5.0])
+    y = np.asarray(ops.wta_outputs(x, 0.5))
+    assert np.argmax(y) == 4
+    assert np.count_nonzero(y) == 1
+
+
+def test_nofm_winner_count_grows_with_c():
+    """Fig. 10e-h: larger C admits more winners (eq. 22)."""
+    x = jnp.asarray([1.0, 2.0, 3.0, 4.0, 5.0])
+    counts = []
+    for c in (0.5, 1.5, 3.5, 7.0, 12.0):
+        counts.append(int(np.count_nonzero(np.asarray(ops.wta_outputs(x, c)))))
+    assert counts == sorted(counts)
+    assert counts[0] == 1 and counts[-1] >= 4
+
+
+def test_nofm_current_formula():
+    """eq. 22: I_out = (sum_top_M x_i - C)/M — matches wta residue mean."""
+    x = np.array([1.0, 2.0, 3.0, 4.0, 5.0], np.float32)
+    for c in (0.5, 2.0, 6.0):
+        h = float(ops.gmp_exact(jnp.asarray(x)[None, :], c)[0])
+        winners = x[x > h]
+        m = len(winners)
+        np.testing.assert_allclose(h, (winners.sum() - c) / m, rtol=1e-5)
+
+
+def test_softargmax_normalized():
+    x = jnp.asarray(np.random.RandomState(0).randn(10, 5).astype(np.float32))
+    p = np.asarray(ops.softargmax(x, 1.0))
+    np.testing.assert_allclose(p.sum(-1), np.ones(10), atol=1e-5)
+    assert np.all(p >= 0)
+
+
+def test_max_cell_approaches_max():
+    x = jnp.asarray([[0.3, -1.0, 2.2, 0.9]])
+    y = float(ops.max_cell(x, c=1e-4)[0])
+    assert y == pytest.approx(2.2, abs=1e-3)

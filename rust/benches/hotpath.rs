@@ -1,0 +1,85 @@
+//! Hot-path micro-benchmarks (§Perf): the GMP solvers, the device-exact
+//! unit solve, cell evaluation and PJRT execution.
+//!
+//! `cargo bench` (harness=false; uses the in-repo benchkit).
+
+use sac::cells::activations::CellKind;
+use sac::cells::{Algorithmic, CircuitCorner};
+use sac::pdk::{regime::Regime, CMOS180};
+use sac::sac::gmp::{solve_bisect, solve_exact, Shape, GMP_ITERS};
+use sac::util::benchkit::{black_box, Bench};
+use sac::util::rng::Rng;
+
+fn main() {
+    let b = Bench::default();
+    let mut reports = Vec::new();
+
+    // --- hot spot 1: the algorithmic GMP solve -----------------------
+    let mut rng = Rng::new(1);
+    let xs6: Vec<f64> = (0..6).map(|_| rng.uniform_in(-2.0, 2.0)).collect();
+    let xs32: Vec<f64> = (0..32).map(|_| rng.uniform_in(-2.0, 2.0)).collect();
+    reports.push(b.run("gmp/solve_exact M=6", || black_box(solve_exact(&xs6, 1.0))));
+    reports.push(b.run("gmp/solve_exact M=32", || black_box(solve_exact(&xs32, 1.0))));
+    reports.push(b.run("gmp/solve_bisect(relu) M=6", || {
+        black_box(solve_bisect(&xs6, 1.0, Shape::Relu, GMP_ITERS))
+    }));
+    reports.push(b.run("gmp/solve_bisect(softplus) M=6", || {
+        black_box(solve_bisect(&xs6, 1.0, Shape::Softplus { width: 0.05 }, GMP_ITERS))
+    }));
+    reports.push(b.run("gmp/solve_soft_newton M=6", || {
+        black_box(sac::sac::gmp::solve_soft_newton(&xs6, 1.0, 0.05))
+    }));
+
+    // --- hot spot 2: device-exact unit solve ----------------------------
+    let cc = CircuitCorner::new(&CMOS180, Regime::WeakInversion);
+    reports.push(b.run("circuit/proto_unit S=3 (nested solve)", || {
+        black_box(sac::cells::proto_unit(&cc, 0.3, 3, 1.0))
+    }));
+
+    // --- hot spot 3: cell + multiplier eval ------------------------------
+    let alg = Algorithmic::relu();
+    reports.push(b.run("cell/phi1(algorithmic)", || {
+        black_box(CellKind::Phi1.eval(&alg, 0.4))
+    }));
+    let mult = sac::cells::multiplier::Multiplier::calibrate(&alg, 3, 1.0);
+    reports.push(b.run("cell/multiply(algorithmic)", || {
+        black_box(mult.mul(&alg, 0.37, -0.6))
+    }));
+
+    // --- hot spot 4: one full NN forward (table tier) --------------------
+    let artifacts = sac::runtime::default_artifacts_dir();
+    if let Ok(net) = sac::nn::load_net(&artifacts, "xor") {
+        let tm = sac::sac::TableModel::calibrate(&CMOS180, Regime::WeakInversion, 27.0);
+        let m = sac::cells::multiplier::Multiplier::calibrate(&tm, net.splines, net.c);
+        reports.push(b.run("nn/forward xor (table tier)", || {
+            black_box(sac::nn::forward(&net, &tm, &m, &[0.4, -0.7]))
+        }));
+    }
+
+    // --- hot spot 5: PJRT batched execution ------------------------------
+    if let Ok(rt) = sac::runtime::Runtime::new(&artifacts) {
+        if let Ok(exe) = rt.load("gmp_kernel") {
+            let n: usize = exe.spec.params[0].shape.iter().product();
+            let buf: Vec<f32> = (0..n).map(|i| (i % 17) as f32 * 0.1 - 0.8).collect();
+            reports.push(b.run("pjrt/gmp_kernel 4096x8", || {
+                black_box(exe.run_f32(&[&buf]).unwrap())
+            }));
+        }
+        if let Ok(mut server) = sac::coordinator::InferenceServer::new(&rt, "digits") {
+            let ds =
+                sac::data::Dataset::load_sacd(&artifacts.join("digits_test.bin")).unwrap();
+            let quick = Bench::quick();
+            reports.push(quick.run("pjrt/digits_mlp batch=64", || {
+                for i in 0..64 {
+                    server.submit(ds.row(i).to_vec());
+                }
+                black_box(server.drain().unwrap())
+            }));
+        }
+    }
+
+    println!("\n=== hotpath benchmarks ===");
+    for r in &reports {
+        println!("{}", r.report());
+    }
+}

@@ -1,0 +1,34 @@
+//! Bench-as-harness: regenerate every paper table and time each
+//! experiment end-to-end (`cargo bench --bench tables`).  The repro CLI
+//! (`sac repro all`) produces the same artifacts; this target exists so
+//! `cargo bench` exercises the whole evaluation pipeline and reports
+//! wall-clock per experiment — one bench per paper table/figure.
+
+use std::time::Instant;
+
+use sac::repro::{self, ReproOpts};
+
+fn main() {
+    let opts = ReproOpts {
+        out: std::path::PathBuf::from("results"),
+        // keep the NN-scale experiments bounded for bench cadence; the
+        // record run in EXPERIMENTS.md uses the full 1000 images
+        limit: 200,
+        threads: sac::util::pool::default_threads(),
+        mc_trials: 20,
+    };
+    println!("=== paper-table/figure regeneration benchmarks ===");
+    let mut total = 0.0;
+    for id in repro::ALL_IDS {
+        let t0 = Instant::now();
+        match repro::run(id, &opts) {
+            Ok(_) => {
+                let dt = t0.elapsed().as_secs_f64();
+                total += dt;
+                println!("{id:<10} {dt:>8.2} s   ok");
+            }
+            Err(e) => println!("{id:<10} FAILED: {e:#}"),
+        }
+    }
+    println!("total: {total:.1} s (CSVs in results/)");
+}

@@ -1,0 +1,67 @@
+//! DC transfer-curve sweeps of standard cells across operating corners
+//! (Figs. 3, 7, 12) plus normalized cross-corner deviation metrics
+//! (Table III's Err column).
+
+use crate::cells::activations::CellKind;
+use crate::cells::HProvider;
+use crate::util::stats;
+
+/// Uniform sweep grid.
+pub fn grid(lo: f64, hi: f64, n: usize) -> Vec<f64> {
+    (0..n)
+        .map(|i| lo + (hi - lo) * i as f64 / (n - 1) as f64)
+        .collect()
+}
+
+/// Sweep a cell's transfer curve on a backend.
+pub fn sweep_cell(kind: CellKind, p: &dyn HProvider, zs: &[f64]) -> Vec<f64> {
+    zs.iter().map(|&z| kind.eval(p, z)).collect()
+}
+
+/// Normalize a curve by its max |value| (the paper plots h/Imax).
+pub fn normalize(ys: &[f64]) -> Vec<f64> {
+    let m = ys.iter().map(|v| v.abs()).fold(0.0, f64::max).max(1e-30);
+    ys.iter().map(|v| v / m).collect()
+}
+
+/// Max (and mean) absolute deviation between two normalized curves — the
+/// paper's "Err = MAX |Mean Absolute Deviation|" between 180nm and 7nm
+/// (Table III footnote).
+pub fn curve_deviation(a: &[f64], b: &[f64]) -> (f64, f64) {
+    let na = normalize(a);
+    let nb = normalize(b);
+    (
+        stats::max_abs_dev(&na, &nb),
+        stats::mean_abs_dev(&na, &nb),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cells::Algorithmic;
+
+    #[test]
+    fn grid_endpoints() {
+        let g = grid(-1.0, 1.0, 5);
+        assert_eq!(g.len(), 5);
+        assert!((g[0] + 1.0).abs() < 1e-12);
+        assert!((g[4] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn normalize_peak_is_one() {
+        let n = normalize(&[0.5, -2.0, 1.0]);
+        assert!((n[1] + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn identical_curves_zero_deviation() {
+        let p = Algorithmic::relu();
+        let zs = grid(-2.0, 2.0, 21);
+        let ys = sweep_cell(CellKind::Phi1, &p, &zs);
+        let (mx, mean) = curve_deviation(&ys, &ys);
+        assert_eq!(mx, 0.0);
+        assert_eq!(mean, 0.0);
+    }
+}

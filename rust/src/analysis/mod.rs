@@ -1,0 +1,9 @@
+//! Analysis engines regenerating the paper's evaluation data:
+//! DC sweeps (Figs. 3/7/12), Monte-Carlo mismatch (Figs. 4b/8/13b-c),
+//! power/energy/area (Tables I/III/V, Fig. 13a), multiplier error
+//! (Table II) and SNR (Sec. IV-L3).
+
+pub mod dc;
+pub mod montecarlo;
+pub mod power;
+pub mod snr;

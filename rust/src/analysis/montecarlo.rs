@@ -1,0 +1,188 @@
+//! Monte-Carlo mismatch engine (Figs. 4b, 8, 13b/c).
+//!
+//! Each trial samples Pelgrom mismatch onto every device of a circuit-tier
+//! cell, re-sweeps the transfer curve, and reports the deviation from the
+//! nominal curve.  Trials run on the scoped threadpool, one deterministic
+//! RNG stream per trial.
+
+use crate::cells::activations::CellKind;
+use crate::cells::{CircuitCorner, HProvider};
+use crate::device::MismatchModel;
+use crate::pdk::{ProcessNode, regime::Regime};
+use crate::util::{pool, rng::Rng, stats};
+
+/// Monte-Carlo configuration.
+#[derive(Clone, Debug)]
+pub struct McConfig {
+    pub trials: usize,
+    pub seed: u64,
+    pub threads: usize,
+    /// sweep grid for the transfer curve
+    pub zs: Vec<f64>,
+}
+
+impl Default for McConfig {
+    fn default() -> Self {
+        McConfig {
+            trials: 60,
+            seed: 1234,
+            threads: pool::default_threads(),
+            zs: super::dc::grid(-2.0, 2.0, 25),
+        }
+    }
+}
+
+/// Result of one cell's MC campaign.
+#[derive(Clone, Debug)]
+pub struct McResult {
+    pub cell: CellKind,
+    pub node_name: String,
+    /// nominal normalized curve
+    pub nominal: Vec<f64>,
+    /// per-trial normalized curves
+    pub curves: Vec<Vec<f64>>,
+    /// max % deviation from nominal across all trials/points (Fig. 8's
+    /// "Maximum % Deviation")
+    pub max_pct_dev: f64,
+    /// per-point std of the output (for Fig. 13b/c style plots)
+    pub point_std: Vec<f64>,
+}
+
+/// Run mismatch MC on a cell at a circuit corner.
+pub fn run_cell_mc(
+    kind: CellKind,
+    node: &'static ProcessNode,
+    regime: Regime,
+    cfg: &McConfig,
+) -> McResult {
+    let nominal_corner = CircuitCorner::new(node, regime);
+    let nominal_raw = super::dc::sweep_cell(kind, &nominal_corner, &cfg.zs);
+    let nominal = super::dc::normalize(&nominal_raw);
+    let full = nominal
+        .iter()
+        .map(|v| v.abs())
+        .fold(0.0, f64::max)
+        .max(1e-30);
+
+    let mm = MismatchModel::new(node);
+    let base_rng = Rng::new(cfg.seed);
+    // analog-sized matched pairs (what a designer lays out for mirrors)
+    let sigma_vt = mm.sigma_vt(node.analog_w_um, node.analog_l_um);
+    let sigma_beta = mm.sigma_beta(node.analog_w_um, node.analog_l_um);
+
+    let curves: Vec<Vec<f64>> = pool::parallel_map(cfg.trials, cfg.threads, |t| {
+        let mut rng = base_rng.fork(t as u64 + 1);
+        // sample per-branch mismatch (enough entries for the widest unit)
+        let dvt: Vec<f64> = (0..16).map(|_| rng.gauss_ms(0.0, sigma_vt)).collect();
+        let dbeta: Vec<f64> = (0..16).map(|_| rng.gauss_ms(0.0, sigma_beta)).collect();
+        let mut corner = CircuitCorner::new(node, regime);
+        corner.dvt = dvt;
+        corner.dbeta = dbeta;
+        let raw = super::dc::sweep_cell(kind, &corner, &cfg.zs);
+        // normalize by the *nominal* full-scale so deviation is physical
+        raw.iter().map(|v| v / full_scale(&nominal_raw)).collect()
+    });
+
+    let nominal_scaled: Vec<f64> = nominal_raw
+        .iter()
+        .map(|v| v / full_scale(&nominal_raw))
+        .collect();
+
+    let mut max_pct = 0.0f64;
+    let npts = cfg.zs.len();
+    let mut point_std = vec![0.0; npts];
+    for i in 0..npts {
+        let vals: Vec<f64> = curves.iter().map(|c| c[i]).collect();
+        let s = stats::summarize(&vals);
+        point_std[i] = s.std;
+        for v in &vals {
+            max_pct = max_pct.max((v - nominal_scaled[i]).abs() * 100.0 / full);
+        }
+    }
+
+    McResult {
+        cell: kind,
+        node_name: node.name.to_string(),
+        nominal: nominal_scaled,
+        curves,
+        max_pct_dev: max_pct,
+        point_std,
+    }
+}
+
+fn full_scale(ys: &[f64]) -> f64 {
+    ys.iter().map(|v| v.abs()).fold(0.0, f64::max).max(1e-30)
+}
+
+/// σ(I_out) as a function of device sizing (Fig. 13b/c): sweep the device
+/// area (fins at 7nm / W·L at 180nm) and the overdrive, return the output
+/// std in % of nominal.
+pub fn sizing_sensitivity(
+    node: &'static ProcessNode,
+    sizes: &[f64],
+    trials: usize,
+    seed: u64,
+) -> Vec<f64> {
+    let mm = MismatchModel::new(node);
+    let base = Rng::new(seed);
+    sizes
+        .iter()
+        .map(|&size_mult| {
+            let w = node.wmin_um * size_mult;
+            let l = node.lmin_um.max(node.wmin_um);
+            let sigma = mm.sigma_vt(w, l);
+            // propagate through the WI exponential: σI/I ≈ σVt/(n·UT)
+            // measured by sampling rather than the linearized formula
+            let mut rng = base.fork(size_mult.to_bits());
+            let ut = ProcessNode::ut(27.0);
+            let vals: Vec<f64> = (0..trials)
+                .map(|_| {
+                    let dvt = rng.gauss_ms(0.0, sigma);
+                    ((-dvt / (node.n_slope * ut)).exp() - 1.0) * 100.0
+                })
+                .collect();
+            stats::summarize(&vals).std
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pdk::CMOS180;
+
+    fn quick_cfg() -> McConfig {
+        McConfig {
+            trials: 8,
+            seed: 7,
+            threads: 2,
+            zs: super::super::dc::grid(-1.5, 1.5, 7),
+        }
+    }
+
+    #[test]
+    fn mc_deviation_small_but_nonzero() {
+        let r = run_cell_mc(
+            CellKind::Relu,
+            &CMOS180,
+            Regime::WeakInversion,
+            &quick_cfg(),
+        );
+        assert!(r.max_pct_dev > 0.0, "mismatch must move the curve");
+        assert!(r.max_pct_dev < 30.0, "deviation implausibly large: {}", r.max_pct_dev);
+        assert_eq!(r.curves.len(), 8);
+    }
+
+    #[test]
+    fn mc_deterministic() {
+        let a = run_cell_mc(CellKind::Relu, &CMOS180, Regime::WeakInversion, &quick_cfg());
+        let b = run_cell_mc(CellKind::Relu, &CMOS180, Regime::WeakInversion, &quick_cfg());
+        assert_eq!(a.max_pct_dev, b.max_pct_dev);
+    }
+
+    #[test]
+    fn sizing_larger_devices_less_spread() {
+        let stds = sizing_sensitivity(&CMOS180, &[1.0, 4.0, 16.0], 400, 3);
+        assert!(stds[0] > stds[1] && stds[1] > stds[2], "{stds:?}");
+    }
+}

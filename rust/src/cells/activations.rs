@@ -1,0 +1,189 @@
+//! Activation standard cells (Fig. 6, eqs. 15-21): cosh, sinh, ReLU,
+//! compressive nonlinearity φ1 (tanh-like), sigmoid φ2, soft-plus.
+//!
+//! Mirrors `python/compile/sacml/ops.py`; the golden-file integration test
+//! checks the two implementations produce the same curves.
+
+use super::{pair_unit, proto_unit, HProvider};
+
+/// cosh (eq. 16): h(z) + h(−z), N-type + flipped response summed by KCL.
+pub fn cosh_cell(p: &dyn HProvider, z: f64, s: usize, c: f64) -> f64 {
+    proto_unit(p, z, s, c) + proto_unit(p, -z, s, c)
+}
+
+/// sinh (eq. 18): h(z) − h(−z) (N-type minus P-type by KCL).
+pub fn sinh_cell(p: &dyn HProvider, z: f64, s: usize, c: f64) -> f64 {
+    proto_unit(p, z, s, c) - proto_unit(p, -z, s, c)
+}
+
+/// ReLU (eq. 19): 2-input unit in the C→0 limit; h = [z − C]_+.
+pub fn relu_cell(p: &dyn HProvider, z: f64, c: f64) -> f64 {
+    p.h(&[z, 0.0], c)
+}
+
+/// Soft-plus (Fig. 6e): the proto-unit at a moderate C — a soft knee.
+pub fn softplus_cell(p: &dyn HProvider, z: f64, s: usize, c: f64) -> f64 {
+    proto_unit(p, z, s, c)
+}
+
+/// Compressive nonlinearity φ1 (eq. 20-21): h(0, z+K) − h(z, K).
+/// Antisymmetric, saturates at ±K — the tanh equivalent.
+pub fn phi1_cell(p: &dyn HProvider, z: f64, k: f64, s: usize, c: f64) -> f64 {
+    pair_unit(p, 0.0, z + k, s, c) - pair_unit(p, z, k, s, c)
+}
+
+/// Sigmoid φ2 (Sec. IV-E): φ1 shifted by the constant current K.
+pub fn phi2_cell(p: &dyn HProvider, z: f64, k: f64, s: usize, c: f64) -> f64 {
+    phi1_cell(p, z, k, s, c) + k
+}
+
+/// Named cell dispatch used by the analysis/repro harness.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CellKind {
+    Cosh,
+    Sinh,
+    Relu,
+    Phi1,
+    Phi2,
+    Softplus,
+}
+
+impl CellKind {
+    pub fn all() -> [CellKind; 6] {
+        [
+            CellKind::Cosh,
+            CellKind::Sinh,
+            CellKind::Relu,
+            CellKind::Phi1,
+            CellKind::Phi2,
+            CellKind::Softplus,
+        ]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CellKind::Cosh => "cosh",
+            CellKind::Sinh => "sinh",
+            CellKind::Relu => "relu",
+            CellKind::Phi1 => "phi1",
+            CellKind::Phi2 => "phi2",
+            CellKind::Softplus => "softplus",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<CellKind> {
+        CellKind::all().into_iter().find(|k| k.name() == name)
+    }
+
+    /// Evaluate the cell transfer at `z` with default parameters (S=3,
+    /// C=1, K=1; ReLU uses C=0.05 per the eq. 19 limit).
+    pub fn eval(&self, p: &dyn HProvider, z: f64) -> f64 {
+        match self {
+            CellKind::Cosh => cosh_cell(p, z, 3, 1.0),
+            CellKind::Sinh => sinh_cell(p, z, 3, 1.0),
+            CellKind::Relu => relu_cell(p, z, 0.05),
+            CellKind::Phi1 => phi1_cell(p, z, 1.0, 3, 0.5),
+            CellKind::Phi2 => phi2_cell(p, z, 1.0, 3, 0.5),
+            CellKind::Softplus => softplus_cell(p, z, 3, 1.0),
+        }
+    }
+
+    /// Number of S-AC units composing the cell (for power/area models,
+    /// Fig. 6 schematics).
+    pub fn unit_count(&self) -> usize {
+        match self {
+            CellKind::Cosh => 2,
+            CellKind::Sinh => 2,
+            CellKind::Relu => 1,
+            CellKind::Phi1 => 2,
+            CellKind::Phi2 => 2,
+            CellKind::Softplus => 1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cells::Algorithmic;
+
+    fn alg() -> Algorithmic {
+        Algorithmic::relu()
+    }
+
+    #[test]
+    fn relu_limit() {
+        let p = alg();
+        for z in [-1.0, -0.3, 0.0, 0.4, 1.2] {
+            let y = relu_cell(&p, z, 1e-4);
+            assert!((y - z.max(0.0)).abs() < 2e-4, "z={z} y={y}");
+        }
+    }
+
+    #[test]
+    fn cosh_even_sinh_odd() {
+        let p = alg();
+        for z in [0.3, 0.8, 1.5] {
+            let cp = cosh_cell(&p, z, 3, 1.0);
+            let cm = cosh_cell(&p, -z, 3, 1.0);
+            assert!((cp - cm).abs() < 1e-12);
+            let sp = sinh_cell(&p, z, 3, 1.0);
+            let sm = sinh_cell(&p, -z, 3, 1.0);
+            assert!((sp + sm).abs() < 1e-12);
+            assert!(cp >= sp.abs() - 1e-12);
+        }
+    }
+
+    #[test]
+    fn phi1_antisymmetric_saturating() {
+        let p = alg();
+        let k = 1.0;
+        for z in [0.2, 0.7, 1.4] {
+            let y = phi1_cell(&p, z, k, 3, 0.5);
+            let ym = phi1_cell(&p, -z, k, 3, 0.5);
+            assert!((y + ym).abs() < 1e-9, "z={z}");
+        }
+        assert!((phi1_cell(&p, 5.0, k, 3, 0.5) - k).abs() < 1e-6);
+        assert!((phi1_cell(&p, -5.0, k, 3, 0.5) + k).abs() < 1e-6);
+    }
+
+    #[test]
+    fn phi2_is_shifted_phi1() {
+        let p = alg();
+        for z in [-1.0, 0.0, 1.0] {
+            let d = phi2_cell(&p, z, 1.0, 3, 0.5) - phi1_cell(&p, z, 1.0, 3, 0.5);
+            assert!((d - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn softplus_between_relu_and_shifted_linear() {
+        let p = alg();
+        for z in [-2.0, -0.5, 0.5, 2.0] {
+            let y = softplus_cell(&p, z, 3, 1.0);
+            assert!(y >= z.max(0.0) - 1e-9, "z={z} y={y}");
+        }
+    }
+
+    #[test]
+    fn all_cells_monotone_where_required() {
+        let p = alg();
+        // relu, phi1, phi2, softplus are monotone; cosh has a single min
+        for kind in [CellKind::Relu, CellKind::Phi1, CellKind::Phi2, CellKind::Softplus] {
+            let mut last = f64::NEG_INFINITY;
+            for k in 0..=40 {
+                let z = -2.0 + 0.1 * k as f64;
+                let y = kind.eval(&p, z);
+                assert!(y >= last - 1e-9, "{} at z={z}", kind.name());
+                last = y;
+            }
+        }
+    }
+
+    #[test]
+    fn name_roundtrip() {
+        for k in CellKind::all() {
+            assert_eq!(CellKind::by_name(k.name()), Some(k));
+        }
+    }
+}

@@ -1,0 +1,238 @@
+//! S-AC standard-cell library (paper Sec. IV, Figs. 6/9/11).
+//!
+//! Every cell is a composition of the one primitive `h(x; C)` — provided by
+//! one of three backends of increasing fidelity:
+//!
+//!  * [`Algorithmic`]  — ReLU-shape GMP (the paper's eq. 6), exact solver;
+//!  * [`TableModel`]   — per-corner calibrated soft shape (SPICE-table tier);
+//!  * [`CircuitCorner`]— the device-exact Fig. 2b circuit solve.
+//!
+//! Cells take the backend as `&dyn HProvider`, so the *same* cell code runs
+//! at all fidelities — which is precisely the paper's synthesizability
+//! claim for analog standard cells.
+
+pub mod activations;
+pub mod multiplier;
+pub mod wta;
+
+use crate::pdk::{Polarity, ProcessNode, regime::Regime};
+use crate::sac::{gmp, splines, SacUnit, Shape, TableModel};
+
+/// Backend interface: the S-AC unit output h (clamped ≥ 0), algorithmic
+/// units in, algorithmic units out.
+pub trait HProvider {
+    fn h(&self, x: &[f64], c: f64) -> f64;
+
+    /// The *internal* common-node value before the output mirror's
+    /// rectification (the WTA family reads branch residues off this node,
+    /// which can sit below zero in algorithmic units).  Defaults to the
+    /// clamped output for backends where the distinction is unobservable.
+    fn h_raw(&self, x: &[f64], c: f64) -> f64 {
+        self.h(x, c)
+    }
+
+    /// Short backend label for reports.
+    fn label(&self) -> String;
+}
+
+/// Pure-algorithm backend (ReLU GMP — the paper's eq. 6 with eq. 3).
+#[derive(Clone, Debug)]
+pub struct Algorithmic {
+    pub shape: Shape,
+}
+
+impl Algorithmic {
+    pub fn relu() -> Self {
+        Algorithmic { shape: Shape::Relu }
+    }
+}
+
+impl HProvider for Algorithmic {
+    fn h(&self, x: &[f64], c: f64) -> f64 {
+        gmp::sac_h(x, c, self.shape)
+    }
+
+    fn h_raw(&self, x: &[f64], c: f64) -> f64 {
+        match self.shape {
+            Shape::Relu => gmp::solve_exact(x, c),
+            _ => gmp::solve_bisect(x, c, self.shape, gmp::GMP_ITERS),
+        }
+    }
+
+    fn label(&self) -> String {
+        format!("algorithmic({:?})", self.shape)
+    }
+}
+
+impl HProvider for TableModel {
+    fn h(&self, x: &[f64], c: f64) -> f64 {
+        TableModel::h(self, x, c)
+    }
+
+    fn label(&self) -> String {
+        format!("table({}/{}/{}C)", self.node.name, self.regime, self.t_c)
+    }
+}
+
+/// Device-exact backend: one operating corner of the Fig. 2b circuit.
+#[derive(Clone, Debug)]
+pub struct CircuitCorner {
+    pub node: &'static ProcessNode,
+    pub regime: Regime,
+    pub t_c: f64,
+    /// supply override (Fig. 4c); None = nominal
+    pub vdd: Option<f64>,
+    /// per-branch threshold mismatch to inject [V] (Monte-Carlo trials);
+    /// cycled over branches if shorter
+    pub dvt: Vec<f64>,
+    pub dbeta: Vec<f64>,
+}
+
+impl CircuitCorner {
+    pub fn new(node: &'static ProcessNode, regime: Regime) -> Self {
+        CircuitCorner {
+            node,
+            regime,
+            t_c: 27.0,
+            vdd: None,
+            dvt: Vec::new(),
+            dbeta: Vec::new(),
+        }
+    }
+
+    pub fn at_temp(mut self, t_c: f64) -> Self {
+        self.t_c = t_c;
+        self
+    }
+
+    pub fn with_supply(mut self, vdd: f64) -> Self {
+        self.vdd = Some(vdd);
+        self
+    }
+
+    fn build_unit(&self, m: usize) -> SacUnit {
+        let mut u = SacUnit::new(self.node, Polarity::N, self.regime, m)
+            .at_temp(self.t_c);
+        if let Some(v) = self.vdd {
+            u = u.with_supply(v);
+        }
+        for (i, d) in u.branches.iter_mut().enumerate() {
+            if !self.dvt.is_empty() {
+                d.dvt = self.dvt[i % self.dvt.len()];
+            }
+            if !self.dbeta.is_empty() {
+                d.dbeta = self.dbeta[i % self.dbeta.len()];
+            }
+        }
+        u
+    }
+}
+
+impl CircuitCorner {
+    /// Input-mirror gain of branch `i`: each input current arrives through
+    /// a diode-connected mirror whose ΔV_T / Δβ mismatch multiplies the
+    /// current by `f_mm(V_bias) / f_nom(V_bias)` — the classic matched-pair
+    /// error, maximal in weak inversion (e^{ΔV_T/nU_T}) and suppressed in
+    /// strong inversion (2ΔV_T/V_ov).  This is where Pelgrom mismatch
+    /// physically enters the S-AC computation (Figs. 4b, 8).
+    fn mirror_gain(&self, i: usize) -> f64 {
+        if self.dvt.is_empty() && self.dbeta.is_empty() {
+            return 1.0;
+        }
+        let mut nom = crate::device::Mosfet::square(self.node, Polarity::N);
+        nom.w_um = self.node.analog_w_um;
+        nom.l_um = self.node.analog_l_um;
+        nom.t_c = self.t_c;
+        let mut mm = nom.clone();
+        if !self.dvt.is_empty() {
+            mm.dvt = self.dvt[i % self.dvt.len()];
+        }
+        if !self.dbeta.is_empty() {
+            mm.dbeta = self.dbeta[i % self.dbeta.len()];
+        }
+        let vg = self.node.bias_for(self.regime, self.t_c);
+        mm.forward(vg, 0.0) / nom.forward(vg, 0.0)
+    }
+}
+
+impl HProvider for CircuitCorner {
+    fn h(&self, x: &[f64], c: f64) -> f64 {
+        let scale = self.node.bias_current(self.regime);
+        let unit = self.build_unit(x.len()).with_bias(c * scale);
+        let xc: Vec<f64> = x
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| v * scale * self.mirror_gain(i))
+            .collect();
+        unit.solve(&xc).h / scale
+    }
+
+    fn label(&self) -> String {
+        format!("circuit({}/{}/{}C)", self.node.name, self.regime, self.t_c)
+    }
+}
+
+/// The proto-shape unit h(z) (Fig. 3): input branch + ground reference,
+/// spline-expanded per Appendix A.
+pub fn proto_unit(p: &dyn HProvider, z: f64, s: usize, c: f64) -> f64 {
+    let (offs, c_prime) = splines::schedule(s, c);
+    let mut x = Vec::with_capacity(2 * s);
+    for &o in &offs {
+        x.push(z + o);
+    }
+    for &o in &offs {
+        x.push(o);
+    }
+    p.h(&x, c_prime)
+}
+
+/// Two-input S-AC unit h(a, b), spline expanded.
+pub fn pair_unit(p: &dyn HProvider, a: f64, b: f64, s: usize, c: f64) -> f64 {
+    let (offs, c_prime) = splines::schedule(s, c);
+    let mut x = Vec::with_capacity(2 * s);
+    for &o in &offs {
+        x.push(a + o);
+    }
+    for &o in &offs {
+        x.push(b + o);
+    }
+    p.h(&x, c_prime)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pdk::CMOS180;
+
+    #[test]
+    fn backends_agree_on_proto_shape() {
+        // algorithmic vs table-model vs circuit: same knee within margin
+        let alg = Algorithmic::relu();
+        let tm = TableModel::calibrate(&CMOS180, Regime::WeakInversion, 27.0);
+        let cc = CircuitCorner::new(&CMOS180, Regime::WeakInversion);
+        for k in 0..=12 {
+            let z = -2.4 + 0.3 * k as f64;
+            let a = proto_unit(&alg, z, 3, 1.0);
+            let t = proto_unit(&tm, z, 3, 1.0);
+            let c = proto_unit(&cc, z, 3, 1.0);
+            assert!((a - t).abs() < 0.25, "z={z} alg={a} tab={t}");
+            assert!((t - c).abs() < 0.15, "z={z} tab={t} circ={c}");
+        }
+    }
+
+    #[test]
+    fn proto_unit_slope_one_asymptote() {
+        let alg = Algorithmic::relu();
+        let h1 = proto_unit(&alg, 3.0, 3, 1.0);
+        let h2 = proto_unit(&alg, 3.5, 3, 1.0);
+        assert!(((h2 - h1) - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn pair_unit_symmetric() {
+        let alg = Algorithmic::relu();
+        let a = pair_unit(&alg, 0.4, -0.2, 3, 1.0);
+        let b = pair_unit(&alg, -0.2, 0.4, 3, 1.0);
+        assert!((a - b).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,165 @@
+//! Four-quadrant S-AC multiplier (Fig. 11, eqs. 24-30).
+//!
+//! `y ≈ x·w` from four proto-unit evaluations at a calibrated operating
+//! point `a` with output scale `1/(4h''(0))`-equivalent — the calibration
+//! a designer does with the offset currents on silicon (Sec. IV-K).
+
+use super::{proto_unit, HProvider};
+
+/// Calibrated multiplier for a given backend and spline count.
+#[derive(Clone, Debug)]
+pub struct Multiplier {
+    pub s: usize,
+    pub c: f64,
+    /// operating-point offset current
+    pub a: f64,
+    /// output scale factor
+    pub scale: f64,
+}
+
+impl Multiplier {
+    /// Grid-search calibration of (a, scale) minimizing max |scale·y − xw|
+    /// over the unit square (mirrors `ops.calibrate_multiplier`).
+    pub fn calibrate(p: &dyn HProvider, s: usize, c: f64) -> Multiplier {
+        let grid: Vec<f64> = (0..17).map(|i| -1.0 + 0.125 * i as f64).collect();
+        let mut best = (f64::INFINITY, 0.0, 1.0);
+        let mut a = -1.5;
+        while a <= 1.5 + 1e-9 {
+            let mut num = 0.0;
+            let mut den = 0.0;
+            let mut ys = Vec::with_capacity(grid.len() * grid.len());
+            for &w in &grid {
+                for &x in &grid {
+                    let y = raw_mult(p, x, w, a, s, c);
+                    num += y * (x * w);
+                    den += y * y;
+                    ys.push((y, x * w));
+                }
+            }
+            if den > 1e-12 {
+                let scale = num / den;
+                let err = ys
+                    .iter()
+                    .map(|&(y, t)| (scale * y - t).abs())
+                    .fold(0.0, f64::max);
+                if err < best.0 {
+                    best = (err, a, scale);
+                }
+            }
+            a += 0.1;
+        }
+        Multiplier {
+            s,
+            c,
+            a: best.1,
+            scale: best.2,
+        }
+    }
+
+    /// y ≈ x·w.
+    pub fn mul(&self, p: &dyn HProvider, x: f64, w: f64) -> f64 {
+        self.scale * raw_mult(p, x, w, self.a, self.s, self.c)
+    }
+
+    /// Error metrics over the unit square (Table II): (max, mean-abs,
+    /// bias, std) in fractional units.
+    pub fn error_stats(&self, p: &dyn HProvider, n: usize) -> MultErr {
+        let mut errs = Vec::with_capacity(n * n);
+        for i in 0..n {
+            for j in 0..n {
+                let x = -1.0 + 2.0 * i as f64 / (n - 1) as f64;
+                let w = -1.0 + 2.0 * j as f64 / (n - 1) as f64;
+                errs.push(self.mul(p, x, w) - x * w);
+            }
+        }
+        let max = errs.iter().map(|e| e.abs()).fold(0.0, f64::max);
+        let mean_abs = errs.iter().map(|e| e.abs()).sum::<f64>() / errs.len() as f64;
+        let bias = errs.iter().sum::<f64>() / errs.len() as f64;
+        let var = errs
+            .iter()
+            .map(|e| (e - bias) * (e - bias))
+            .sum::<f64>()
+            / errs.len() as f64;
+        MultErr {
+            max,
+            mean_abs,
+            bias,
+            std: var.sqrt(),
+        }
+    }
+}
+
+/// eq. 24: the four-term combination (operating point `a` absorbs the
+/// paper's `2C` bias).
+fn raw_mult(p: &dyn HProvider, x: f64, w: f64, a: f64, s: usize, c: f64) -> f64 {
+    proto_unit(p, a + w + x, s, c) - proto_unit(p, a + w - x, s, c)
+        + proto_unit(p, a - w - x, s, c)
+        - proto_unit(p, a - w + x, s, c)
+}
+
+/// Table-II error metrics (fractions of full scale).
+#[derive(Clone, Copy, Debug)]
+pub struct MultErr {
+    pub max: f64,
+    pub mean_abs: f64,
+    pub bias: f64,
+    pub std: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cells::Algorithmic;
+
+    #[test]
+    fn calibrated_s3_accuracy() {
+        let p = Algorithmic::relu();
+        let m = Multiplier::calibrate(&p, 3, 1.0);
+        let e = m.error_stats(&p, 21);
+        assert!(e.max < 0.08, "max err {}", e.max);
+    }
+
+    #[test]
+    fn four_quadrants() {
+        let p = Algorithmic::relu();
+        let m = Multiplier::calibrate(&p, 3, 1.0);
+        for (x, w) in [(0.5, 0.5), (-0.5, 0.5), (0.5, -0.5), (-0.5, -0.5)] {
+            let y = m.mul(&p, x, w);
+            assert!((y - x * w).abs() < 0.07, "x={x} w={w} y={y}");
+        }
+    }
+
+    #[test]
+    fn zero_lines() {
+        let p = Algorithmic::relu();
+        let m = Multiplier::calibrate(&p, 3, 1.0);
+        for v in [-1.0, -0.4, 0.3, 0.9] {
+            assert!(m.mul(&p, v, 0.0).abs() < 0.06);
+            assert!(m.mul(&p, 0.0, v).abs() < 0.06);
+        }
+    }
+
+    #[test]
+    fn error_decreases_s1_to_s3_table2() {
+        let p = Algorithmic::relu();
+        let m1 = Multiplier::calibrate(&p, 1, 1.0);
+        let m3 = Multiplier::calibrate(&p, 3, 1.0);
+        let e1 = m1.error_stats(&p, 21);
+        let e3 = m3.error_stats(&p, 21);
+        assert!(
+            e3.mean_abs < e1.mean_abs,
+            "s1={} s3={}",
+            e1.mean_abs,
+            e3.mean_abs
+        );
+    }
+
+    #[test]
+    fn symmetric_in_x_and_w() {
+        let p = Algorithmic::relu();
+        let m = Multiplier::calibrate(&p, 3, 1.0);
+        let a = m.mul(&p, 0.6, 0.3);
+        let b = m.mul(&p, 0.3, 0.6);
+        assert!((a - b).abs() < 1e-9);
+    }
+}

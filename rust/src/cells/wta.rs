@@ -1,0 +1,144 @@
+//! WTA family (Fig. 9, eqs. 22-23): winner-take-all, N-of-M encoder,
+//! SoftArgMax and Max — all configurations of one N-input S-AC unit.
+//!
+//! The shared node h sits below the top-M inputs; per-input outputs are the
+//! residues `[x_i − h]_+` (the current each winner branch carries).
+
+use crate::sac::gmp::solve_exact;
+
+use super::HProvider;
+
+/// Per-input WTA outputs `I_out_i = [x_i − h]_+` (eq. 23).  Residues are
+/// read off the *internal* node (`h_raw`) — branch currents always sum to
+/// C by KCL even when the output mirror would rectify.
+pub fn wta_outputs(p: &dyn HProvider, x: &[f64], c: f64) -> Vec<f64> {
+    let h = p.h_raw(x, c);
+    x.iter().map(|&v| (v - h).max(0.0)).collect()
+}
+
+/// Composite N-of-M output current (eq. 22): sum of winner residues.
+pub fn nofm_current(p: &dyn HProvider, x: &[f64], c: f64) -> f64 {
+    wta_outputs(p, x, c).iter().sum()
+}
+
+/// Number of winners currently selected (inputs above the shared node).
+pub fn winner_count(p: &dyn HProvider, x: &[f64], c: f64) -> usize {
+    wta_outputs(p, x, c).iter().filter(|&&v| v > 0.0).count()
+}
+
+/// SoftArgMax: winner residues normalized to a distribution (Sec. IV-I).
+pub fn softargmax(p: &dyn HProvider, x: &[f64], c: f64) -> Vec<f64> {
+    let y = wta_outputs(p, x, c);
+    let s: f64 = y.iter().sum::<f64>().max(1e-30);
+    y.into_iter().map(|v| v / s).collect()
+}
+
+/// Max selector (Sec. IV-J): h in the C→0 limit approaches max(x)
+/// (unclamped internal node plus the residue C).
+pub fn max_cell(x: &[f64], c: f64) -> f64 {
+    solve_exact(x, c) + c
+}
+
+/// Index of the winning input.
+pub fn argmax_cell(p: &dyn HProvider, x: &[f64], c: f64) -> usize {
+    let y = wta_outputs(p, x, c);
+    y.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cells::Algorithmic;
+    use crate::prop_assert;
+    use crate::util::propcheck::check;
+
+    #[test]
+    fn single_winner_small_c() {
+        let p = Algorithmic::relu();
+        let x = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let y = wta_outputs(&p, &x, 0.5);
+        assert_eq!(y.iter().filter(|&&v| v > 0.0).count(), 1);
+        assert!(y[4] > 0.0);
+    }
+
+    #[test]
+    fn winner_count_grows_with_c_fig10() {
+        let p = Algorithmic::relu();
+        let x = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let mut last = 0;
+        for c in [0.5, 1.5, 3.5, 7.0, 12.0] {
+            let n = winner_count(&p, &x, c);
+            assert!(n >= last, "c={c}");
+            last = n;
+        }
+        assert!(last >= 4);
+    }
+
+    #[test]
+    fn nofm_matches_eq22() {
+        let p = Algorithmic::relu();
+        let x = [1.0, 2.0, 3.0, 4.0, 5.0];
+        for c in [0.5, 2.0, 6.0] {
+            let h = crate::sac::gmp::solve_exact(&x, c);
+            let winners: Vec<f64> = x.iter().cloned().filter(|&v| v > h).collect();
+            let m = winners.len() as f64;
+            let expect = (winners.iter().sum::<f64>() - c) / m;
+            assert!((h - expect).abs() < 1e-12);
+            // composite current = Σ (x_i − h) over winners = C by KCL
+            let i_out = nofm_current(&p, &x, c);
+            assert!((i_out - c).abs() < 1e-9, "c={c} i={i_out}");
+        }
+    }
+
+    #[test]
+    fn softargmax_is_distribution() {
+        let p = Algorithmic::relu();
+        check(1, 100, |g| -> Result<(), String> {
+            let m = g.usize_in(2, 9);
+            let x = g.vec_f64(m, -2.0, 2.0);
+            let c = g.f64_in(0.2, 4.0);
+            let sm = softargmax(&p, &x, c);
+            let s: f64 = sm.iter().sum();
+            prop_assert!((s - 1.0).abs() < 1e-9, "sum={s}");
+            prop_assert!(sm.iter().all(|&v| v >= 0.0));
+            // winner has the largest mass
+            let arg = argmax_cell(&p, &x, c);
+            let true_max = x
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            prop_assert!(arg == true_max, "arg={arg} true={true_max}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn max_cell_limit() {
+        check(2, 100, |g| -> Result<(), String> {
+            let m = g.usize_in(1, 8);
+            let x = g.vec_f64(m, -3.0, 3.0);
+            let y = max_cell(&x, 1e-5);
+            let mx = x.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            prop_assert!((y - mx).abs() < 1e-4, "y={y} max={mx}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn wta_modular_in_n() {
+        // adding a losing input never changes the winner's output (Lazzaro
+        // modularity)
+        let p = Algorithmic::relu();
+        let base = [2.0, 5.0];
+        let extended = [2.0, 5.0, 1.0, 0.5];
+        let yb = wta_outputs(&p, &base, 0.5);
+        let ye = wta_outputs(&p, &extended, 0.5);
+        assert!((yb[1] - ye[1]).abs() < 1e-9);
+    }
+}

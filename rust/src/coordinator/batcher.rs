@@ -1,0 +1,162 @@
+//! Dynamic batcher: groups incoming inference requests into the fixed
+//! batch shape the AOT executable was compiled for.
+//!
+//! Invariants (property-tested below):
+//!  * every submitted request appears in exactly one batch, in order;
+//!  * no batch exceeds `batch_size`;
+//!  * a flush drains everything, padding the tail batch with zero rows and
+//!    recording the pad count so results can be un-padded.
+
+/// One request: a feature row.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub features: Vec<f32>,
+}
+
+/// A materialized batch ready for the executable.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub ids: Vec<u64>,
+    /// row-major [batch_size × dim] (zero-padded)
+    pub data: Vec<f32>,
+    /// number of real rows (≤ batch_size)
+    pub live: usize,
+}
+
+#[derive(Debug)]
+pub struct DynamicBatcher {
+    pub batch_size: usize,
+    pub dim: usize,
+    queue: Vec<Request>,
+    next_id: u64,
+}
+
+impl DynamicBatcher {
+    pub fn new(batch_size: usize, dim: usize) -> Self {
+        assert!(batch_size > 0 && dim > 0);
+        DynamicBatcher {
+            batch_size,
+            dim,
+            queue: Vec::new(),
+            next_id: 0,
+        }
+    }
+
+    /// Enqueue a request; returns its id.  Panics on wrong feature arity
+    /// (a malformed request must never silently corrupt a batch).
+    pub fn submit(&mut self, features: Vec<f32>) -> u64 {
+        assert_eq!(features.len(), self.dim, "feature dim mismatch");
+        let id = self.next_id;
+        self.next_id += 1;
+        self.queue.push(Request { id, features });
+        id
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Pop one full batch if available (no padding).
+    pub fn pop_full(&mut self) -> Option<Batch> {
+        if self.queue.len() < self.batch_size {
+            return None;
+        }
+        Some(self.materialize(self.batch_size))
+    }
+
+    /// Drain everything, padding the final partial batch.
+    pub fn flush(&mut self) -> Vec<Batch> {
+        let mut out = Vec::new();
+        while let Some(b) = self.pop_full() {
+            out.push(b);
+        }
+        if !self.queue.is_empty() {
+            let live = self.queue.len();
+            out.push(self.materialize(live));
+        }
+        out
+    }
+
+    fn materialize(&mut self, take: usize) -> Batch {
+        let reqs: Vec<Request> = self.queue.drain(..take).collect();
+        let mut data = vec![0.0f32; self.batch_size * self.dim];
+        let mut ids = Vec::with_capacity(take);
+        for (r, req) in reqs.into_iter().enumerate() {
+            data[r * self.dim..(r + 1) * self.dim].copy_from_slice(&req.features);
+            ids.push(req.id);
+        }
+        Batch {
+            ids,
+            data,
+            live: take,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::propcheck::check;
+
+    #[test]
+    fn batches_preserve_order_and_content() {
+        let mut b = DynamicBatcher::new(4, 2);
+        for i in 0..10 {
+            b.submit(vec![i as f32, -(i as f32)]);
+        }
+        let batches = b.flush();
+        assert_eq!(batches.len(), 3);
+        assert_eq!(batches[0].live, 4);
+        assert_eq!(batches[2].live, 2);
+        let mut seen = Vec::new();
+        for batch in &batches {
+            for (r, &id) in batch.ids.iter().enumerate() {
+                assert_eq!(batch.data[r * 2], id as f32);
+                seen.push(id);
+            }
+        }
+        assert_eq!(seen, (0..10).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn padding_is_zero() {
+        let mut b = DynamicBatcher::new(4, 3);
+        b.submit(vec![1.0, 2.0, 3.0]);
+        let batches = b.flush();
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].live, 1);
+        assert!(batches[0].data[3..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "feature dim mismatch")]
+    fn rejects_wrong_dim() {
+        let mut b = DynamicBatcher::new(2, 3);
+        b.submit(vec![1.0]);
+    }
+
+    #[test]
+    fn prop_no_request_lost_or_duplicated() {
+        check(11, 100, |g| -> Result<(), String> {
+            let bs = g.usize_in(1, 8);
+            let dim = g.usize_in(1, 5);
+            let n = g.usize_in(0, 40);
+            let mut b = DynamicBatcher::new(bs, dim);
+            for _ in 0..n {
+                b.submit(vec![0.5; dim]);
+            }
+            let batches = b.flush();
+            let total: usize = batches.iter().map(|b| b.live).sum();
+            prop_assert!(total == n, "lost requests: {total} != {n}");
+            let mut ids: Vec<u64> = batches.iter().flat_map(|b| b.ids.clone()).collect();
+            let before = ids.len();
+            ids.dedup();
+            prop_assert!(ids.len() == before, "duplicate ids");
+            prop_assert!(batches.iter().all(|b| b.live <= bs));
+            prop_assert!(b.pending() == 0);
+            Ok(())
+        });
+    }
+}

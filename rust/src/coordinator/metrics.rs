@@ -1,0 +1,80 @@
+//! Serving metrics: batch latency distribution and sustained throughput.
+
+use std::time::Duration;
+
+use crate::util::stats;
+
+#[derive(Clone, Debug, Default)]
+pub struct ServeMetrics {
+    /// per-batch latency [s]
+    pub batch_latency_s: Vec<f64>,
+    /// live rows per batch
+    pub batch_rows: Vec<usize>,
+}
+
+impl ServeMetrics {
+    pub fn record_batch(&mut self, rows: usize, dt: Duration) {
+        self.batch_latency_s.push(dt.as_secs_f64());
+        self.batch_rows.push(rows);
+    }
+
+    pub fn total_requests(&self) -> usize {
+        self.batch_rows.iter().sum()
+    }
+
+    pub fn mean_latency_ms(&self) -> f64 {
+        stats::summarize(&self.batch_latency_s).mean * 1e3
+    }
+
+    pub fn p99_latency_ms(&self) -> f64 {
+        if self.batch_latency_s.is_empty() {
+            return 0.0;
+        }
+        stats::percentile(&self.batch_latency_s, 99.0) * 1e3
+    }
+
+    /// requests / second over the measured batches
+    pub fn throughput_rps(&self) -> f64 {
+        let total_t: f64 = self.batch_latency_s.iter().sum();
+        if total_t <= 0.0 {
+            return 0.0;
+        }
+        self.total_requests() as f64 / total_t
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "batches={} requests={} mean={:.3} ms p99={:.3} ms throughput={:.0} req/s",
+            self.batch_latency_s.len(),
+            self.total_requests(),
+            self.mean_latency_ms(),
+            self.p99_latency_ms(),
+            self.throughput_rps()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metrics_accumulate() {
+        let mut m = ServeMetrics::default();
+        m.record_batch(4, Duration::from_millis(10));
+        m.record_batch(2, Duration::from_millis(20));
+        assert_eq!(m.total_requests(), 6);
+        assert!((m.mean_latency_ms() - 15.0).abs() < 1e-9);
+        let rps = m.throughput_rps();
+        assert!((rps - 6.0 / 0.030).abs() < 1.0, "rps={rps}");
+        assert!(m.report().contains("requests=6"));
+    }
+
+    #[test]
+    fn empty_metrics_safe() {
+        let m = ServeMetrics::default();
+        assert_eq!(m.total_requests(), 0);
+        assert_eq!(m.throughput_rps(), 0.0);
+        assert_eq!(m.p99_latency_ms(), 0.0);
+    }
+}

@@ -1,0 +1,117 @@
+//! Layer-3 coordinator: the inference server tying the stack together.
+//!
+//! Requests → [`DynamicBatcher`] → backend:
+//!  * **PJRT fast path** — the AOT-compiled S-AC network (`runtime`),
+//!  * **circuit golden path** — the device-exact/table-model evaluator
+//!    (`nn`), used for cross-checks and characterization.
+//!
+//! Python is never on this path; the process is self-contained once
+//! `artifacts/` exists.
+
+pub mod batcher;
+pub mod metrics;
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+pub use batcher::{Batch, DynamicBatcher};
+pub use metrics::ServeMetrics;
+
+use crate::data::TrainedNet;
+use crate::runtime::{Executable, Runtime};
+
+/// Inference server for one task's AOT executable.
+pub struct InferenceServer {
+    pub net: TrainedNet,
+    pub exe: Executable,
+    pub batcher: DynamicBatcher,
+    /// flattened f32 weight buffers in manifest parameter order
+    weight_bufs: Vec<Vec<f32>>,
+    pub n_classes: usize,
+    pub metrics: ServeMetrics,
+}
+
+impl InferenceServer {
+    /// Build from the artifact directory: loads `<task>_mlp` and
+    /// `weights_<task>.json`, pre-materializing the weight literals.
+    pub fn new(rt: &Runtime, task: &str) -> Result<InferenceServer> {
+        let net = TrainedNet::load(
+            &rt.artifacts_dir.join(format!("weights_{task}.json")),
+        )?;
+        let exe = rt.load(&format!("{task}_mlp"))?;
+        // parameter order: w1,b1,w2,b2,...,x  (see aot.py)
+        let mut weight_bufs = Vec::new();
+        for li in 0..net.n_layers() {
+            weight_bufs.push(net.weights[li].iter().map(|&v| v as f32).collect());
+            weight_bufs.push(net.biases[li].iter().map(|&v| v as f32).collect());
+        }
+        let xspec = exe
+            .spec
+            .params
+            .last()
+            .ok_or_else(|| anyhow!("no params in manifest"))?;
+        let batch = xspec.shape[0];
+        let dim = xspec.shape[1];
+        if dim != net.sizes[0] {
+            return Err(anyhow!("manifest dim {dim} != net input {}", net.sizes[0]));
+        }
+        let n_classes = *net.sizes.last().unwrap();
+        Ok(InferenceServer {
+            net,
+            exe,
+            batcher: DynamicBatcher::new(batch, dim),
+            weight_bufs,
+            n_classes,
+            metrics: ServeMetrics::default(),
+        })
+    }
+
+    /// Enqueue one request.
+    pub fn submit(&mut self, features: Vec<f32>) -> u64 {
+        self.batcher.submit(features)
+    }
+
+    /// Run one materialized batch through the executable; returns
+    /// (request id, predicted class, logits) per live row.
+    pub fn run_batch(&mut self, batch: &Batch) -> Result<Vec<(u64, usize, Vec<f32>)>> {
+        let t0 = Instant::now();
+        let mut params: Vec<&[f32]> =
+            self.weight_bufs.iter().map(|b| b.as_slice()).collect();
+        params.push(&batch.data);
+        let out = self.exe.run_f32(&params)?;
+        let dt = t0.elapsed();
+        self.metrics.record_batch(batch.live, dt);
+        let k = self.n_classes;
+        let mut results = Vec::with_capacity(batch.live);
+        for (r, &id) in batch.ids.iter().enumerate() {
+            let logits = out[r * k..(r + 1) * k].to_vec();
+            let pred = logits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(j, _)| j)
+                .unwrap_or(0);
+            results.push((id, pred, logits));
+        }
+        Ok(results)
+    }
+
+    /// Drain the queue: run all pending batches (padding the tail).
+    pub fn drain(&mut self) -> Result<Vec<(u64, usize, Vec<f32>)>> {
+        let batches = self.batcher.flush();
+        let mut all = Vec::new();
+        for b in &batches {
+            all.extend(self.run_batch(b)?);
+        }
+        Ok(all)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // InferenceServer needs compiled artifacts; its end-to-end behaviour is
+    // covered by rust/tests/integration.rs and examples/mnist_serve.rs.
+    // The pure coordination logic is tested in `batcher` and `metrics`.
+}

@@ -1,0 +1,212 @@
+//! Dataset and weight loading (the SACD binary format and the
+//! `weights_<task>.json` blobs written by the python training pipeline).
+//!
+//! The *test sets scored here are byte-identical to the ones the python
+//! side trained/evaluated against* — that is what makes the Table IV
+//! H/W-vs-S/W comparison meaningful.  Generators for standalone use (demo
+//! examples without artifacts) also live here.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::json::parse_file;
+use crate::util::rng::Rng;
+
+/// A labelled dataset: row-major f32 features + integer labels.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub x: Vec<f32>,
+    pub y: Vec<u16>,
+    pub n: usize,
+    pub d: usize,
+}
+
+impl Dataset {
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Load the SACD binary format (see python sacml/data.py::save_dataset).
+    pub fn load_sacd(path: &Path) -> Result<Dataset> {
+        let bytes = std::fs::read(path)
+            .map_err(|e| anyhow!("reading {}: {e}", path.display()))?;
+        if bytes.len() < 16 || &bytes[..4] != b"SACD" {
+            bail!("{}: not an SACD file", path.display());
+        }
+        let rd32 = |o: usize| u32::from_le_bytes(bytes[o..o + 4].try_into().unwrap());
+        let ver = rd32(4);
+        if ver != 1 {
+            bail!("unsupported SACD version {ver}");
+        }
+        let n = rd32(8) as usize;
+        let d = rd32(12) as usize;
+        let data_end = 16 + 4 * n * d;
+        if bytes.len() < data_end + 2 * n {
+            bail!("{}: truncated", path.display());
+        }
+        let mut x = Vec::with_capacity(n * d);
+        for i in 0..n * d {
+            let o = 16 + 4 * i;
+            x.push(f32::from_le_bytes(bytes[o..o + 4].try_into().unwrap()));
+        }
+        let mut y = Vec::with_capacity(n);
+        for i in 0..n {
+            let o = data_end + 2 * i;
+            y.push(u16::from_le_bytes(bytes[o..o + 2].try_into().unwrap()));
+        }
+        Ok(Dataset { x, y, n, d })
+    }
+}
+
+/// Trained network weights (+ metadata) from `weights_<task>.json`.
+#[derive(Clone, Debug)]
+pub struct TrainedNet {
+    pub task: String,
+    pub sizes: Vec<usize>,
+    pub activation: String,
+    pub splines: usize,
+    pub c: f64,
+    pub acc_sw: f64,
+    pub acc_sac_algorithmic: f64,
+    /// row-major weight matrices w1..wL ([in × out]) and biases b1..bL
+    pub weights: Vec<Vec<f64>>,
+    pub biases: Vec<Vec<f64>>,
+}
+
+impl TrainedNet {
+    pub fn load(path: &Path) -> Result<TrainedNet> {
+        let j = parse_file(path)?;
+        let sizes: Vec<usize> = j
+            .get("sizes")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_usize())
+            .collect::<Result<_>>()?;
+        let wobj = j.get("weights")?;
+        let nl = sizes.len() - 1;
+        let mut weights = Vec::with_capacity(nl);
+        let mut biases = Vec::with_capacity(nl);
+        for li in 1..=nl {
+            let wm = wobj.get(&format!("w{li}"))?.as_f64_mat()?;
+            if wm.len() != sizes[li - 1] {
+                bail!("w{li} row count {} != {}", wm.len(), sizes[li - 1]);
+            }
+            weights.push(wm.into_iter().flatten().collect());
+            biases.push(wobj.get(&format!("b{li}"))?.as_f64_vec()?);
+        }
+        Ok(TrainedNet {
+            task: j.get("task")?.as_str()?.to_string(),
+            sizes,
+            activation: j.get("activation")?.as_str()?.to_string(),
+            splines: j.get("splines")?.as_usize()?,
+            c: j.get("c")?.as_f64()?,
+            acc_sw: j.get("acc_sw")?.as_f64()?,
+            acc_sac_algorithmic: j.get("acc_sac_algorithmic")?.as_f64()?,
+            weights,
+            biases,
+        })
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.sizes.len() - 1
+    }
+
+    /// w[layer][i][k] accessor (layer 0-based, row-major [in × out]).
+    pub fn w(&self, layer: usize, i: usize, k: usize) -> f64 {
+        let out = self.sizes[layer + 1];
+        self.weights[layer][i * out + k]
+    }
+}
+
+/// Standalone XOR generator (mirror of python make_xor for demos that run
+/// without artifacts; not used for Table IV scoring).
+pub fn gen_xor(n: usize, seed: u64, noise: f64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut x = Vec::with_capacity(n * 2);
+    let mut y = Vec::with_capacity(n);
+    for _ in 0..n {
+        let mut a = rng.uniform_in(-1.0, 1.0);
+        let mut b = rng.uniform_in(-1.0, 1.0);
+        a += 0.08 * a.signum();
+        b += 0.08 * b.signum();
+        let label = ((a > 0.0) ^ (b > 0.0)) as u16;
+        x.push((a + rng.gauss_ms(0.0, noise)) as f32);
+        x.push((b + rng.gauss_ms(0.0, noise)) as f32);
+        y.push(label);
+    }
+    Dataset { x, y, n, d: 2 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sacd_roundtrip_handwritten() {
+        // craft a tiny SACD file by hand
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"SACD");
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&2u32.to_le_bytes()); // n
+        bytes.extend_from_slice(&3u32.to_le_bytes()); // d
+        for v in [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        for l in [7u16, 9u16] {
+            bytes.extend_from_slice(&l.to_le_bytes());
+        }
+        let dir = std::env::temp_dir().join("sac_data_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.bin");
+        std::fs::write(&p, &bytes).unwrap();
+        let ds = Dataset::load_sacd(&p).unwrap();
+        assert_eq!((ds.n, ds.d), (2, 3));
+        assert_eq!(ds.row(1), &[4.0, 5.0, 6.0]);
+        assert_eq!(ds.y, vec![7, 9]);
+    }
+
+    #[test]
+    fn sacd_rejects_garbage() {
+        let dir = std::env::temp_dir().join("sac_data_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.bin");
+        std::fs::write(&p, b"NOPE0000000000000000").unwrap();
+        assert!(Dataset::load_sacd(&p).is_err());
+    }
+
+    #[test]
+    fn weights_json_parses() {
+        let text = r#"{
+            "task": "toy", "sizes": [2, 3, 2], "activation": "phi1",
+            "splines": 3, "c": 1.0, "acc_sw": 0.9, "acc_sac_algorithmic": 0.88,
+            "weights": {
+                "w1": [[1, 2, 3], [4, 5, 6]], "b1": [0.1, 0.2, 0.3],
+                "w2": [[1, 0], [0, 1], [1, 1]], "b2": [0, 0]
+            }
+        }"#;
+        let dir = std::env::temp_dir().join("sac_data_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("w.json");
+        std::fs::write(&p, text).unwrap();
+        let net = TrainedNet::load(&p).unwrap();
+        assert_eq!(net.sizes, vec![2, 3, 2]);
+        assert_eq!(net.n_layers(), 2);
+        assert_eq!(net.w(0, 1, 2), 6.0);
+        assert_eq!(net.biases[0], vec![0.1, 0.2, 0.3]);
+    }
+
+    #[test]
+    fn gen_xor_labels() {
+        let ds = gen_xor(200, 3, 0.0);
+        let mut correct = 0;
+        for i in 0..ds.n {
+            let r = ds.row(i);
+            let expect = ((r[0] > 0.0) ^ (r[1] > 0.0)) as u16;
+            if expect == ds.y[i] {
+                correct += 1;
+            }
+        }
+        assert!(correct as f64 / ds.n as f64 > 0.97);
+    }
+}

@@ -1,0 +1,116 @@
+//! Diode element for the S-AC branch (Fig. 2b's D_ij).
+//!
+//! The paper allows "Schottky, MOS diode or any other" — the requirement is
+//! only rectification.  We model an ideal-factor exponential diode with a
+//! saturation current scaled to the process leakage floor, plus the option
+//! of a diode-connected MOSFET (gate tied to anode), which is what a
+//! compact S-AC layout actually uses.
+
+use super::ekv::Mosfet;
+use crate::pdk::{Polarity, ProcessNode};
+
+/// Exponential junction diode.
+#[derive(Clone, Debug)]
+pub struct Diode {
+    pub node: &'static ProcessNode,
+    /// saturation current [A]
+    pub i_sat: f64,
+    /// ideality factor
+    pub n_ideal: f64,
+    pub t_c: f64,
+}
+
+impl Diode {
+    pub fn new(node: &'static ProcessNode) -> Self {
+        Self {
+            node,
+            i_sat: node.leak_floor,
+            n_ideal: 1.1,
+            t_c: 27.0,
+        }
+    }
+
+    pub fn at_temp(mut self, t_c: f64) -> Self {
+        self.t_c = t_c;
+        self
+    }
+
+    /// Diode current for forward voltage `v` [A]; clamped exponent for
+    /// numerical robustness.
+    pub fn current(&self, v: f64) -> f64 {
+        let ut = ProcessNode::ut(self.t_c) * self.n_ideal;
+        let x = (v / ut).min(80.0);
+        self.i_sat * (x.exp() - 1.0)
+    }
+
+    /// Inverse: forward voltage needed to carry current `i` [V].
+    pub fn voltage(&self, i: f64) -> f64 {
+        let ut = ProcessNode::ut(self.t_c) * self.n_ideal;
+        ut * (i / self.i_sat + 1.0).ln()
+    }
+}
+
+/// Diode-connected MOSFET (V_g = V_d = anode, source = cathode).
+#[derive(Clone, Debug)]
+pub struct MosDiode {
+    pub dev: Mosfet,
+}
+
+impl MosDiode {
+    pub fn new(node: &'static ProcessNode) -> Self {
+        Self {
+            dev: Mosfet::square(node, Polarity::N),
+        }
+    }
+
+    /// Current from anode (drain+gate) at `va` into cathode at `vk`.
+    pub fn current(&self, va: f64, vk: f64) -> f64 {
+        self.dev.ids(va, vk, va).max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pdk::CMOS180;
+
+    #[test]
+    fn diode_rectifies() {
+        let d = Diode::new(&CMOS180);
+        assert!(d.current(0.5) > 0.0);
+        assert!(d.current(-0.5) < 0.0); // reverse leakage, tiny
+        assert!(d.current(-0.5).abs() <= d.i_sat * 1.01);
+        assert!(d.current(0.0).abs() < 1e-30);
+    }
+
+    #[test]
+    fn diode_voltage_roundtrip() {
+        let d = Diode::new(&CMOS180);
+        for i in [1e-12, 1e-9, 1e-6] {
+            let v = d.voltage(i);
+            let i2 = d.current(v);
+            assert!((i2 / i - 1.0).abs() < 1e-6, "i={i} i2={i2}");
+        }
+    }
+
+    #[test]
+    fn diode_exponential_decade_per_ut() {
+        let d = Diode::new(&CMOS180);
+        let ut = ProcessNode::ut(27.0) * d.n_ideal;
+        let v = 0.4;
+        let ratio = d.current(v + ut * std::f64::consts::LN_10) / d.current(v);
+        assert!((ratio - 10.0).abs() < 0.1, "ratio={ratio}");
+    }
+
+    #[test]
+    fn mos_diode_monotone() {
+        let d = MosDiode::new(&CMOS180);
+        let mut last = 0.0;
+        for step in 0..10 {
+            let va = 0.2 + 0.1 * step as f64;
+            let i = d.current(va, 0.0);
+            assert!(i >= last);
+            last = i;
+        }
+    }
+}

@@ -1,0 +1,366 @@
+//! EKV-style all-region MOSFET compact model.
+//!
+//! The paper's argument (Sec. III-A) needs only the *structure* of the
+//! drain current: `I_ds = I_S [ f(V_g, V_s) − f(V_g, V_d) ]` (eq. 10) with a
+//! forward-current function `f` that is zero at the origin, non-negative,
+//! and monotone (increasing in V_g, decreasing in V_s).  The EKV
+//! interpolation supplies exactly that, continuously from weak through
+//! moderate to strong inversion:
+//!
+//! ```text
+//!     F(v)  = ln²(1 + e^{v/2})                       (normalized)
+//!     v_p   = (V_G − V_T0) / n                        (pinch-off)
+//!     i_f   = F((v_p − V_S)/U_T),  i_r = F((v_p − V_D)/U_T)
+//!     I_DS  = I_S · (W/L) · (i_f − i_r)
+//! ```
+//!
+//! Weak inversion: `F(v) → e^v` (exponential); strong inversion:
+//! `F(v) → (v/2)²` (square law); moderate inversion interpolates — this is
+//! what Fig. 1's gm/Id plot and Fig. 3's bias-scalability rest on.
+
+use crate::pdk::{Polarity, ProcessNode};
+
+/// One transistor instance with geometry, temperature and mismatch state.
+#[derive(Clone, Debug)]
+pub struct Mosfet {
+    pub node: &'static ProcessNode,
+    pub polarity: Polarity,
+    /// width [µm] (for FinFET: fins × per-fin width — use `with_fins`)
+    pub w_um: f64,
+    /// length [µm]
+    pub l_um: f64,
+    /// junction temperature [°C]
+    pub t_c: f64,
+    /// threshold mismatch ΔV_T [V] (sampled by `device::mismatch`)
+    pub dvt: f64,
+    /// current-factor mismatch Δβ/β (fractional)
+    pub dbeta: f64,
+    /// source-shift voltage [V] (deep-threshold technique, Fig. 5)
+    pub source_shift: f64,
+    /// body tied to VDD (channel-conduction manipulation, Sec. III-C):
+    /// raises the effective V_T0 via back-gate effect
+    pub body_at_vdd: bool,
+}
+
+impl Mosfet {
+    /// Minimum-geometry device at 27 °C, no mismatch.  (FinFET: one fin at
+    /// minimum gate length; planar: minimum W and L.)
+    pub fn square(node: &'static ProcessNode, polarity: Polarity) -> Self {
+        Mosfet {
+            node,
+            polarity,
+            w_um: node.wmin_um,
+            l_um: node.lmin_um,
+            t_c: 27.0,
+            dvt: 0.0,
+            dbeta: 0.0,
+            source_shift: 0.0,
+            body_at_vdd: false,
+        }
+    }
+
+    /// FinFET sizing: width quantized to `fins` fins.
+    pub fn with_fins(mut self, fins: usize) -> Self {
+        self.w_um = fins.max(1) as f64 * self.node.wmin_um;
+        self
+    }
+
+    pub fn at_temp(mut self, t_c: f64) -> Self {
+        self.t_c = t_c;
+        self
+    }
+
+    /// normalized EKV interpolation F(v) = ln²(1+e^{v/2}),
+    /// numerically-stable for large |v|.
+    #[inline]
+    pub fn f_interp(v: f64) -> f64 {
+        let half = 0.5 * v;
+        // ln(1+e^x): x>30 -> x; x<-30 -> e^x
+        let ln1p = if half > 30.0 {
+            half
+        } else if half < -30.0 {
+            half.exp()
+        } else {
+            half.exp().ln_1p()
+        };
+        ln1p * ln1p
+    }
+
+    /// Effective V_T0 including temperature, mismatch, and the
+    /// channel-conduction body bias (Fig. 5b raises V_T by a body-effect
+    /// offset when the bulk is tied to VDD for NMOS).
+    pub fn vt_eff(&self) -> f64 {
+        let mut vt = self.node.vt0_at(self.t_c) + self.dvt;
+        if self.body_at_vdd {
+            // reverse body bias for NMOS with bulk at VDD is *forward*;
+            // the paper uses it on PMOS-style connection to suppress
+            // channel inversion — model as a fixed +120 mV shift.
+            vt += 0.12;
+        }
+        vt
+    }
+
+    /// Specific current I_S·W/L at temperature, with β mismatch [A].
+    pub fn i_s(&self) -> f64 {
+        self.node.i_spec_at(self.t_c) * (self.w_um / self.l_um) * (1.0 + self.dbeta)
+    }
+
+    /// Frozen operating-point constants (§Perf: `i_spec_at` hides a `powf`
+    /// and `vt_eff` a handful of branches — hoist them out of the nested
+    /// solver's inner loop, which evaluates `forward` ~10⁴ times per unit).
+    pub fn op_point(&self) -> DevOp {
+        DevOp {
+            ut: ProcessNode::ut(self.t_c),
+            vt: self.vt_eff(),
+            i_s: self.i_s(),
+            n_slope: self.node.n_slope,
+            theta: self.node.theta,
+            leak: self.node.leak_floor,
+            source_shift: self.source_shift,
+        }
+    }
+
+    /// The paper's forward-current function f(V_g, V_s) [A] (eq. 10 term).
+    ///
+    /// Voltages are node voltages for an N-device; P-devices are handled by
+    /// sign reflection in `ids`.  Includes the junction-leakage floor so the
+    /// deep-threshold regime bottoms out at femtoamps (Fig. 5a).
+    pub fn forward(&self, vg: f64, vs: f64) -> f64 {
+        self.op_point().forward(vg, vs)
+    }
+
+    /// Drain-source current I_DS(V_g, V_s, V_d) [A] (eq. 10).
+    pub fn ids(&self, vg: f64, vs: f64, vd: f64) -> f64 {
+        match self.polarity {
+            Polarity::N => self.forward(vg, vs) - self.forward(vg, vd),
+            // P-device: reflect about VDD
+            Polarity::P => {
+                let vdd = self.node.vdd;
+                let refl = |v: f64| vdd - v;
+                let n = Mosfet {
+                    polarity: Polarity::N,
+                    ..self.clone()
+                };
+                n.forward(refl(vg), refl(vs)) - n.forward(refl(vg), refl(vd))
+            }
+        }
+    }
+
+    /// Saturation drain current (V_d high enough that reverse term ~0).
+    pub fn ids_sat(&self, vg: f64, vs: f64) -> f64 {
+        self.forward(vg, vs) - self.node.leak_floor + self.node.leak_floor
+        // forward() already includes the floor once; keep as-is
+    }
+
+    /// Transconductance ∂I_D/∂V_G at a saturated operating point [S]
+    /// (central difference — always consistent with `ids`).
+    pub fn gm(&self, vg: f64, vs: f64) -> f64 {
+        let dv = 1e-5;
+        (self.forward(vg + dv, vs) - self.forward(vg - dv, vs)) / (2.0 * dv)
+    }
+
+    /// Inversion coefficient IC = I_D / (I_S·W/L) at the operating point.
+    pub fn inversion_coefficient(&self, vg: f64, vs: f64) -> f64 {
+        (self.forward(vg, vs) - self.node.leak_floor) / self.i_s()
+    }
+
+    /// Transit frequency estimate [GHz]: f_T ∝ g_m / C_gg with C_gg from
+    /// the node's C_ox and the device geometry.  Calibrated so that strong
+    /// inversion at V_ov = 0.3 V hits `node.ft_si_ghz` for a square device.
+    pub fn ft_ghz(&self, vg: f64, vs: f64) -> f64 {
+        let cgg = self.node.cox_ff_um2 * self.w_um * self.l_um; // fF
+        let gm = self.gm(vg, vs); // S
+        // reference gm for calibration
+        let ref_dev = Mosfet::square(self.node, Polarity::N);
+        let vg_ref = ref_dev.vt_eff() + 0.3;
+        let gm_ref = ref_dev.gm(vg_ref, 0.0);
+        let cgg_ref = self.node.cox_ff_um2 * ref_dev.w_um * ref_dev.l_um;
+        self.node.ft_si_ghz * (gm / gm_ref) * (cgg_ref / cgg)
+    }
+}
+
+/// Hoisted per-device constants for the hot loop (see `Mosfet::op_point`).
+#[derive(Clone, Copy, Debug)]
+pub struct DevOp {
+    pub ut: f64,
+    pub vt: f64,
+    pub i_s: f64,
+    pub n_slope: f64,
+    pub theta: f64,
+    pub leak: f64,
+    pub source_shift: f64,
+}
+
+impl DevOp {
+    /// f(V_g, V_s) with all device constants pre-resolved.
+    #[inline]
+    pub fn forward(&self, vg: f64, vs: f64) -> f64 {
+        let vs_eff = vs + self.source_shift;
+        let vp = (vg - self.vt) / self.n_slope;
+        let mut i = self.i_s * Mosfet::f_interp((vp - vs_eff) / self.ut);
+        // mobility degradation / velocity saturation above threshold:
+        // flattens gm at high overdrive (Fig. 1's MI peak)
+        let vov = (vg - self.vt - self.n_slope * vs_eff).max(0.0);
+        i /= 1.0 + self.theta * vov;
+        i + self.leak
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pdk::{CMOS180, FINFET7};
+    use crate::util::propcheck::check;
+
+    #[test]
+    fn f_interp_asymptotes() {
+        // weak inversion: F(v) ~ e^v for very negative v
+        for v in [-20.0, -15.0, -10.0] {
+            let r = Mosfet::f_interp(v) / v.exp();
+            assert!((r - 1.0).abs() < 0.02, "v={v} ratio={r}");
+        }
+        // strong inversion: F(v) ~ (v/2)^2 for large v
+        for v in [40.0, 80.0] {
+            let r = Mosfet::f_interp(v) / (v / 2.0 * (v / 2.0));
+            assert!((r - 1.0).abs() < 0.1, "v={v} ratio={r}");
+        }
+        assert!(Mosfet::f_interp(0.0) > 0.0);
+    }
+
+    #[test]
+    fn forward_properties_paper_sec3a() {
+        // the three bullet properties of f(.,.) from Sec. III-A
+        check(1, 200, |g| -> Result<(), String> {
+            let dev = Mosfet::square(&CMOS180, Polarity::N);
+            let vg = g.f64_in(0.0, 1.8);
+            let vs = g.f64_in(0.0, 1.0);
+            let f = dev.forward(vg, vs);
+            crate::prop_assert!(f >= 0.0, "f must be non-negative");
+            // monotone in vg
+            let f_up = dev.forward(vg + 0.05, vs);
+            crate::prop_assert!(f_up >= f, "f must increase with Vg");
+            // anti-monotone in vs
+            let f_vs = dev.forward(vg, vs + 0.05);
+            crate::prop_assert!(f_vs <= f, "f must decrease with Vs");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn ids_zero_at_equal_sd() {
+        let dev = Mosfet::square(&CMOS180, Polarity::N);
+        for vg in [0.2, 0.5, 1.0] {
+            let i = dev.ids(vg, 0.3, 0.3);
+            assert!(i.abs() < 1e-18, "vg={vg} i={i}");
+        }
+    }
+
+    #[test]
+    fn ids_sign_reverses_with_sd_swap() {
+        let dev = Mosfet::square(&CMOS180, Polarity::N);
+        let a = dev.ids(0.8, 0.0, 0.5);
+        let b = dev.ids(0.8, 0.5, 0.0);
+        assert!(a > 0.0);
+        assert!((a + b).abs() < 1e-12 * a.abs().max(1.0));
+    }
+
+    #[test]
+    fn subthreshold_slope_matches_n() {
+        // in WI, I ~ exp(Vg/(n UT)): slope of ln(I) vs Vg = 1/(n UT)
+        let dev = Mosfet::square(&CMOS180, Polarity::N);
+        let vt = dev.vt_eff();
+        let (v1, v2) = (vt - 0.30, vt - 0.25);
+        let slope = ((dev.forward(v2, 0.0) - CMOS180.leak_floor).ln()
+            - (dev.forward(v1, 0.0) - CMOS180.leak_floor).ln())
+            / (v2 - v1);
+        let expect = 1.0 / (CMOS180.n_slope * ProcessNode::ut(27.0));
+        assert!(
+            (slope / expect - 1.0).abs() < 0.05,
+            "slope={slope} expect={expect}"
+        );
+    }
+
+    #[test]
+    fn square_law_in_strong_inversion() {
+        // I ~ (Vov)^2: doubling the overdrive quadruples the current
+        let dev = Mosfet::square(&CMOS180, Polarity::N);
+        let vt = dev.vt_eff();
+        let i1 = dev.forward(vt + 0.4, 0.0);
+        let i2 = dev.forward(vt + 0.8, 0.0);
+        // ideal square law gives 4.0; mobility degradation shaves it
+        let ratio = i2 / i1 * (1.0 + CMOS180.theta * 0.8) / (1.0 + CMOS180.theta * 0.4);
+        assert!((ratio - 4.0).abs() < 0.6, "ratio={ratio}");
+    }
+
+    #[test]
+    fn pmos_mirrors_nmos() {
+        let n = Mosfet::square(&CMOS180, Polarity::N);
+        let p = Mosfet::square(&CMOS180, Polarity::P);
+        let vdd = CMOS180.vdd;
+        let a = n.ids(0.9, 0.0, 0.6);
+        let b = p.ids(vdd - 0.9, vdd, vdd - 0.6);
+        assert!((a - b).abs() < 1e-9 * a.abs().max(1e-12), "a={a} b={b}");
+    }
+
+    #[test]
+    fn source_shift_reaches_femtoamp_floor() {
+        // Fig. 5a: source shifting pushes the minimum current to the
+        // leakage floor (~2 fA at 180nm)
+        let mut dev = Mosfet::square(&CMOS180, Polarity::N);
+        dev.source_shift = 0.3;
+        let i = dev.forward(0.0, 0.0);
+        assert!(i < 1e-14, "i={i}");
+        assert!(i >= CMOS180.leak_floor);
+    }
+
+    #[test]
+    fn body_bias_raises_threshold() {
+        let mut dev = Mosfet::square(&CMOS180, Polarity::N);
+        let i0 = dev.forward(0.3, 0.0);
+        dev.body_at_vdd = true;
+        let i1 = dev.forward(0.3, 0.0);
+        assert!(i1 < i0);
+    }
+
+    #[test]
+    fn gm_positive_and_peaks_in_wi_per_id() {
+        // gm/Id must decrease monotonically from WI to SI (Fig. 1)
+        let dev = Mosfet::square(&FINFET7, Polarity::N);
+        let vt = dev.vt_eff();
+        let mut last = f64::INFINITY;
+        for vov in [-0.25, -0.1, 0.0, 0.1, 0.25, 0.4] {
+            let vg = vt + vov;
+            let id = dev.forward(vg, 0.0) - FINFET7.leak_floor;
+            let gmid = dev.gm(vg, 0.0) / id;
+            assert!(gmid > 0.0);
+            assert!(gmid <= last * 1.02, "gm/Id not decreasing at vov={vov}");
+            last = gmid;
+        }
+    }
+
+    #[test]
+    fn temperature_increases_wi_current() {
+        // WI current rises steeply with T (lower Vt, higher UT)
+        let cold = Mosfet::square(&CMOS180, Polarity::N).at_temp(-45.0);
+        let hot = Mosfet::square(&CMOS180, Polarity::N).at_temp(125.0);
+        let vg = 0.25; // deep WI
+        assert!(hot.forward(vg, 0.0) > 10.0 * cold.forward(vg, 0.0));
+    }
+
+    #[test]
+    fn fin_quantization() {
+        let d1 = Mosfet::square(&FINFET7, Polarity::N).with_fins(1);
+        let d4 = Mosfet::square(&FINFET7, Polarity::N).with_fins(4);
+        let vg = d1.vt_eff() + 0.2;
+        let r = d4.forward(vg, 0.0) / d1.forward(vg, 0.0);
+        assert!((r - 4.0).abs() < 0.1, "r={r}");
+    }
+
+    #[test]
+    fn ft_calibration_point() {
+        let dev = Mosfet::square(&CMOS180, Polarity::N);
+        let vg = dev.vt_eff() + 0.3;
+        let ft = dev.ft_ghz(vg, 0.0);
+        assert!((ft - CMOS180.ft_si_ghz).abs() / CMOS180.ft_si_ghz < 0.01);
+    }
+}

@@ -1,0 +1,101 @@
+//! Figure-of-merit sweeps (Fig. 1): transconductance efficiency gm/Id and
+//! the gm/Id · f_T product versus overdrive voltage, per process node.
+
+use super::ekv::Mosfet;
+use crate::pdk::{Polarity, ProcessNode};
+
+/// One sweep point of Fig. 1.
+#[derive(Clone, Debug)]
+pub struct FomPoint {
+    /// overdrive V_gs − V_th [V]
+    pub vov: f64,
+    /// gm/Id [1/V]
+    pub gm_over_id: f64,
+    /// f_T [GHz]
+    pub ft_ghz: f64,
+    /// the paper's FOM: (gm/Id)·f_T [GHz/V]
+    pub fom: f64,
+}
+
+/// Sweep gm/Id and the FOM across overdrive for a node (Fig. 1 curves).
+pub fn fom_sweep(node: &'static ProcessNode, npts: usize) -> Vec<FomPoint> {
+    let dev = Mosfet::square(node, Polarity::N);
+    let vt = dev.vt_eff();
+    let lo = -0.4;
+    let hi = (node.vdd - vt).min(1.0);
+    (0..npts)
+        .map(|i| {
+            let vov = lo + (hi - lo) * i as f64 / (npts - 1) as f64;
+            let vg = vt + vov;
+            let id = dev.forward(vg, 0.0) - node.leak_floor;
+            let gm = dev.gm(vg, 0.0);
+            let gm_over_id = gm / id.max(1e-30);
+            let ft = dev.ft_ghz(vg, 0.0);
+            FomPoint {
+                vov,
+                gm_over_id,
+                ft_ghz: ft,
+                fom: gm_over_id * ft,
+            }
+        })
+        .collect()
+}
+
+/// Overdrive voltage at which the FOM peaks (should land in moderate
+/// inversion — the Fig. 1 claim driving the whole paper).
+pub fn fom_peak_vov(node: &'static ProcessNode) -> f64 {
+    let pts = fom_sweep(node, 141);
+    pts.iter()
+        .max_by(|a, b| a.fom.partial_cmp(&b.fom).unwrap())
+        .map(|p| p.vov)
+        .unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pdk::{CMOS180, CMOS22, FINFET7};
+
+    #[test]
+    fn gm_over_id_bounded_by_wi_limit() {
+        // gm/Id <= 1/(n UT): the weak-inversion limit
+        for node in [&CMOS180, &CMOS22, &FINFET7] {
+            let limit = 1.0 / (node.n_slope * ProcessNode::ut(27.0));
+            for p in fom_sweep(node, 41) {
+                assert!(
+                    p.gm_over_id <= limit * 1.05,
+                    "{}: gm/Id={} limit={limit}",
+                    node.name,
+                    p.gm_over_id
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn finfet_higher_wi_gm_over_id() {
+        // smaller n -> closer to the 1/UT ideal (Fig. 1: 7nm curve on top)
+        let p7 = fom_sweep(&FINFET7, 41);
+        let p180 = fom_sweep(&CMOS180, 41);
+        assert!(p7[0].gm_over_id > p180[0].gm_over_id);
+    }
+
+    #[test]
+    fn fom_peaks_in_moderate_inversion() {
+        // Fig. 1: the efficiency-speed product peaks near Vov ~ 0 (MI)
+        for node in [&CMOS180, &CMOS22, &FINFET7] {
+            let peak = fom_peak_vov(node);
+            assert!(
+                (-0.15..0.35).contains(&peak),
+                "{}: FOM peak at vov={peak}",
+                node.name
+            );
+        }
+    }
+
+    #[test]
+    fn ft_increases_with_overdrive() {
+        let pts = fom_sweep(&CMOS180, 41);
+        assert!(pts.last().unwrap().ft_ghz > pts[0].ft_ghz * 10.0);
+    }
+}

@@ -1,0 +1,80 @@
+//! Pelgrom-law mismatch sampling (the paper's [9], [28]).
+//!
+//! σ(ΔV_T) = A_VT / sqrt(W·L),  σ(Δβ/β) = A_β / sqrt(W·L), with W·L in µm²
+//! and A_VT in mV·µm.  FinFET devices quantize W to fins, so minimum-size
+//! devices at 7 nm see *larger relative* mismatch despite the smaller A_VT
+//! — Fig. 13b/c's story.
+
+use super::ekv::Mosfet;
+use crate::pdk::ProcessNode;
+use crate::util::rng::Rng;
+
+/// Mismatch sampler for one process node.
+#[derive(Clone, Debug)]
+pub struct MismatchModel {
+    pub node: &'static ProcessNode,
+}
+
+impl MismatchModel {
+    pub fn new(node: &'static ProcessNode) -> Self {
+        Self { node }
+    }
+
+    /// σ(ΔV_T) [V] for a device of area `w_um * l_um`.
+    pub fn sigma_vt(&self, w_um: f64, l_um: f64) -> f64 {
+        self.node.avt_mv_um * 1e-3 / (w_um * l_um).sqrt()
+    }
+
+    /// σ(Δβ/β) (fractional) for a device of given area.
+    pub fn sigma_beta(&self, w_um: f64, l_um: f64) -> f64 {
+        self.node.abeta_pct_um * 0.01 / (w_um * l_um).sqrt()
+    }
+
+    /// Sample mismatch onto a device (returns a perturbed clone).
+    pub fn sample(&self, dev: &Mosfet, rng: &mut Rng) -> Mosfet {
+        let mut d = dev.clone();
+        d.dvt = rng.gauss_ms(0.0, self.sigma_vt(dev.w_um, dev.l_um));
+        d.dbeta = rng.gauss_ms(0.0, self.sigma_beta(dev.w_um, dev.l_um));
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pdk::{Polarity, CMOS180, FINFET7};
+    use crate::util::stats::summarize;
+
+    #[test]
+    fn sigma_scales_with_area() {
+        let m = MismatchModel::new(&CMOS180);
+        // quadrupling area halves sigma
+        let s1 = m.sigma_vt(1.0, 1.0);
+        let s4 = m.sigma_vt(2.0, 2.0);
+        assert!((s1 / s4 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sampled_moments_match_pelgrom() {
+        let m = MismatchModel::new(&CMOS180);
+        let dev = Mosfet::square(&CMOS180, Polarity::N);
+        let mut rng = Rng::new(5);
+        let dvts: Vec<f64> = (0..5000)
+            .map(|_| m.sample(&dev, &mut rng).dvt)
+            .collect();
+        let s = summarize(&dvts);
+        let expect = m.sigma_vt(dev.w_um, dev.l_um);
+        assert!(s.mean.abs() < 0.1 * expect);
+        assert!((s.std / expect - 1.0).abs() < 0.05, "std={} expect={expect}", s.std);
+    }
+
+    #[test]
+    fn min_size_finfet_worse_relative_mismatch_than_large_cmos() {
+        let m7 = MismatchModel::new(&FINFET7);
+        let m180 = MismatchModel::new(&CMOS180);
+        // one-fin minimum device vs a comfortably sized 180nm device
+        let s7 = m7.sigma_vt(FINFET7.wmin_um, FINFET7.lmin_um);
+        let s180 = m180.sigma_vt(2.0, 0.5);
+        assert!(s7 > s180, "s7={s7} s180={s180}");
+    }
+}

@@ -1,0 +1,12 @@
+//! Device models: EKV all-region MOSFET (planar + FinFET), diodes,
+//! Pelgrom mismatch, noise PSDs and the Fig. 1 figure-of-merit sweeps.
+
+pub mod diode;
+pub mod ekv;
+pub mod fom;
+pub mod mismatch;
+pub mod noise;
+
+pub use diode::{Diode, MosDiode};
+pub use ekv::Mosfet;
+pub use mismatch::MismatchModel;

@@ -1,0 +1,65 @@
+//! Device noise PSDs for the SNR analysis (Sec. IV-L3).
+//!
+//! Channel thermal noise `4kT·γ·gm` (γ: 2/3 SI, 1/2 WI where the channel is
+//! shot-noise-like `2qI`), used by `analysis::snr` to verify the paper's
+//! claim that N parallel S-AC blocks improve SNR by ~2× per doubling
+//! (coherent signal vs incoherent noise summation, eq. 31-36).
+
+use super::ekv::Mosfet;
+
+const KB: f64 = 1.380_649e-23;
+const Q: f64 = 1.602_176_634e-19;
+
+/// Current-noise PSD of a saturated device at its operating point [A²/Hz].
+pub fn channel_noise_psd(dev: &Mosfet, vg: f64, vs: f64) -> f64 {
+    let t_k = dev.t_c + 273.15;
+    let id = dev.forward(vg, vs) - dev.node.leak_floor;
+    let gm = dev.gm(vg, vs);
+    let ic = dev.inversion_coefficient(vg, vs);
+    if ic < 0.1 {
+        // weak inversion: full shot noise
+        2.0 * Q * id.max(0.0)
+    } else {
+        // moderate/strong: thermal with gamma interpolated 1/2 -> 2/3
+        let gamma = 0.5 + (2.0 / 3.0 - 0.5) * (ic / (ic + 10.0));
+        4.0 * KB * t_k * gamma * gm
+    }
+}
+
+/// RMS noise current over bandwidth `bw_hz` [A].
+pub fn rms_noise(dev: &Mosfet, vg: f64, vs: f64, bw_hz: f64) -> f64 {
+    (channel_noise_psd(dev, vg, vs) * bw_hz).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pdk::{Polarity, CMOS180};
+
+    #[test]
+    fn wi_is_shot_noise() {
+        let dev = Mosfet::square(&CMOS180, Polarity::N);
+        let vg = dev.vt_eff() - 0.25; // WI
+        let id = dev.forward(vg, 0.0) - CMOS180.leak_floor;
+        let psd = channel_noise_psd(&dev, vg, 0.0);
+        assert!((psd / (2.0 * Q * id) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn noise_grows_with_current() {
+        let dev = Mosfet::square(&CMOS180, Polarity::N);
+        let vt = dev.vt_eff();
+        let lo = channel_noise_psd(&dev, vt - 0.2, 0.0);
+        let hi = channel_noise_psd(&dev, vt + 0.4, 0.0);
+        assert!(hi > lo);
+    }
+
+    #[test]
+    fn rms_scales_sqrt_bandwidth() {
+        let dev = Mosfet::square(&CMOS180, Polarity::N);
+        let vg = dev.vt_eff() + 0.1;
+        let r1 = rms_noise(&dev, vg, 0.0, 1e6);
+        let r4 = rms_noise(&dev, vg, 0.0, 4e6);
+        assert!((r4 / r1 - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,17 @@
+//! # S-AC: Shape-based Analog Computing
+//!
+//! Full-stack reproduction of *"Process, Bias and Temperature Scalable
+//! CMOS Analog Computing Circuits for Machine Learning"* (Kumar et al.,
+//! IEEE TCSI 2022).  See DESIGN.md for the architecture and EXPERIMENTS.md
+//! for paper-vs-measured results.
+pub mod util;
+pub mod pdk;
+pub mod device;
+pub mod sac;
+pub mod cells;
+pub mod analysis;
+pub mod data;
+pub mod nn;
+pub mod repro;
+pub mod runtime;
+pub mod coordinator;

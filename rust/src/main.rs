@@ -1,0 +1,210 @@
+//! `sac` — the S-AC framework CLI.
+//!
+//! Subcommands:
+//!   repro <id|all>        regenerate a paper table/figure (results/*.csv)
+//!   serve <task>          batched inference via the AOT PJRT executable
+//!   characterize <cell>   DC sweep of a standard cell across corners
+//!   mc <cell>             Monte-Carlo mismatch campaign
+//!   info                  stack/PDK/artifact status
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use sac::analysis::{dc, montecarlo as mc};
+use sac::cells::activations::CellKind;
+use sac::cells::CircuitCorner;
+use sac::coordinator::InferenceServer;
+use sac::data::Dataset;
+use sac::pdk::{regime::Regime, ProcessNode};
+use sac::repro::{self, ReproOpts};
+use sac::runtime::{default_artifacts_dir, Runtime};
+use sac::util::cli::Args;
+use sac::util::table::{write_xy_csv, Table};
+
+const USAGE: &str = "\
+sac — shape-based analog computing framework (TCSI 2022 reproduction)
+
+USAGE:
+  sac repro <id|all> [--out results] [--limit N] [--threads N] [--mc-trials N]
+  sac serve <task> [--artifacts DIR] [--requests N]
+  sac characterize <cell> [--node NAME] [--regime WI|MI|SI] [--temp C] [--out results]
+  sac mc <cell> [--node NAME] [--trials N]
+  sac info [--artifacts DIR]
+
+ids: fig1 fig2a fig3 fig4 fig5 fig7 fig8 fig10 fig12 fig13 fig15
+     table1 table2 table3 table4 table5 | all
+cells: cosh sinh relu phi1 phi2 softplus
+tasks: xor arem digits
+";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() || argv[0] == "--help" || argv[0] == "help" {
+        print!("{USAGE}");
+        return;
+    }
+    if let Err(e) = dispatch(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, &["verbose"])?;
+    match args.command.as_str() {
+        "repro" => cmd_repro(&args),
+        "serve" => cmd_serve(&args),
+        "characterize" => cmd_characterize(&args),
+        "mc" => cmd_mc(&args),
+        "info" => cmd_info(&args),
+        other => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}
+
+fn cmd_repro(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let opts = ReproOpts {
+        out: PathBuf::from(args.get_or("out", "results")),
+        limit: args.get_usize("limit", 1000)?,
+        threads: args.get_usize("threads", sac::util::pool::default_threads())?,
+        mc_trials: args.get_usize("mc-trials", 40)?,
+    };
+    let ids: Vec<&str> = if id == "all" {
+        repro::ALL_IDS.to_vec()
+    } else {
+        vec![id]
+    };
+    for id in ids {
+        let t0 = std::time::Instant::now();
+        match repro::run(id, &opts) {
+            Ok(rep) => {
+                println!("━━━ {id} ({:.1}s) ━━━", t0.elapsed().as_secs_f64());
+                println!("{rep}");
+            }
+            Err(e) => println!("━━━ {id} FAILED: {e:#}"),
+        }
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let task = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("digits");
+    let artifacts = PathBuf::from(
+        args.get_or("artifacts", default_artifacts_dir().to_str().unwrap()),
+    );
+    let n_req = args.get_usize("requests", 256)?;
+    let rt = Runtime::new(&artifacts)?;
+    println!("PJRT platform: {}", rt.platform());
+    let mut server = InferenceServer::new(&rt, task)?;
+    println!(
+        "serving {task}: net {:?}, batch={} dim={}",
+        server.net.sizes, server.batcher.batch_size, server.batcher.dim
+    );
+    let ds = Dataset::load_sacd(&artifacts.join(format!("{task}_test.bin")))?;
+    let n = n_req.min(ds.n);
+    for i in 0..n {
+        server.submit(ds.row(i).to_vec());
+    }
+    let results = server.drain()?;
+    let mut correct = 0;
+    for &(id, pred, _) in &results {
+        if pred == ds.y[id as usize] as usize {
+            correct += 1;
+        }
+    }
+    println!(
+        "accuracy {}/{} = {:.1}%  |  {}",
+        correct,
+        n,
+        correct as f64 / n as f64 * 100.0,
+        server.metrics.report()
+    );
+    Ok(())
+}
+
+fn cmd_characterize(args: &Args) -> Result<()> {
+    let cell = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("relu");
+    let kind = CellKind::by_name(cell)
+        .ok_or_else(|| anyhow::anyhow!("unknown cell {cell:?}"))?;
+    let node = ProcessNode::by_name(args.get_or("node", "180nm"))
+        .ok_or_else(|| anyhow::anyhow!("unknown node"))?;
+    let regime = Regime::by_name(args.get_or("regime", "WI"))
+        .ok_or_else(|| anyhow::anyhow!("unknown regime"))?;
+    let temp = args.get_f64("temp", 27.0)?;
+    let out = PathBuf::from(args.get_or("out", "results"));
+    std::fs::create_dir_all(&out)?;
+    let cc = CircuitCorner::new(node, regime).at_temp(temp);
+    let zs = dc::grid(-2.0, 2.0, 41);
+    let ys = dc::sweep_cell(kind, &cc, &zs);
+    let path = out.join(format!("char_{}_{}_{}.csv", cell, node.name, regime.short()));
+    write_xy_csv(&path, "x", &zs, &[(cell, &ys[..])])?;
+    println!(
+        "{}",
+        sac::util::table::ascii_plot(&[(cell, &ys[..])], 12, 64)
+    );
+    println!("wrote {}", path.display());
+    Ok(())
+}
+
+fn cmd_mc(args: &Args) -> Result<()> {
+    let cell = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("relu");
+    let kind = CellKind::by_name(cell)
+        .ok_or_else(|| anyhow::anyhow!("unknown cell {cell:?}"))?;
+    let node = ProcessNode::by_name(args.get_or("node", "180nm"))
+        .ok_or_else(|| anyhow::anyhow!("unknown node"))?;
+    let cfg = mc::McConfig {
+        trials: args.get_usize("trials", 40)?,
+        ..Default::default()
+    };
+    let r = mc::run_cell_mc(kind, node, Regime::WeakInversion, &cfg);
+    println!(
+        "MC {} @ {} (WI, {} trials): max deviation {:.2}% of full scale",
+        cell, node.name, cfg.trials, r.max_pct_dev
+    );
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let artifacts = PathBuf::from(
+        args.get_or("artifacts", default_artifacts_dir().to_str().unwrap()),
+    );
+    let mut t = Table::new("process nodes", &["node", "vdd", "vt0", "n", "I_spec", "AVT"]);
+    for n in ProcessNode::all() {
+        t.row(vec![
+            n.name.into(),
+            format!("{}", n.vdd),
+            format!("{}", n.vt0),
+            format!("{}", n.n_slope),
+            format!("{:.1e}", n.i_spec),
+            format!("{}", n.avt_mv_um),
+        ]);
+    }
+    println!("{}", t.render());
+    match Runtime::new(&artifacts) {
+        Ok(rt) => {
+            println!("artifacts @ {}: PJRT {}", artifacts.display(), rt.platform());
+            for (name, e) in &rt.manifest.entries {
+                println!("  {name}: {} ({} params)", e.file, e.params.len());
+            }
+        }
+        Err(e) => println!("artifacts not ready: {e:#}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,251 @@
+//! S-AC neural-network evaluation (Sec. V): the algorithm→hardware mapping
+//! of eq. 40, scored on the exported test sets at every (node, regime)
+//! corner — the Table IV "H/W" columns — plus the Fig. 15 confusion matrix
+//! and operating-regime census.
+
+use std::cell::RefCell;
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::cells::activations as act;
+use crate::cells::multiplier::Multiplier;
+use crate::cells::HProvider;
+use crate::data::{Dataset, TrainedNet};
+use crate::pdk::{ProcessNode, regime::Regime};
+use crate::util::pool;
+use crate::util::stats::Confusion;
+
+/// Activation gain mapping pre-activation currents into the cell's input
+/// range (mirrors python nets.sac_forward's `act_gain`).
+pub const ACT_GAIN: f64 = 4.0;
+
+/// Forward one input row through the S-AC network on a backend.
+pub fn forward(
+    net: &TrainedNet,
+    p: &dyn HProvider,
+    mult: &Multiplier,
+    x: &[f32],
+) -> Vec<f64> {
+    let nl = net.n_layers();
+    let mut h: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+    for li in 0..nl {
+        let n_in = net.sizes[li];
+        let n_out = net.sizes[li + 1];
+        let mut out = vec![0.0; n_out];
+        for k in 0..n_out {
+            // eq. 40: the dot product as 4-term S-AC multiplies, KCL-summed
+            let mut acc = net.biases[li][k];
+            for i in 0..n_in {
+                acc += mult.mul(p, h[i], net.w(li, i, k));
+            }
+            out[k] = acc;
+        }
+        if li < nl - 1 {
+            for v in out.iter_mut() {
+                let z = *v * ACT_GAIN;
+                *v = match net.activation.as_str() {
+                    "phi1" => act::phi1_cell(p, z, 1.0, net.splines, 0.5),
+                    "phi2" => act::phi2_cell(p, z, 1.0, net.splines, 0.5) - 1.0,
+                    "relu" => act::relu_cell(p, z, 0.05),
+                    "softplus" => act::softplus_cell(p, z, net.splines, 0.5),
+                    other => panic!("unknown activation {other}"),
+                };
+            }
+        }
+        h = out;
+    }
+    h
+}
+
+/// Evaluate accuracy + confusion over a dataset (parallel over samples).
+pub fn evaluate<P>(
+    net: &TrainedNet,
+    make_provider: P,
+    ds: &Dataset,
+    limit: usize,
+    threads: usize,
+) -> Confusion
+where
+    P: Fn() -> Box<dyn HProvider> + Sync,
+{
+    let n = ds.n.min(limit);
+    let k = *net.sizes.last().unwrap();
+    // calibrate the multiplier once (operating point is a property of the
+    // backend family, not of the sample)
+    let cal = {
+        let p = make_provider();
+        Multiplier::calibrate(p.as_ref(), net.splines, net.c)
+    };
+    let preds: Vec<usize> = pool::parallel_map(n, threads, |i| {
+        let p = make_provider();
+        let m = cal.clone();
+        let logits = forward(net, p.as_ref(), &m, ds.row(i));
+        logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(j, _)| j)
+            .unwrap_or(0)
+    });
+    let mut cm = Confusion::new(k);
+    for (i, &pred) in preds.iter().enumerate() {
+        cm.record(ds.y[i] as usize, pred);
+    }
+    cm
+}
+
+/// Load a trained net from `artifacts/weights_<task>.json`.
+pub fn load_net(artifacts: &Path, task: &str) -> Result<TrainedNet> {
+    TrainedNet::load(&artifacts.join(format!("weights_{task}.json")))
+}
+
+// ---------------------------------------------------------------------------
+// Operating-regime census (Fig. 15b)
+// ---------------------------------------------------------------------------
+
+/// Provider wrapper that records every branch input it evaluates.
+pub struct CensusProvider<'a> {
+    pub inner: &'a dyn HProvider,
+    pub log: RefCell<Vec<f64>>,
+}
+
+impl<'a> HProvider for CensusProvider<'a> {
+    fn h(&self, x: &[f64], c: f64) -> f64 {
+        self.log.borrow_mut().extend_from_slice(x);
+        self.inner.h(x, c)
+    }
+
+    fn h_raw(&self, x: &[f64], c: f64) -> f64 {
+        self.log.borrow_mut().extend_from_slice(x);
+        self.inner.h_raw(x, c)
+    }
+
+    fn label(&self) -> String {
+        format!("census({})", self.inner.label())
+    }
+}
+
+/// Census result: fraction of branch transistors operating outside the
+/// intended regime during inference.
+#[derive(Clone, Debug)]
+pub struct Census {
+    pub total: usize,
+    pub shifted: usize,
+    pub fraction_shifted: f64,
+}
+
+/// Classify recorded branch inputs: algorithmic value ↦ branch current
+/// `v·I_bias(regime)`; inversion coefficient against the branch device's
+/// specific current; compare with the intended regime.
+pub fn regime_census(
+    node: &'static ProcessNode,
+    regime: Regime,
+    values: &[f64],
+) -> Census {
+    let bias = node.bias_current(regime);
+    let dev = crate::device::Mosfet::square(node, crate::pdk::Polarity::N);
+    let i_s = node.i_spec_at(27.0) * (dev.w_um / dev.l_um);
+    let mut shifted = 0;
+    let mut total = 0;
+    for &v in values {
+        let i = (v.abs() * bias).max(node.leak_floor);
+        let ic = i / i_s;
+        total += 1;
+        if Regime::classify_ic(ic) != regime {
+            shifted += 1;
+        }
+    }
+    Census {
+        total,
+        shifted,
+        fraction_shifted: if total == 0 {
+            0.0
+        } else {
+            shifted as f64 / total as f64
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cells::Algorithmic;
+
+    fn toy_net() -> TrainedNet {
+        TrainedNet {
+            task: "toy".into(),
+            sizes: vec![2, 3, 2],
+            activation: "phi1".into(),
+            splines: 3,
+            c: 1.0,
+            acc_sw: 0.0,
+            acc_sac_algorithmic: 0.0,
+            // hand-built XOR-ish weights
+            weights: vec![
+                vec![0.8, -0.8, 0.5, -0.8, 0.8, 0.5],
+                vec![0.9, -0.9, 0.9, -0.9, -0.9, 0.9],
+            ],
+            biases: vec![vec![-0.2, -0.2, -0.6], vec![0.0, 0.0]],
+        }
+    }
+
+    #[test]
+    fn forward_shapes_and_finite() {
+        let net = toy_net();
+        let p = Algorithmic::relu();
+        let m = Multiplier::calibrate(&p, 3, 1.0);
+        let y = forward(&net, &p, &m, &[0.5, -0.5]);
+        assert_eq!(y.len(), 2);
+        assert!(y.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn evaluate_runs_parallel() {
+        // single-layer sign classifier: w = [[1,-1],[0,0]] ⇒ argmax tracks
+        // sign(x0); exercises the parallel evaluate path end to end.
+        let net = TrainedNet {
+            task: "sign".into(),
+            sizes: vec![2, 2],
+            activation: "phi1".into(),
+            splines: 3,
+            c: 1.0,
+            acc_sw: 0.0,
+            acc_sac_algorithmic: 0.0,
+            weights: vec![vec![1.0, -1.0, 0.0, 0.0]],
+            biases: vec![vec![0.0, 0.0]],
+        };
+        let xor = crate::data::gen_xor(64, 5, 0.0);
+        // relabel: class = 1 if x0 < 0
+        let mut ds = xor.clone();
+        for i in 0..ds.n {
+            ds.y[i] = (ds.row(i)[0] < 0.0) as u16;
+        }
+        let cm = evaluate(&net, || Box::new(Algorithmic::relu()), &ds, 64, 3);
+        assert_eq!(cm.total(), 64);
+        assert!(cm.accuracy() > 0.95, "acc={}", cm.accuracy());
+    }
+
+    #[test]
+    fn census_counts_shifts() {
+        use crate::pdk::CMOS180;
+        // values spanning decades: some land outside WI
+        let vals = [0.001, 0.5, 1.0, 50.0, 2000.0];
+        let c = regime_census(&CMOS180, Regime::WeakInversion, &vals);
+        assert_eq!(c.total, 5);
+        assert!(c.shifted >= 1 && c.shifted < 5);
+        assert!((0.0..=1.0).contains(&c.fraction_shifted));
+    }
+
+    #[test]
+    fn census_provider_records() {
+        let inner = Algorithmic::relu();
+        let cp = CensusProvider {
+            inner: &inner,
+            log: RefCell::new(Vec::new()),
+        };
+        let _ = cp.h(&[0.5, 1.0], 1.0);
+        let _ = cp.h_raw(&[2.0], 0.5);
+        assert_eq!(cp.log.borrow().len(), 3);
+    }
+}

@@ -1,0 +1,277 @@
+//! Process design kits (PDK) — the synthetic foundry decks.
+//!
+//! The paper evaluates on a planar CMOS 180 nm foundry PDK and the ASAP7
+//! 7 nm FinFET predictive PDK (plus a 22 nm point in Fig. 1).  Neither is
+//! redistributable, so each node here is a *PTM/ASAP7-inspired* parameter
+//! set for the EKV-style all-region device model in `crate::device`.  The
+//! numbers are chosen to reproduce the paper's qualitative physics:
+//!
+//!  * supply: 1.8 V (180 nm) / 0.8 V (22 nm) / 0.7 V (7 nm)  [Fig. 1 caption]
+//!  * subthreshold slope factor `n` approaching 1 for FinFET (better gate
+//!    control) — this is what makes moderate inversion dominate the 7 nm
+//!    dynamic range (Fig. 1's story);
+//!  * Pelgrom mismatch coefficients shrinking with feature size but
+//!    mismatch *increasing* for minimum-size devices;
+//!  * temperature behaviour: `U_T = kT/q`, `V_T0(T)` linear decrease,
+//!    mobility `~ (T/T0)^-1.5`.
+
+pub mod regime;
+
+use regime::Regime;
+
+/// Device polarity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Polarity {
+    N,
+    P,
+}
+
+/// Process node family.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NodeKind {
+    PlanarCmos,
+    FinFet,
+}
+
+/// A process node: everything the device model needs.
+#[derive(Clone, Debug)]
+pub struct ProcessNode {
+    pub name: &'static str,
+    pub kind: NodeKind,
+    /// feature size in nm (drawn channel length)
+    pub feature_nm: f64,
+    /// nominal supply [V]
+    pub vdd: f64,
+    /// zero-bias threshold voltage at 300 K [V] (NMOS; PMOS mirrored)
+    pub vt0: f64,
+    /// subthreshold slope factor n (1 + Cd/Cox); FinFETs near 1
+    pub n_slope: f64,
+    /// specific current I_S = 2 n beta U_T^2 at W/L=1, 300 K [A]
+    pub i_spec: f64,
+    /// threshold tempco dVt/dT [V/K] (negative)
+    pub vt_tempco: f64,
+    /// mobility temperature exponent (I ~ (T/T0)^-m in SI)
+    pub mobility_exp: f64,
+    /// Pelgrom area coefficient for Vt mismatch [mV·µm]
+    pub avt_mv_um: f64,
+    /// Pelgrom coefficient for current-factor mismatch [%·µm]
+    pub abeta_pct_um: f64,
+    /// minimum device width [µm] (per-fin width for FinFET)
+    pub wmin_um: f64,
+    /// minimum channel length [µm]
+    pub lmin_um: f64,
+    /// transit-frequency scale: f_T at strong inversion, V_ov = 0.3 V [GHz]
+    pub ft_si_ghz: f64,
+    /// junction/diode leakage floor [A] (deep-threshold floor, Fig. 5a)
+    pub leak_floor: f64,
+    /// gate capacitance per area [fF/µm²] — used by the energy model
+    pub cox_ff_um2: f64,
+    /// mobility-degradation / velocity-saturation factor θ [1/V]:
+    /// I_SI ~ F(v)/(1 + θ·V_ov).  Stronger at short channel — this is what
+    /// pushes the gm/Id·f_T peak into moderate inversion (Fig. 1).
+    pub theta: f64,
+    /// analog cell device sizing [µm] — matched-pair sizing a designer
+    /// uses for the S-AC branches/mirrors (well above minimum, Pelgrom)
+    pub analog_w_um: f64,
+    pub analog_l_um: f64,
+}
+
+/// CMOS 180 nm planar node (paper's "180nm").
+pub const CMOS180: ProcessNode = ProcessNode {
+    name: "cmos180",
+    kind: NodeKind::PlanarCmos,
+    feature_nm: 180.0,
+    vdd: 1.8,
+    vt0: 0.45,
+    n_slope: 1.35,
+    i_spec: 6.0e-7,
+    vt_tempco: -1.0e-3,
+    mobility_exp: 1.5,
+    avt_mv_um: 5.0,
+    abeta_pct_um: 1.0,
+    wmin_um: 0.22,
+    lmin_um: 0.18,
+    ft_si_ghz: 50.0,
+    leak_floor: 2.0e-15, // ~1.97 fA NMOS floor measured in the paper (Fig. 5a)
+    cox_ff_um2: 8.5,
+    theta: 0.6,
+    analog_w_um: 10.0,
+    analog_l_um: 2.5,
+};
+
+/// CMOS 22 nm planar node (Fig. 1's middle curve).
+pub const CMOS22: ProcessNode = ProcessNode {
+    name: "cmos22",
+    kind: NodeKind::PlanarCmos,
+    feature_nm: 22.0,
+    vdd: 0.8,
+    vt0: 0.38,
+    n_slope: 1.18,
+    i_spec: 2.0e-7,
+    vt_tempco: -0.8e-3,
+    mobility_exp: 1.4,
+    avt_mv_um: 2.5,
+    abeta_pct_um: 0.6,
+    wmin_um: 0.08,
+    lmin_um: 0.022,
+    ft_si_ghz: 280.0,
+    leak_floor: 8.0e-15,
+    cox_ff_um2: 14.0,
+    theta: 1.8,
+    analog_w_um: 2.0,
+    analog_l_um: 0.5,
+};
+
+/// FinFET 7 nm node (ASAP7-inspired, paper's "7nm").
+pub const FINFET7: ProcessNode = ProcessNode {
+    name: "finfet7",
+    kind: NodeKind::FinFet,
+    feature_nm: 7.0,
+    vdd: 0.7,
+    vt0: 0.32,
+    n_slope: 1.05, // near-ideal gate control
+    i_spec: 2.5e-8, // per-square; minimum cells bias at nA scale (paper
+                    // drives the 7nm WTA at 10 nA inputs, Fig. 10 caption)
+    vt_tempco: -0.7e-3,
+    mobility_exp: 1.2,
+    avt_mv_um: 0.6,
+    abeta_pct_um: 0.4,
+    wmin_um: 0.027, // effective per-fin width (2*Hfin + Tfin ≈ 27 nm)
+    lmin_um: 0.007,
+    ft_si_ghz: 450.0,
+    leak_floor: 3.0e-14,
+    cox_ff_um2: 22.0,
+    theta: 3.0,
+    analog_w_um: 4.32,
+    analog_l_um: 0.1,
+};
+
+impl ProcessNode {
+    /// Look up a node by name (CLI spelling).
+    pub fn by_name(name: &str) -> Option<&'static ProcessNode> {
+        match name {
+            "cmos180" | "180nm" | "180" => Some(&CMOS180),
+            "cmos22" | "22nm" | "22" => Some(&CMOS22),
+            "finfet7" | "7nm" | "7" => Some(&FINFET7),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> [&'static ProcessNode; 3] {
+        [&CMOS180, &CMOS22, &FINFET7]
+    }
+
+    /// The two nodes the paper's evaluation section sweeps.
+    pub fn paper_pair() -> [&'static ProcessNode; 2] {
+        [&CMOS180, &FINFET7]
+    }
+
+    /// Thermal voltage U_T = kT/q [V] at temperature `t_c` in Celsius.
+    pub fn ut(t_c: f64) -> f64 {
+        const K_OVER_Q: f64 = 8.617_333e-5; // V/K
+        K_OVER_Q * (t_c + 273.15)
+    }
+
+    /// Threshold voltage at temperature `t_c` [V].
+    pub fn vt0_at(&self, t_c: f64) -> f64 {
+        self.vt0 + self.vt_tempco * (t_c - 27.0)
+    }
+
+    /// Specific current at temperature `t_c` [A] (U_T² growth times
+    /// mobility decay).
+    pub fn i_spec_at(&self, t_c: f64) -> f64 {
+        let t = t_c + 273.15;
+        let t0 = 300.15;
+        let ut_ratio = (t / t0) * (t / t0);
+        self.i_spec * ut_ratio * (t / t0).powf(-self.mobility_exp)
+    }
+
+    /// Gate-bias point [V] that centres the device in `regime` (for a
+    /// square device, V_S = 0).  WI: V_ov < -4 nU_T below V_T; MI: at V_T;
+    /// SI: well above.
+    pub fn bias_for(&self, regime: Regime, t_c: f64) -> f64 {
+        let ut = Self::ut(t_c);
+        let vt = self.vt0_at(t_c);
+        match regime {
+            Regime::WeakInversion => vt - 5.0 * self.n_slope * ut,
+            Regime::ModerateInversion => vt + 1.0 * self.n_slope * ut,
+            Regime::StrongInversion => {
+                // keep headroom on low-vdd nodes
+                (vt + 8.0 * self.n_slope * ut).min(0.85 * self.vdd)
+            }
+        }
+    }
+
+    /// Unit-cell bias current in `regime` [A]: the "C" scale the circuits
+    /// run at.  WI ~ 0.05·I_S, MI ~ I_S, SI ~ 20·I_S  (inversion-coefficient
+    /// 0.05 / 1 / 20, the usual IC boundaries).
+    pub fn bias_current(&self, regime: Regime) -> f64 {
+        match regime {
+            Regime::WeakInversion => 0.05 * self.i_spec,
+            Regime::ModerateInversion => 1.0 * self.i_spec,
+            Regime::StrongInversion => 20.0 * self.i_spec,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(ProcessNode::by_name("180nm").unwrap().name, "cmos180");
+        assert_eq!(ProcessNode::by_name("finfet7").unwrap().name, "finfet7");
+        assert!(ProcessNode::by_name("3nm").is_none());
+    }
+
+    #[test]
+    fn thermal_voltage() {
+        let ut27 = ProcessNode::ut(27.0);
+        assert!((ut27 - 0.02587).abs() < 2e-4, "U_T(27C)={ut27}");
+        assert!(ProcessNode::ut(125.0) > ut27);
+        assert!(ProcessNode::ut(-45.0) < ut27);
+    }
+
+    #[test]
+    fn vt_decreases_with_temperature() {
+        for node in ProcessNode::all() {
+            assert!(node.vt0_at(125.0) < node.vt0_at(27.0));
+            assert!(node.vt0_at(-45.0) > node.vt0_at(27.0));
+        }
+    }
+
+    #[test]
+    fn finfet_has_better_gate_control() {
+        assert!(FINFET7.n_slope < CMOS22.n_slope);
+        assert!(CMOS22.n_slope < CMOS180.n_slope);
+    }
+
+    #[test]
+    fn supplies_match_paper_caption() {
+        assert_eq!(CMOS180.vdd, 1.8);
+        assert_eq!(CMOS22.vdd, 0.8);
+        assert_eq!(FINFET7.vdd, 0.7);
+    }
+
+    #[test]
+    fn bias_ordering() {
+        for node in ProcessNode::all() {
+            let wi = node.bias_for(Regime::WeakInversion, 27.0);
+            let mi = node.bias_for(Regime::ModerateInversion, 27.0);
+            let si = node.bias_for(Regime::StrongInversion, 27.0);
+            assert!(wi < mi && mi < si, "{}", node.name);
+            assert!(si <= node.vdd);
+            let iw = node.bias_current(Regime::WeakInversion);
+            let im = node.bias_current(Regime::ModerateInversion);
+            let is = node.bias_current(Regime::StrongInversion);
+            assert!(iw < im && im < is);
+        }
+    }
+
+    #[test]
+    fn mismatch_coefficients_shrink_with_node() {
+        assert!(FINFET7.avt_mv_um < CMOS22.avt_mv_um);
+        assert!(CMOS22.avt_mv_um < CMOS180.avt_mv_um);
+    }
+}

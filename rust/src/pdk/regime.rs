@@ -1,0 +1,76 @@
+//! Transistor biasing regimes (Fig. 1): weak / moderate / strong inversion.
+
+use std::fmt;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Regime {
+    WeakInversion,
+    ModerateInversion,
+    StrongInversion,
+}
+
+impl Regime {
+    pub fn all() -> [Regime; 3] {
+        [
+            Regime::WeakInversion,
+            Regime::ModerateInversion,
+            Regime::StrongInversion,
+        ]
+    }
+
+    pub fn short(&self) -> &'static str {
+        match self {
+            Regime::WeakInversion => "WI",
+            Regime::ModerateInversion => "MI",
+            Regime::StrongInversion => "SI",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Regime> {
+        match name.to_ascii_uppercase().as_str() {
+            "WI" | "WEAK" => Some(Regime::WeakInversion),
+            "MI" | "MODERATE" => Some(Regime::ModerateInversion),
+            "SI" | "STRONG" => Some(Regime::StrongInversion),
+            _ => None,
+        }
+    }
+
+    /// Classify an operating point by inversion coefficient
+    /// IC = I_D / I_spec (Fig. 15b's regime census uses this).
+    pub fn classify_ic(ic: f64) -> Regime {
+        if ic < 0.1 {
+            Regime::WeakInversion
+        } else if ic < 10.0 {
+            Regime::ModerateInversion
+        } else {
+            Regime::StrongInversion
+        }
+    }
+}
+
+impl fmt::Display for Regime {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.short())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_names() {
+        for r in Regime::all() {
+            assert_eq!(Regime::by_name(r.short()), Some(r));
+        }
+        assert_eq!(Regime::by_name("weak"), Some(Regime::WeakInversion));
+        assert!(Regime::by_name("xx").is_none());
+    }
+
+    #[test]
+    fn ic_classification_boundaries() {
+        assert_eq!(Regime::classify_ic(0.01), Regime::WeakInversion);
+        assert_eq!(Regime::classify_ic(1.0), Regime::ModerateInversion);
+        assert_eq!(Regime::classify_ic(100.0), Regime::StrongInversion);
+    }
+}

@@ -1,0 +1,517 @@
+//! Figure regeneration (Figs. 1-15).  Each function computes the figure's
+//! data series, writes `results/figN*.csv`, and returns a printable report.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::analysis::{dc, montecarlo as mc, power};
+use crate::cells::activations::CellKind;
+use crate::cells::{wta, Algorithmic, CircuitCorner, HProvider};
+use crate::device::{fom, Mosfet};
+use crate::pdk::{Polarity, ProcessNode, regime::Regime, CMOS180, FINFET7};
+use crate::sac::splines;
+use crate::util::table::{ascii_plot, write_xy_csv, Table};
+
+/// Fig. 1: gm/Id and (gm/Id)·f_T vs overdrive across nodes.
+pub fn fig1(out: &Path) -> Result<String> {
+    let mut report = String::from("Fig. 1 — transconductance efficiency & FOM vs overdrive\n");
+    let npts = 61;
+    let mut series_gm: Vec<(String, Vec<f64>)> = Vec::new();
+    let mut series_fom: Vec<(String, Vec<f64>)> = Vec::new();
+    let mut vovs: Vec<f64> = Vec::new();
+    for node in ProcessNode::all() {
+        let pts = fom::fom_sweep(node, npts);
+        if vovs.is_empty() {
+            vovs = pts.iter().map(|p| p.vov).collect();
+        }
+        series_gm.push((node.name.to_string(), pts.iter().map(|p| p.gm_over_id).collect()));
+        series_fom.push((node.name.to_string(), pts.iter().map(|p| p.fom).collect()));
+        let peak = fom::fom_peak_vov(node);
+        report += &format!(
+            "  {}: gm/Id(WI)={:.1} 1/V, FOM peak at Vov={:+.3} V (moderate inversion)\n",
+            node.name,
+            pts[0].gm_over_id,
+            peak
+        );
+    }
+    let refs_gm: Vec<(&str, &[f64])> = series_gm
+        .iter()
+        .map(|(n, v)| (n.as_str(), v.as_slice()))
+        .collect();
+    write_xy_csv(&out.join("fig1_gm_over_id.csv"), "vov", &vovs, &refs_gm)?;
+    let refs_fom: Vec<(&str, &[f64])> = series_fom
+        .iter()
+        .map(|(n, v)| (n.as_str(), v.as_slice()))
+        .collect();
+    write_xy_csv(&out.join("fig1_fom.csv"), "vov", &vovs, &refs_fom)?;
+    report += &ascii_plot(&refs_gm, 10, 60);
+    Ok(report)
+}
+
+/// Fig. 2a: spline approximation of e^x for S = 1, 3.
+pub fn fig2a(out: &Path) -> Result<String> {
+    let xs = dc::grid(-2.0, 1.2, 65);
+    let exact: Vec<f64> = xs.iter().map(|&x| x.exp()).collect();
+    let s1: Vec<f64> = xs.iter().map(|&x| splines::exp_spline_approx(x, 1)).collect();
+    let s3: Vec<f64> = xs.iter().map(|&x| splines::exp_spline_approx(x, 3)).collect();
+    write_xy_csv(
+        &out.join("fig2a_spline_approx.csv"),
+        "x",
+        &xs,
+        &[("exp", &exact), ("s1", &s1), ("s3", &s3)],
+    )?;
+    let e1 = crate::util::stats::max_abs_dev(&exact, &s1);
+    let e3 = crate::util::stats::max_abs_dev(&exact, &s3);
+    let mut rep = format!(
+        "Fig. 2a — e^x spline approx: max err S=1 {e1:.3}, S=3 {e3:.3} (margin narrows)\n"
+    );
+    rep += &ascii_plot(&[("exp", &exact[..]), ("s1", &s1[..]), ("s3", &s3[..])], 10, 60);
+    Ok(rep)
+}
+
+/// Fig. 3: basic S-AC proto-shapes — spline counts, nodes, regimes.
+pub fn fig3(out: &Path) -> Result<String> {
+    let zs = dc::grid(-2.5, 1.5, 33);
+    let mut rep = String::from("Fig. 3 — proto-shape h(x)/Imax across nodes / regimes\n");
+    // (a,b): S=1 and S=3 at both nodes, WI
+    for s in [1usize, 3] {
+        let mut series: Vec<(String, Vec<f64>)> = Vec::new();
+        for node in ProcessNode::paper_pair() {
+            let cc = CircuitCorner::new(node, Regime::WeakInversion);
+            let ys: Vec<f64> = zs
+                .iter()
+                .map(|&z| crate::cells::proto_unit(&cc, z, s, 1.0))
+                .collect();
+            series.push((node.name.to_string(), dc::normalize(&ys)));
+        }
+        let refs: Vec<(&str, &[f64])> = series
+            .iter()
+            .map(|(n, v)| (n.as_str(), v.as_slice()))
+            .collect();
+        write_xy_csv(&out.join(format!("fig3_s{s}_nodes.csv")), "x", &zs, &refs)?;
+        let (mx, mean) = dc::curve_deviation(&series[0].1, &series[1].1);
+        rep += &format!(
+            "  S={s}: 180nm vs 7nm normalized shape — max dev {:.3}, mean {:.4}\n",
+            mx, mean
+        );
+    }
+    // (c,d): regimes per node, S=3
+    for node in ProcessNode::paper_pair() {
+        let mut series: Vec<(String, Vec<f64>)> = Vec::new();
+        for regime in Regime::all() {
+            let cc = CircuitCorner::new(node, regime);
+            let ys: Vec<f64> = zs
+                .iter()
+                .map(|&z| crate::cells::proto_unit(&cc, z, 3, 1.0))
+                .collect();
+            series.push((regime.short().to_string(), dc::normalize(&ys)));
+        }
+        let refs: Vec<(&str, &[f64])> = series
+            .iter()
+            .map(|(n, v)| (n.as_str(), v.as_slice()))
+            .collect();
+        write_xy_csv(&out.join(format!("fig3_regimes_{}.csv", node.name)), "x", &zs, &refs)?;
+        let (d_wm, _) = dc::curve_deviation(&series[0].1, &series[1].1);
+        let (d_ws, _) = dc::curve_deviation(&series[0].1, &series[2].1);
+        rep += &format!(
+            "  {}: WI↔MI max dev {:.3}, WI↔SI max dev {:.3} (margin-bounded)\n",
+            node.name, d_wm, d_ws
+        );
+    }
+    Ok(rep)
+}
+
+/// Fig. 4: temperature, Monte-Carlo mismatch and supply-variation
+/// robustness of the basic shape (180 nm).
+pub fn fig4(out: &Path) -> Result<String> {
+    let zs = dc::grid(-2.5, 1.5, 25);
+    let mut rep = String::from("Fig. 4 — shape robustness at 180nm\n");
+    // (a) temperature
+    let mut series: Vec<(String, Vec<f64>)> = Vec::new();
+    for t in [-45.0, 27.0, 125.0] {
+        let cc = CircuitCorner::new(&CMOS180, Regime::WeakInversion).at_temp(t);
+        let ys: Vec<f64> = zs
+            .iter()
+            .map(|&z| crate::cells::proto_unit(&cc, z, 3, 1.0))
+            .collect();
+        series.push((format!("{t}C"), dc::normalize(&ys)));
+    }
+    let refs: Vec<(&str, &[f64])> = series
+        .iter()
+        .map(|(n, v)| (n.as_str(), v.as_slice()))
+        .collect();
+    write_xy_csv(&out.join("fig4a_temperature.csv"), "x", &zs, &refs)?;
+    let (d1, _) = dc::curve_deviation(&series[0].1, &series[2].1);
+    rep += &format!("  (a) -45C vs 125C normalized max dev: {:.3}\n", d1);
+
+    // (b) Monte-Carlo mismatch on the proto shape
+    let cfg = mc::McConfig {
+        trials: 30,
+        zs: zs.clone(),
+        ..Default::default()
+    };
+    let r = mc::run_cell_mc(CellKind::Softplus, &CMOS180, Regime::WeakInversion, &cfg);
+    rep += &format!("  (b) MC mismatch max deviation: {:.2}% (paper: ≤5%)\n", r.max_pct_dev);
+    write_xy_csv(
+        &out.join("fig4b_mc_std.csv"),
+        "x",
+        &zs,
+        &[("point_std", &r.point_std[..])],
+    )?;
+
+    // (c) supply variation 0.9 → 1.8 V in WI
+    let mut series: Vec<(String, Vec<f64>)> = Vec::new();
+    for vdd in [0.9, 1.2, 1.5, 1.8] {
+        let cc = CircuitCorner::new(&CMOS180, Regime::WeakInversion).with_supply(vdd);
+        let ys: Vec<f64> = zs
+            .iter()
+            .map(|&z| crate::cells::proto_unit(&cc, z, 3, 1.0))
+            .collect();
+        series.push((format!("{vdd}V"), dc::normalize(&ys)));
+    }
+    let refs: Vec<(&str, &[f64])> = series
+        .iter()
+        .map(|(n, v)| (n.as_str(), v.as_slice()))
+        .collect();
+    write_xy_csv(&out.join("fig4c_supply.csv"), "x", &zs, &refs)?;
+    let (d2, _) = dc::curve_deviation(&series[0].1, &series[3].1);
+    rep += &format!("  (c) 0.9V vs 1.8V normalized max dev: {:.3}\n", d2);
+    Ok(rep)
+}
+
+/// Fig. 5: deep-threshold operation (source shifting → fA currents).
+pub fn fig5(out: &Path) -> Result<String> {
+    let mut rep = String::from("Fig. 5 — deep-threshold (fA) operation, 180nm\n");
+    // (a) Id–Vgs with and without source shift (log scale data)
+    let vgs = dc::grid(0.0, 0.9, 46);
+    let normal = Mosfet::square(&CMOS180, Polarity::N);
+    let mut shifted = Mosfet::square(&CMOS180, Polarity::N);
+    shifted.source_shift = 0.35;
+    shifted.body_at_vdd = true;
+    let i_norm: Vec<f64> = vgs.iter().map(|&v| normal.forward(v, 0.0)).collect();
+    let i_shift: Vec<f64> = vgs.iter().map(|&v| shifted.forward(v, 0.0)).collect();
+    write_xy_csv(
+        &out.join("fig5a_idvgs.csv"),
+        "vgs",
+        &vgs,
+        &[("normal", &i_norm), ("source_shifted", &i_shift)],
+    )?;
+    let min_i = i_shift.iter().cloned().fold(f64::INFINITY, f64::min);
+    rep += &format!(
+        "  (a) minimum current with source shift: {:.2} fA (paper: 1.97 fA NMOS)\n",
+        min_i * 1e15
+    );
+
+    // (c) proto shape at fA bias, S = 1 and 3
+    let zs = dc::grid(-2.5, 1.5, 25);
+    let mut series: Vec<(String, Vec<f64>)> = Vec::new();
+    for s in [1usize, 3] {
+        let unit = crate::sac::SacUnit::new(&CMOS180, Polarity::N, Regime::WeakInversion, 1)
+            .deep_threshold(0.35)
+            .with_bias(5.0e-14);
+        let ys: Vec<f64> = zs.iter().map(|&z| unit.proto_shape(z, s)).collect();
+        series.push((format!("S={s}"), dc::normalize(&ys)));
+    }
+    let refs: Vec<(&str, &[f64])> = series
+        .iter()
+        .map(|(n, v)| (n.as_str(), v.as_slice()))
+        .collect();
+    write_xy_csv(&out.join("fig5c_deep_shape.csv"), "x", &zs, &refs)?;
+    rep += "  (c) S-AC shape preserved at 50 fA bias (see fig5c_deep_shape.csv)\n";
+    Ok(rep)
+}
+
+/// Fig. 7: all activation cells across the two nodes (+ temperature).
+pub fn fig7(out: &Path) -> Result<String> {
+    let zs = dc::grid(-2.0, 2.0, 29);
+    let mut rep = String::from("Fig. 7 — activation standard cells, 180nm vs 7nm\n");
+    let mut table = Table::new(
+        "cross-node deviation (normalized)",
+        &["cell", "max dev", "mean dev"],
+    );
+    for kind in CellKind::all() {
+        let mut series: Vec<(String, Vec<f64>)> = Vec::new();
+        for node in ProcessNode::paper_pair() {
+            for t in [27.0, 125.0] {
+                let cc = CircuitCorner::new(node, Regime::WeakInversion).at_temp(t);
+                let ys = dc::sweep_cell(kind, &cc, &zs);
+                series.push((format!("{}_{}C", node.name, t), dc::normalize(&ys)));
+            }
+        }
+        let refs: Vec<(&str, &[f64])> = series
+            .iter()
+            .map(|(n, v)| (n.as_str(), v.as_slice()))
+            .collect();
+        write_xy_csv(&out.join(format!("fig7_{}.csv", kind.name())), "x", &zs, &refs)?;
+        let (mx, mean) = dc::curve_deviation(&series[0].1, &series[2].1);
+        table.row(vec![
+            kind.name().to_string(),
+            format!("{mx:.4}"),
+            format!("{mean:.4}"),
+        ]);
+    }
+    rep += &table.render();
+    table.write_csv(&out.join("fig7_deviation.csv"))?;
+    Ok(rep)
+}
+
+/// Fig. 8: Monte-Carlo max % deviation of ReLU / sigmoid / soft-plus at
+/// both nodes (paper: 3.11 / 7.31 / 2.44 / 4.14 / 0.91 / 3.86 %).
+pub fn fig8(out: &Path, trials: usize) -> Result<String> {
+    let paper: &[(&str, CellKind, &ProcessNode, f64)] = &[
+        ("relu@180", CellKind::Relu, &CMOS180, 3.11),
+        ("sigmoid@180", CellKind::Phi2, &CMOS180, 7.31),
+        ("softplus@180", CellKind::Softplus, &CMOS180, 2.44),
+        ("relu@7", CellKind::Relu, &FINFET7, 4.14),
+        ("sigmoid@7", CellKind::Phi2, &FINFET7, 0.91),
+        ("softplus@7", CellKind::Softplus, &FINFET7, 3.86),
+    ];
+    let mut table = Table::new(
+        "Fig. 8 — MC max % deviation (WI)",
+        &["cell", "measured %", "paper %"],
+    );
+    let cfg = mc::McConfig {
+        trials,
+        zs: dc::grid(-1.8, 1.8, 13),
+        ..Default::default()
+    };
+    for &(name, kind, node, paper_pct) in paper {
+        let node_static: &'static ProcessNode = if node.name == "cmos180" {
+            &CMOS180
+        } else {
+            &FINFET7
+        };
+        let r = mc::run_cell_mc(kind, node_static, Regime::WeakInversion, &cfg);
+        table.row(vec![
+            name.to_string(),
+            format!("{:.2}", r.max_pct_dev),
+            format!("{paper_pct:.2}"),
+        ]);
+    }
+    table.write_csv(&out.join("fig8_mc_deviation.csv"))?;
+    Ok(table.render())
+}
+
+/// Fig. 10: WTA / N-of-M / SoftArgMax characteristics.
+pub fn fig10(out: &Path) -> Result<String> {
+    let mut rep = String::from("Fig. 10 — WTA family\n");
+    let alg = Algorithmic::relu();
+    // (a,b): 2-input WTA outputs vs differential input (both nodes,
+    // circuit tier at 180nm + algorithmic)
+    let dx = dc::grid(-1.0, 1.0, 41);
+    for node in ProcessNode::paper_pair() {
+        let cc = CircuitCorner::new(node, Regime::WeakInversion);
+        let mut o1 = Vec::new();
+        let mut o2 = Vec::new();
+        for &d in &dx {
+            let x = [1.5 + d / 2.0, 1.5 - d / 2.0];
+            let y = wta::wta_outputs(&cc, &x, 0.5);
+            o1.push(y[0]);
+            o2.push(y[1]);
+        }
+        write_xy_csv(
+            &out.join(format!("fig10_wta2_{}.csv", node.name)),
+            "dI",
+            &dx,
+            &[("iout1", &o1), ("iout2", &o2)],
+        )?;
+        // crossover at zero differential
+        let mid = dx.len() / 2;
+        rep += &format!(
+            "  {}: outputs equal at ΔI=0 (|o1−o2|={:.4}); winner takes over for |ΔI|>0\n",
+            node.name,
+            (o1[mid] - o2[mid]).abs()
+        );
+    }
+    // (e,f): winners vs C for x = [α..5α]
+    let x5 = [1.0, 2.0, 3.0, 4.0, 5.0];
+    let cs = dc::grid(0.25, 12.0, 48);
+    let mut winners = Vec::new();
+    let mut iout = Vec::new();
+    for &c in &cs {
+        winners.push(wta::winner_count(&alg, &x5, c) as f64);
+        iout.push(wta::nofm_current(&alg, &x5, c));
+    }
+    write_xy_csv(
+        &out.join("fig10ef_nofm.csv"),
+        "C",
+        &cs,
+        &[("winners", &winners), ("iout", &iout)],
+    )?;
+    rep += &format!(
+        "  (e,f) winners M: 1 → {} as C grows 0.25 → 12 (N-of-M selection)\n",
+        winners.last().unwrap()
+    );
+    // (g,h): per-output currents vs C
+    let mut per: Vec<Vec<f64>> = vec![Vec::new(); 5];
+    for &c in &cs {
+        let y = wta::wta_outputs(&alg, &x5, c);
+        for (i, v) in y.iter().enumerate() {
+            per[i].push(*v);
+        }
+    }
+    let refs: Vec<(String, &[f64])> = per
+        .iter()
+        .enumerate()
+        .map(|(i, v)| (format!("iout{}", i + 1), v.as_slice()))
+        .collect();
+    let refs2: Vec<(&str, &[f64])> = refs.iter().map(|(n, v)| (n.as_str(), *v)).collect();
+    write_xy_csv(&out.join("fig10gh_softargmax.csv"), "C", &cs, &refs2)?;
+    rep += "  (g,h) per-output activation order follows input rank (SoftArgMax)\n";
+    Ok(rep)
+}
+
+/// Fig. 12: four-quadrant multiplier across nodes / regimes / temperature.
+pub fn fig12(out: &Path) -> Result<String> {
+    use crate::cells::multiplier::Multiplier;
+    let mut rep = String::from("Fig. 12 — multiplier characteristics (S=3)\n");
+    let xs = dc::grid(-1.0, 1.0, 21);
+    let ws = [-1.0, -0.5, 0.5, 1.0];
+    // calibrate the operating point once on the algorithmic backend — the
+    // circuit tier computes the same GMP, so (a, scale) carries over, and
+    // re-calibrating through the nested device solve would cost ~36k
+    // circuit solves per corner for no information
+    let m = Multiplier::calibrate(&Algorithmic::relu(), 3, 1.0);
+    // (a) nodes + temperature at WI
+    for node in ProcessNode::paper_pair() {
+        for t in [27.0, 125.0] {
+            let cc = CircuitCorner::new(node, Regime::WeakInversion).at_temp(t);
+            let mut series: Vec<(String, Vec<f64>)> = Vec::new();
+            for &w in &ws {
+                series.push((
+                    format!("w={w}"),
+                    xs.iter().map(|&x| m.mul(&cc, x, w)).collect(),
+                ));
+            }
+            let refs: Vec<(&str, &[f64])> = series
+                .iter()
+                .map(|(n, v)| (n.as_str(), v.as_slice()))
+                .collect();
+            write_xy_csv(
+                &out.join(format!("fig12_mult_{}_{}C.csv", node.name, t)),
+                "x",
+                &xs,
+                &refs,
+            )?;
+            // linearity check at w=1
+            let err: f64 = xs
+                .iter()
+                .zip(&series[3].1)
+                .map(|(&x, &y)| (y - x).abs())
+                .fold(0.0, f64::max);
+            rep += &format!("  {} @{}C: max |y − x·w| (w=1) = {:.3}\n", node.name, t, err);
+        }
+    }
+    // (b,c) regimes per node
+    for node in ProcessNode::paper_pair() {
+        for regime in Regime::all() {
+            let cc = CircuitCorner::new(node, regime);
+            let ys: Vec<f64> = xs.iter().map(|&x| m.mul(&cc, x, 1.0)).collect();
+            write_xy_csv(
+                &out.join(format!("fig12_regime_{}_{}.csv", node.name, regime.short())),
+                "x",
+                &xs,
+                &[("y_w1", &ys)],
+            )?;
+        }
+    }
+    rep += "  regime sweeps written (shape preserved WI → SI)\n";
+    Ok(rep)
+}
+
+/// Fig. 13: power vs spline count; mismatch vs sizing.
+pub fn fig13(out: &Path) -> Result<String> {
+    let mut rep = String::from("Fig. 13 — power & mismatch scaling\n");
+    // (a) power vs S
+    let ss: Vec<f64> = (1..=6).map(|s| s as f64).collect();
+    let mut series: Vec<(String, Vec<f64>)> = Vec::new();
+    for node in ProcessNode::paper_pair() {
+        for regime in Regime::all() {
+            series.push((
+                format!("{}_{}", node.name, regime.short()),
+                power::power_vs_s(node, regime, 6),
+            ));
+        }
+    }
+    let refs: Vec<(&str, &[f64])> = series
+        .iter()
+        .map(|(n, v)| (n.as_str(), v.as_slice()))
+        .collect();
+    write_xy_csv(&out.join("fig13a_power_vs_s.csv"), "S", &ss, &refs)?;
+    rep += "  (a) power grows linearly with S at fixed C (CSV written)\n";
+    // (b) 7nm: σ vs fin count; (c) 180nm: σ vs area multiple
+    let fins = [1.0, 2.0, 4.0, 8.0];
+    let s7 = mc::sizing_sensitivity(&FINFET7, &fins, 2000, 17);
+    write_xy_csv(&out.join("fig13b_fins.csv"), "fins", &fins, &[("sigma_pct", &s7[..])])?;
+    let areas = [1.0, 2.0, 4.0, 8.0, 16.0];
+    let s180 = mc::sizing_sensitivity(&CMOS180, &areas, 2000, 18);
+    write_xy_csv(&out.join("fig13c_area.csv"), "area_mult", &areas, &[("sigma_pct", &s180[..])])?;
+    rep += &format!(
+        "  (b) 7nm σ: {:.1}% @1 fin → {:.1}% @8 fins; (c) 180nm σ: {:.1}% → {:.1}%\n",
+        s7[0],
+        s7[3],
+        s180[0],
+        s180[4]
+    );
+    Ok(rep)
+}
+
+/// Fig. 15: confusion matrix + regime census for the digits network.
+pub fn fig15(out: &Path, limit: usize, threads: usize) -> Result<String> {
+    use crate::cells::multiplier::Multiplier;
+    use crate::nn;
+    let artifacts = crate::runtime::default_artifacts_dir();
+    let net = nn::load_net(&artifacts, "digits")?;
+    let ds = crate::data::Dataset::load_sacd(&artifacts.join("digits_test.bin"))?;
+    let tm = crate::sac::TableModel::calibrate(&CMOS180, Regime::WeakInversion, 27.0);
+    let cm = nn::evaluate(
+        &net,
+        || Box::new(tm.clone()),
+        &ds,
+        limit,
+        threads,
+    );
+    let mut rep = format!(
+        "Fig. 15a — digits confusion ({} samples, 180nm WI table tier): accuracy {:.1}%\n",
+        cm.total(),
+        cm.accuracy() * 100.0
+    );
+    let mut table = Table::new(
+        "confusion (rows = truth)",
+        &["t\\p", "0", "1", "2", "3", "4", "5", "6", "7", "8", "9"],
+    );
+    for t in 0..10 {
+        let mut row = vec![t.to_string()];
+        for p in 0..10 {
+            row.push(cm.counts[t][p].to_string());
+        }
+        table.row(row);
+    }
+    rep += &table.render();
+    table.write_csv(&out.join("fig15a_confusion.csv"))?;
+
+    // (b): regime census over a sample of inferences
+    let inner = Algorithmic::relu();
+    let census_p = nn::CensusProvider {
+        inner: &inner,
+        log: std::cell::RefCell::new(Vec::new()),
+    };
+    let m = Multiplier::calibrate(&census_p, net.splines, net.c);
+    for i in 0..limit.min(20) {
+        let _ = nn::forward(&net, &census_p, &m, ds.row(i));
+    }
+    let vals = census_p.log.borrow();
+    let mut table2 = Table::new("Fig. 15b — regime census", &["intended", "% shifted"]);
+    for regime in Regime::all() {
+        let c = nn::regime_census(&CMOS180, regime, &vals);
+        table2.row(vec![
+            regime.short().to_string(),
+            format!("{:.1}", c.fraction_shifted * 100.0),
+        ]);
+    }
+    rep += &table2.render();
+    rep += "  (paper: ~8% of transistors shift one regime; accuracy unaffected)\n";
+    table2.write_csv(&out.join("fig15b_census.csv"))?;
+    Ok(rep)
+}

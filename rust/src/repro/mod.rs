@@ -1,0 +1,105 @@
+//! The repro harness: regenerates every table and figure of the paper's
+//! evaluation (`sac repro <id>` / `sac repro all`).  DESIGN.md §5 maps each
+//! id to the modules that implement it; EXPERIMENTS.md records
+//! paper-vs-measured.
+
+pub mod ablations;
+pub mod figs;
+pub mod tables;
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+/// Options shared by the harness entry points.
+#[derive(Clone, Debug)]
+pub struct ReproOpts {
+    pub out: PathBuf,
+    /// sample limit for NN-scale experiments (digits test set is 1000)
+    pub limit: usize,
+    pub threads: usize,
+    /// Monte-Carlo trials for Fig. 8
+    pub mc_trials: usize,
+}
+
+impl Default for ReproOpts {
+    fn default() -> Self {
+        ReproOpts {
+            out: PathBuf::from("results"),
+            limit: 1000,
+            threads: crate::util::pool::default_threads(),
+            mc_trials: 40,
+        }
+    }
+}
+
+/// All experiment ids, in paper order.
+pub const ALL_IDS: &[&str] = &[
+    "fig1", "fig2a", "fig3", "fig4", "fig5", "fig7", "fig8", "fig10",
+    "fig12", "fig13", "fig15", "table1", "table2", "table3", "table4",
+    "table5", "ablations",
+];
+
+/// Run one experiment id, returning its printable report.
+pub fn run(id: &str, opts: &ReproOpts) -> Result<String> {
+    std::fs::create_dir_all(&opts.out)?;
+    let out = opts.out.as_path();
+    match id {
+        "fig1" => figs::fig1(out),
+        "fig2a" => figs::fig2a(out),
+        "fig3" => figs::fig3(out),
+        "fig4" => figs::fig4(out),
+        "fig5" => figs::fig5(out),
+        "fig7" => figs::fig7(out),
+        "fig8" => figs::fig8(out, opts.mc_trials),
+        "fig10" => figs::fig10(out),
+        "fig12" => figs::fig12(out),
+        "fig13" => figs::fig13(out),
+        "fig15" => figs::fig15(out, opts.limit, opts.threads),
+        "table1" => tables::table1(out),
+        "table2" => tables::table2(out),
+        "table3" => tables::table3(out),
+        "table4" => tables::table4(out, opts.limit, opts.threads),
+        "table5" => tables::table5(out),
+        "ablations" => ablations::run_all(out),
+        other => bail!("unknown experiment id {other:?}; known: {ALL_IDS:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_opts() -> ReproOpts {
+        ReproOpts {
+            out: std::env::temp_dir().join("sac_repro_test"),
+            limit: 8,
+            threads: 2,
+            mc_trials: 4,
+        }
+    }
+
+    #[test]
+    fn fig1_and_fig2a_run() {
+        let o = quick_opts();
+        let r = run("fig1", &o).unwrap();
+        assert!(r.contains("FOM peak"));
+        let r = run("fig2a", &o).unwrap();
+        assert!(r.contains("margin narrows"));
+        assert!(o.out.join("fig1_fom.csv").exists());
+    }
+
+    #[test]
+    fn unknown_id_errors() {
+        assert!(run("fig99", &quick_opts()).is_err());
+    }
+
+    #[test]
+    fn table1_and_table2_run() {
+        let o = quick_opts();
+        let r = run("table1", &o).unwrap();
+        assert!(r.contains("TOPS"));
+        let r = run("table2", &o).unwrap();
+        assert!(r.contains("max err"));
+    }
+}

@@ -1,0 +1,220 @@
+//! Table regeneration (Tables I-V).  Same contract as `figs`: compute,
+//! write `results/tableN.csv`, return a printable report.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::analysis::{dc, power};
+use crate::cells::activations::CellKind;
+use crate::cells::multiplier::Multiplier;
+use crate::cells::{Algorithmic, CircuitCorner};
+use crate::nn;
+use crate::pdk::{ProcessNode, regime::Regime, CMOS180, FINFET7};
+use crate::sac::TableModel;
+use crate::util::table::Table;
+
+fn eng(x: f64) -> String {
+    if x == 0.0 {
+        return "0".into();
+    }
+    let a = x.abs();
+    if a >= 1e3 || a < 1e-2 {
+        format!("{x:.3e}")
+    } else {
+        format!("{x:.3}")
+    }
+}
+
+/// Table I: operation performance parameters (S=1).
+pub fn table1(out: &Path) -> Result<String> {
+    let mut t = Table::new(
+        "Table I — operation performance (S=1)",
+        &["node", "regime", "TOPS/mm2", "TOPS/W", "pJ/MAC"],
+    );
+    for node in ProcessNode::paper_pair() {
+        for regime in [
+            Regime::StrongInversion,
+            Regime::ModerateInversion,
+            Regime::WeakInversion,
+        ] {
+            let p = power::op_perf(node, regime);
+            t.row(vec![
+                node.name.into(),
+                regime.short().into(),
+                eng(p.tops_mm2),
+                eng(p.tops_w),
+                eng(p.pj_mac),
+            ]);
+        }
+    }
+    t.write_csv(&out.join("table1.csv"))?;
+    let mut rep = t.render();
+    rep += "paper anchors: 180nm SI 5 TOPS/mm2 / WI 73 TOPS/W; 7nm SI 5100 TOPS/mm2 / WI 3.6e5 TOPS/W\n";
+    Ok(rep)
+}
+
+/// Table II: multiplier error metrics + area/power savings vs S.
+pub fn table2(out: &Path) -> Result<String> {
+    let p = Algorithmic::relu();
+    let mut t = Table::new(
+        "Table II — multiplier error & savings vs spline count (N=2)",
+        &["S", "max err %", "avg abs err %", "bias %", "std %", "area sav %", "power sav %"],
+    );
+    for s in [1usize, 2, 3] {
+        let m = Multiplier::calibrate(&p, s, 1.0);
+        let e = m.error_stats(&p, 41);
+        let (a_sav, p_sav) = power::savings_vs_full_precision(s);
+        t.row(vec![
+            s.to_string(),
+            format!("{:.1}", e.max * 100.0),
+            format!("{:.2}", e.mean_abs * 100.0),
+            format!("{:+.2}", e.bias * 100.0),
+            format!("{:.2}", e.std * 100.0),
+            format!("{a_sav:.1}"),
+            format!("{p_sav:.1}"),
+        ]);
+    }
+    t.write_csv(&out.join("table2.csv"))?;
+    let mut rep = t.render();
+    rep += "paper: max 50/33.3/11.1 %, avg 22.3/9.3/3.7 %, savings 68.7→31.3 % area, 68.4→37.2 % power\n";
+    Ok(rep)
+}
+
+/// Table III: energy/operation per cell per regime per node + the Err
+/// (cross-node mean-abs-deviation) column.
+pub fn table3(out: &Path) -> Result<String> {
+    let mut t = Table::new(
+        "Table III — energy/op [fJ] and cross-node deviation",
+        &["op", "Err(180vs7)", "node", "WI", "MI", "SI"],
+    );
+    let zs = dc::grid(-2.0, 2.0, 17);
+    for kind in [
+        CellKind::Cosh,
+        CellKind::Sinh,
+        CellKind::Relu,
+        CellKind::Phi1,
+        CellKind::Softplus,
+    ] {
+        // Err: mean-abs deviation between normalized 180nm / 7nm curves
+        let c180 = CircuitCorner::new(&CMOS180, Regime::WeakInversion);
+        let c7 = CircuitCorner::new(&FINFET7, Regime::WeakInversion);
+        let y180 = dc::sweep_cell(kind, &c180, &zs);
+        let y7 = dc::sweep_cell(kind, &c7, &zs);
+        let (_, err) = dc::curve_deviation(&y180, &y7);
+        for node in ProcessNode::paper_pair() {
+            t.row(vec![
+                kind.name().into(),
+                format!("{err:.4}"),
+                node.name.into(),
+                eng(power::cell_energy(node, Regime::WeakInversion, kind) * 1e15),
+                eng(power::cell_energy(node, Regime::ModerateInversion, kind) * 1e15),
+                eng(power::cell_energy(node, Regime::StrongInversion, kind) * 1e15),
+            ]);
+        }
+    }
+    // WTA row (per input) and multiplier row
+    for node in ProcessNode::paper_pair() {
+        t.row(vec![
+            "wta/input".into(),
+            "-".into(),
+            node.name.into(),
+            eng(power::wta_energy_per_input(node, Regime::WeakInversion) * 1e15),
+            eng(power::wta_energy_per_input(node, Regime::ModerateInversion) * 1e15),
+            eng(power::wta_energy_per_input(node, Regime::StrongInversion) * 1e15),
+        ]);
+        t.row(vec![
+            "multiply".into(),
+            "-".into(),
+            node.name.into(),
+            eng(power::mult_energy(node, Regime::WeakInversion, 3) * 1e15),
+            eng(power::mult_energy(node, Regime::ModerateInversion, 3) * 1e15),
+            eng(power::mult_energy(node, Regime::StrongInversion, 3) * 1e15),
+        ]);
+    }
+    t.write_csv(&out.join("table3.csv"))?;
+    let mut rep = t.render();
+    rep += "paper anchors (fJ): cosh 180nm 40.9/108/222, 7nm 0.02/0.61/23.1; Err 0.006-0.18\n";
+    Ok(rep)
+}
+
+/// Table IV: classification accuracy — S/W baseline plus H/W at every
+/// (node, regime) corner, on the exported test sets.
+pub fn table4(out: &Path, limit: usize, threads: usize) -> Result<String> {
+    let artifacts = crate::runtime::default_artifacts_dir();
+    let mut t = Table::new(
+        "Table IV — classification accuracy [%]",
+        &["dataset", "regime", "S/W", "H/W 180nm", "H/W 7nm"],
+    );
+    let mut rep = String::new();
+    for task in ["xor", "arem", "digits"] {
+        let net = match nn::load_net(&artifacts, task) {
+            Ok(n) => n,
+            Err(e) => {
+                rep += &format!("  !! {task}: {e} (run `make artifacts`)\n");
+                continue;
+            }
+        };
+        let ds = crate::data::Dataset::load_sacd(
+            &artifacts.join(format!("{task}_test.bin")),
+        )?;
+        let lim = if task == "digits" { limit } else { ds.n };
+        for regime in [
+            Regime::StrongInversion,
+            Regime::ModerateInversion,
+            Regime::WeakInversion,
+        ] {
+            let mut row = vec![
+                task.to_string(),
+                regime.short().into(),
+                format!("{:.1}", net.acc_sw * 100.0),
+            ];
+            for node in ProcessNode::paper_pair() {
+                let tm = TableModel::calibrate(node, regime, 27.0);
+                let cm = nn::evaluate(&net, || Box::new(tm.clone()), &ds, lim, threads);
+                row.push(format!("{:.1}", cm.accuracy() * 100.0));
+            }
+            t.row(row);
+        }
+    }
+    t.write_csv(&out.join("table4.csv"))?;
+    rep = t.render() + &rep;
+    rep += "paper: XOR 95/93-95, AReM 94/93-94, MNIST 93/92-92.5 (S/W then H/W range)\n";
+    Ok(rep)
+}
+
+/// Table V: the "This Work" comparison columns.
+pub fn table5(out: &Path) -> Result<String> {
+    let artifacts = crate::runtime::default_artifacts_dir();
+    let acc = nn::load_net(&artifacts, "digits")
+        .map(|n| n.acc_sac_algorithmic * 100.0)
+        .unwrap_or(f64::NAN);
+    let mut t = Table::new(
+        "Table V — comparison row for This Work",
+        &["node", "supply V", "classifier", "feature size", "regime", "accuracy %", "energy/pixel pJ", "speed MHz"],
+    );
+    for node in [&FINFET7, &CMOS180] {
+        for regime in [Regime::WeakInversion, Regime::StrongInversion] {
+            // energy/pixel: full 256-15-10 net energy divided by 256 pixels
+            let macs = (256 * 15 + 15 * 10) as f64;
+            let e_net = macs * power::mult_energy(node, regime, 3);
+            let e_pixel_pj = e_net / 256.0 * 1e12;
+            let u = power::unit_op(node, regime, 3);
+            let speed_mhz = 1.0 / (4.4 * u.tau_s) / 1e6;
+            t.row(vec![
+                node.name.into(),
+                format!("{}", node.vdd),
+                "ANN".into(),
+                "256".into(),
+                regime.short().into(),
+                format!("{acc:.1}"),
+                eng(e_pixel_pj),
+                format!("{speed_mhz:.2}"),
+            ]);
+        }
+    }
+    t.write_csv(&out.join("table5.csv"))?;
+    let mut rep = t.render();
+    rep += "paper: 7nm WI 0.05 pJ/px @92.2%, SI 3.7 pJ/px @92.5%; 180nm WI 2.3 pJ/px, SI 97.6 pJ/px\n";
+    Ok(rep)
+}

@@ -1,0 +1,114 @@
+//! Artifact manifest (`artifacts/manifest.json`, written by aot.py):
+//! parameter order, shapes and dtypes per compiled entry.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::util::json::{parse_file, Json};
+
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct EntrySpec {
+    pub file: String,
+    pub params: Vec<ParamSpec>,
+    pub outputs: Vec<ParamSpec>,
+    /// extra metadata (sizes, activation, c, splines) as raw json
+    pub meta: Json,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub entries: BTreeMap<String, EntrySpec>,
+}
+
+fn parse_param(j: &Json) -> Result<ParamSpec> {
+    Ok(ParamSpec {
+        name: j.get("name")?.as_str()?.to_string(),
+        shape: j
+            .get("shape")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_usize())
+            .collect::<Result<_>>()?,
+        dtype: j.get("dtype")?.as_str()?.to_string(),
+    })
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let j = parse_file(path)?;
+        let obj = j.as_obj()?;
+        let mut entries = BTreeMap::new();
+        for (name, ej) in obj {
+            let Ok(file) = ej.get("file") else {
+                bail!("manifest entry {name} missing file");
+            };
+            let params = ej
+                .get("params")?
+                .as_arr()?
+                .iter()
+                .map(parse_param)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = ej
+                .get("outputs")?
+                .as_arr()?
+                .iter()
+                .map(parse_param)
+                .collect::<Result<Vec<_>>>()?;
+            entries.insert(
+                name.clone(),
+                EntrySpec {
+                    file: file.as_str()?.to_string(),
+                    params,
+                    outputs,
+                    meta: ej.clone(),
+                },
+            );
+        }
+        Ok(Manifest { entries })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let text = r#"{
+            "gmp_kernel": {
+                "file": "gmp_kernel.hlo.txt",
+                "params": [{"name": "x", "shape": [4096, 8], "dtype": "f32"}],
+                "outputs": [{"name": "h", "shape": [4096], "dtype": "f32"}],
+                "c": 1.0
+            }
+        }"#;
+        let dir = std::env::temp_dir().join("sac_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("manifest.json");
+        std::fs::write(&p, text).unwrap();
+        let m = Manifest::load(&p).unwrap();
+        let e = &m.entries["gmp_kernel"];
+        assert_eq!(e.file, "gmp_kernel.hlo.txt");
+        assert_eq!(e.params[0].shape, vec![4096, 8]);
+        assert_eq!(e.outputs[0].shape, vec![4096]);
+        assert!((e.meta.get("c").unwrap().as_f64().unwrap() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn missing_file_is_error() {
+        let dir = std::env::temp_dir().join("sac_manifest_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("manifest.json");
+        std::fs::write(&p, r#"{"x": {"params": [], "outputs": []}}"#).unwrap();
+        assert!(Manifest::load(&p).is_err());
+    }
+}

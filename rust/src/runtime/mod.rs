@@ -1,0 +1,133 @@
+//! PJRT runtime: load the AOT-compiled HLO artifacts and execute them on
+//! the request path.  Python never runs here — `make artifacts` produced
+//! HLO *text* (see python/compile/aot.py for why text, not serialized
+//! protos) and this module compiles it once per process through the `xla`
+//! crate's PJRT CPU client.
+
+pub mod artifact;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+pub use artifact::{Manifest, ParamSpec};
+
+/// A compiled, ready-to-execute artifact.
+pub struct Executable {
+    pub name: String,
+    pub spec: artifact::EntrySpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The runtime: one PJRT client and the artifact directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub artifacts_dir: PathBuf,
+    pub manifest: Manifest,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and read the artifact manifest.
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("creating PJRT CPU client: {e:?}"))?;
+        let manifest = Manifest::load(&artifacts_dir.join("manifest.json"))
+            .with_context(|| "run `make artifacts` first")?;
+        Ok(Runtime {
+            client,
+            artifacts_dir: artifacts_dir.to_path_buf(),
+            manifest,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one artifact by manifest entry name.
+    pub fn load(&self, entry: &str) -> Result<Executable> {
+        let spec = self
+            .manifest
+            .entries
+            .get(entry)
+            .ok_or_else(|| anyhow!("no artifact entry {entry:?} in manifest"))?
+            .clone();
+        let path = self.artifacts_dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {entry}: {e:?}"))?;
+        Ok(Executable {
+            name: entry.to_string(),
+            spec,
+            exe,
+        })
+    }
+}
+
+impl Executable {
+    /// Execute with f32 parameter buffers in manifest order.  Each buffer's
+    /// length must match the manifest shape.  Returns the flat f32 outputs
+    /// (the AOT graphs return a 1-tuple).
+    pub fn run_f32(&self, params: &[&[f32]]) -> Result<Vec<f32>> {
+        if params.len() != self.spec.params.len() {
+            return Err(anyhow!(
+                "{}: expected {} params, got {}",
+                self.name,
+                self.spec.params.len(),
+                params.len()
+            ));
+        }
+        let mut lits = Vec::with_capacity(params.len());
+        for (buf, spec) in params.iter().zip(&self.spec.params) {
+            let want: usize = spec.shape.iter().product();
+            if buf.len() != want {
+                return Err(anyhow!(
+                    "{}: param {} length {} != shape {:?}",
+                    self.name,
+                    spec.name,
+                    buf.len(),
+                    spec.shape
+                ));
+            }
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(buf)
+                .reshape(&dims)
+                .map_err(|e| anyhow!("reshape {}: {e:?}", spec.name))?;
+            lits.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.name))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("sync {}: {e:?}", self.name))?;
+        // aot.py lowers with return_tuple=True → 1-tuple
+        let out = result
+            .to_tuple1()
+            .map_err(|e| anyhow!("untuple {}: {e:?}", self.name))?;
+        out.to_vec::<f32>()
+            .map_err(|e| anyhow!("to_vec {}: {e:?}", self.name))
+    }
+
+    /// Expected output element count (flat).
+    pub fn output_len(&self) -> usize {
+        self.spec
+            .outputs
+            .iter()
+            .map(|o| o.shape.iter().product::<usize>())
+            .sum()
+    }
+}
+
+/// Default artifact directory: `$SAC_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var("SAC_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}

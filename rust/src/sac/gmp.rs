@@ -1,0 +1,310 @@
+//! Algorithmic Generalized-Margin-Propagation solvers (paper eq. 6/9).
+//!
+//! Mirrors `python/compile/kernels/{ref,gmp}.py` exactly: the same two
+//! algorithms (sort-based exact solve for the ReLU shape, fixed-iteration
+//! bisection for any shape), the same iteration count, so rust and the AOT
+//! artifacts produce the same numbers (cross-checked against
+//! `artifacts/goldens_gmp.json` in the integration tests).
+
+/// Number of bisection iterations — keep in sync with `ref.GMP_ITERS`.
+pub const GMP_ITERS: usize = 60;
+
+/// The GMP shape function g (paper Sec. II-B).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Shape {
+    /// g(z) = [z]_+ (eq. 3, the MP limit)
+    Relu,
+    /// g(z) = w·ln(1+e^{z/w}) — the weak-inversion device shape with knee
+    /// width `w` (normalized units)
+    Softplus { width: f64 },
+}
+
+impl Shape {
+    /// Evaluate g(z).
+    #[inline]
+    pub fn g(&self, z: f64) -> f64 {
+        match *self {
+            Shape::Relu => z.max(0.0),
+            Shape::Softplus { width } => {
+                let t = z / width;
+                // stable softplus
+                if t > 30.0 {
+                    z
+                } else if t < -30.0 {
+                    width * t.exp()
+                } else {
+                    width * t.exp().ln_1p()
+                }
+            }
+        }
+    }
+
+    /// g'(z) (for gradients / sensitivity analysis).
+    #[inline]
+    pub fn gprime(&self, z: f64) -> f64 {
+        match *self {
+            Shape::Relu => {
+                if z > 0.0 {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            Shape::Softplus { width } => {
+                let t = (z / width).clamp(-40.0, 40.0);
+                1.0 / (1.0 + (-t).exp())
+            }
+        }
+    }
+
+    /// knee pad used to widen the bisection bracket for soft shapes
+    fn pad(&self) -> f64 {
+        match *self {
+            Shape::Relu => 0.0,
+            Shape::Softplus { width } => 4.0 * width,
+        }
+    }
+}
+
+/// Exact ReLU-shape solve: h with Σ [x_j − h]_+ = C (unclamped).
+///
+/// Sort descending, prefix sums S_k, candidate h_k = (S_k − C)/k; the
+/// consistent k is the largest with x_(k) > h_k (monotone condition).
+pub fn solve_exact(x: &[f64], c: f64) -> f64 {
+    debug_assert!(!x.is_empty() && c > 0.0);
+    let mut xs = x.to_vec();
+    xs.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let mut cum = 0.0;
+    let mut h = f64::NEG_INFINITY;
+    for (k, &v) in xs.iter().enumerate() {
+        cum += v;
+        let hk = (cum - c) / (k + 1) as f64;
+        if v > hk {
+            h = hk; // still consistent with k+1 active
+        } else {
+            break;
+        }
+    }
+    h
+}
+
+/// Bisection solve for any shape: h with Σ g(x_j − h) = C (unclamped).
+/// Bracket: [max(x) − C − pad, max(x) + pad]; fixed `iters` halvings.
+pub fn solve_bisect(x: &[f64], c: f64, shape: Shape, iters: usize) -> f64 {
+    debug_assert!(!x.is_empty() && c > 0.0);
+    let mx = x.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let pad = shape.pad();
+    let mut lo = mx - c - pad;
+    let mut hi = mx + pad;
+    for _ in 0..iters {
+        let mid = 0.5 * (lo + hi);
+        let s: f64 = x.iter().map(|&v| shape.g(v - mid)).sum();
+        if s > c {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+/// Newton solve for the softplus shape, warm-started from the exact ReLU
+/// solution (§Perf optimization: the bisection burns 60·M transcendentals;
+/// Newton from the ReLU point — which is within ~4·width of the root —
+/// converges quadratically in ≤ 8 steps).  Falls back to bisection if the
+/// iteration leaves its bracket (never observed in tests, but cheap
+/// insurance).
+pub fn solve_soft_newton(x: &[f64], c: f64, width: f64) -> f64 {
+    let shape = Shape::Softplus { width };
+    let h_relu = solve_exact(x, c);
+    // softplus(z) >= relu(z), so the soft solution sits at or above h_relu
+    let lo = h_relu - 1e-12;
+    let hi = h_relu + 4.0 * width + 1e-12;
+    let mut h = h_relu + 0.5 * width;
+    for _ in 0..8 {
+        let mut s = 0.0;
+        let mut sp = 0.0;
+        for &v in x {
+            let z = v - h;
+            s += shape.g(z);
+            sp += shape.gprime(z);
+        }
+        if sp <= 1e-30 {
+            break;
+        }
+        let step = (s - c) / sp; // residual decreasing in h → move up when s>C
+        h += step;
+        if step.abs() < 1e-12 * width.max(1e-12) {
+            break;
+        }
+        if !(lo..=hi).contains(&h) {
+            return solve_bisect(x, c, shape, GMP_ITERS);
+        }
+    }
+    h
+}
+
+/// Residual Σ g(x_j − h) − C (zero at the solution).
+pub fn residual(x: &[f64], h: f64, c: f64, shape: Shape) -> f64 {
+    x.iter().map(|&v| shape.g(v - h)).sum::<f64>() - c
+}
+
+/// S-AC unit output: solve then clamp to ≥ 0 (the output is a current).
+pub fn sac_h(x: &[f64], c: f64, shape: Shape) -> f64 {
+    let h = match shape {
+        Shape::Relu => solve_exact(x, c),
+        Shape::Softplus { width } => solve_soft_newton(x, c, width),
+    };
+    h.max(0.0)
+}
+
+/// Implicit-function gradient dh/dx_j = g'(x_j−h)/Σ g' (paper eq. 22/23
+/// structure).
+pub fn grad(x: &[f64], h: f64, shape: Shape) -> Vec<f64> {
+    let gp: Vec<f64> = x.iter().map(|&v| shape.gprime(v - h)).collect();
+    let denom: f64 = gp.iter().sum::<f64>().max(1e-30);
+    gp.into_iter().map(|g| g / denom).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::propcheck::check;
+
+    #[test]
+    fn exact_matches_bisect() {
+        check(1, 300, |g| -> Result<(), String> {
+            let m = g.usize_in(1, 16);
+            let x = g.vec_f64(m, -4.0, 4.0);
+            let c = g.f64_in(0.05, 8.0);
+            let he = solve_exact(&x, c);
+            let hb = solve_bisect(&x, c, Shape::Relu, GMP_ITERS);
+            prop_assert!((he - hb).abs() < 1e-9, "he={he} hb={hb}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn exact_satisfies_constraint() {
+        check(2, 300, |g| -> Result<(), String> {
+            let m = g.usize_in(1, 20);
+            let x = g.vec_f64(m, -5.0, 5.0);
+            let c = g.f64_in(0.05, 10.0);
+            let h = solve_exact(&x, c);
+            let r = residual(&x, h, c, Shape::Relu);
+            prop_assert!(r.abs() < 1e-9 * c.max(1.0), "resid={r}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn softplus_satisfies_constraint() {
+        check(3, 200, |g| -> Result<(), String> {
+            let m = g.usize_in(1, 12);
+            let x = g.vec_f64(m, -3.0, 3.0);
+            let c = g.f64_in(0.1, 5.0);
+            let w = g.f64_in(0.01, 0.5);
+            let shape = Shape::Softplus { width: w };
+            let h = solve_bisect(&x, c, shape, GMP_ITERS);
+            let r = residual(&x, h, c, shape);
+            prop_assert!(r.abs() < 1e-7 * c.max(1.0), "resid={r}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn translation_invariance() {
+        check(4, 200, |g| -> Result<(), String> {
+            let m = g.usize_in(1, 10);
+            let x = g.vec_f64(m, -2.0, 2.0);
+            let c = g.f64_in(0.1, 4.0);
+            let d = g.f64_in(-3.0, 3.0);
+            let h0 = solve_exact(&x, c);
+            let xs: Vec<f64> = x.iter().map(|v| v + d).collect();
+            let h1 = solve_exact(&xs, c);
+            prop_assert!((h1 - h0 - d).abs() < 1e-9, "h0={h0} h1={h1} d={d}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn monotone_in_each_input() {
+        check(5, 150, |g| -> Result<(), String> {
+            let m = g.usize_in(2, 10);
+            let mut x = g.vec_f64(m, -2.0, 2.0);
+            let c = g.f64_in(0.1, 4.0);
+            let j = g.usize_in(0, m - 1);
+            let h0 = solve_exact(&x, c);
+            x[j] += 0.3;
+            prop_assert!(solve_exact(&x, c) >= h0 - 1e-12);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn bounded_by_logsumexp() {
+        check(6, 150, |g| -> Result<(), String> {
+            let m = g.usize_in(1, 8);
+            let x = g.vec_f64(m, -3.0, 3.0);
+            let c = g.f64_in(0.2, 4.0);
+            let h = solve_exact(&x, c);
+            let lse = c * x.iter().map(|v| (v / c).exp()).sum::<f64>().ln();
+            let mx = x.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            prop_assert!(h <= lse + 1e-9, "h={h} lse={lse}");
+            prop_assert!(h >= mx - c - 1e-9);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn grad_rows_sum_to_one() {
+        check(7, 100, |g| -> Result<(), String> {
+            let m = g.usize_in(1, 12);
+            let x = g.vec_f64(m, -2.0, 2.0);
+            let c = g.f64_in(0.2, 3.0);
+            let h = solve_exact(&x, c);
+            let gr = grad(&x, h, Shape::Relu);
+            let s: f64 = gr.iter().sum();
+            prop_assert!((s - 1.0).abs() < 1e-9, "sum={s}");
+            prop_assert!(gr.iter().all(|&v| (0.0..=1.0).contains(&v)));
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn winner_residue_formula_eq22() {
+        // eq. 22: h = (Σ winners − C)/M
+        let x = [1.0, 2.0, 3.0, 4.0, 5.0];
+        for c in [0.5, 2.0, 6.0] {
+            let h = solve_exact(&x, c);
+            let winners: Vec<f64> = x.iter().cloned().filter(|&v| v > h).collect();
+            let m = winners.len() as f64;
+            let expect = (winners.iter().sum::<f64>() - c) / m;
+            assert!((h - expect).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn newton_matches_bisection() {
+        check(8, 300, |g| -> Result<(), String> {
+            let m = g.usize_in(1, 16);
+            let x = g.vec_f64(m, -3.0, 3.0);
+            let c = g.f64_in(0.1, 6.0);
+            let w = g.f64_in(0.005, 0.6);
+            let hn = solve_soft_newton(&x, c, w);
+            let hb = solve_bisect(&x, c, Shape::Softplus { width: w }, GMP_ITERS);
+            prop_assert!((hn - hb).abs() < 1e-7, "newton={hn} bisect={hb} w={w}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn softplus_approaches_relu_as_width_shrinks() {
+        let x = [0.3, -0.7, 1.4, 0.0];
+        let c = 1.0;
+        let hr = solve_exact(&x, c);
+        let hs = solve_bisect(&x, c, Shape::Softplus { width: 1e-4 }, GMP_ITERS);
+        assert!((hr - hs).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,16 @@
+//! The paper's core contribution: shape-based analog computing.
+//!
+//! * `gmp` — the algorithmic GMP solvers (exact + bisection), mirroring the
+//!   python kernels bit-for-bit-ish.
+//! * `splines` — the Appendix-A dyadic spline schedule.
+//! * `unit` — the device-exact Fig. 2b/2c circuit (nested KCL solve).
+//! * `table_model` — calibrated per-corner surrogate used at NN scale.
+
+pub mod gmp;
+pub mod splines;
+pub mod table_model;
+pub mod unit;
+
+pub use gmp::{sac_h, solve_bisect, solve_exact, Shape, GMP_ITERS};
+pub use table_model::TableModel;
+pub use unit::SacUnit;

@@ -1,0 +1,127 @@
+//! Appendix-A dyadic spline schedule (mirror of
+//! `python/compile/sacml/splines.py` — see that file for the derivation).
+//!
+//! ```text
+//!     Q_j = (j − (S+1)/2)·ln2          tangent points (symmetric, dyadic)
+//!     T_1 = Q_1 − 1;  T_j = 2Q_j − Q_{j−1} − 1
+//!     O_j = −C·T_j                     per-spline offsets (eq. 53)
+//!     C'  = C / e^{Q_1}                unit-slope rescale
+//! ```
+
+pub const LN2: f64 = std::f64::consts::LN_2;
+
+/// Tangent points Q_1..Q_S.
+pub fn tangent_points(s: usize) -> Vec<f64> {
+    assert!(s >= 1);
+    (1..=s)
+        .map(|j| (j as f64 - (s as f64 + 1.0) / 2.0) * LN2)
+        .collect()
+}
+
+/// Tuning (break) points T_1..T_S (eq. 46/49-51).
+pub fn tuning_points(s: usize) -> Vec<f64> {
+    let q = tangent_points(s);
+    let mut t = vec![0.0; s];
+    t[0] = q[0] - 1.0;
+    for j in 1..s {
+        t[j] = 2.0 * q[j] - q[j - 1] - 1.0;
+    }
+    t
+}
+
+/// `(offsets O_j, rescaled constraint C')` for an S-spline unit.
+pub fn schedule(s: usize, c: f64) -> (Vec<f64>, f64) {
+    let t = tuning_points(s);
+    let offsets: Vec<f64> = t.iter().map(|&tj| -c * tj).collect();
+    let c_prime = c / tangent_points(s)[0].exp();
+    (offsets, c_prime)
+}
+
+/// Open-loop S-spline approximation of e^x (eq. 48, Fig. 2a).
+pub fn exp_spline_approx(x: f64, s: usize) -> f64 {
+    let q = tangent_points(s);
+    let t = tuning_points(s);
+    let eq: Vec<f64> = q.iter().map(|&v| v.exp()).collect();
+    let mut out = 0.0;
+    let mut prefix = 0.0;
+    for j in 0..s {
+        let coef = eq[j] - prefix;
+        prefix += eq[j];
+        out += coef * (x - t[j]).max(0.0);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn s3_matches_paper_eq49_53() {
+        let (offs, cp) = schedule(3, 1.0);
+        assert!((offs[0] - (1.0 + LN2)).abs() < 1e-12);
+        assert!((offs[1] - (1.0 - LN2)).abs() < 1e-12);
+        assert!((offs[2] - (1.0 - 2.0 * LN2)).abs() < 1e-12);
+        assert!((cp - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn s1_is_classic_mp() {
+        let (offs, cp) = schedule(1, 1.0);
+        assert_eq!(offs.len(), 1);
+        assert!((offs[0] - 1.0).abs() < 1e-12); // T_1 = −1 → O = C
+        assert!((cp - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn error_shrinks_s1_to_s3_fig2a() {
+        // Fig. 2a compares S=1 against S=3: the margin narrows.  (The
+        // dyadic schedule trades *range* for density beyond that, so the
+        // comparison is only meaningful on the margin window.)
+        let grid: Vec<f64> = (0..=100).map(|i| -1.0 + 0.02 * i as f64).collect();
+        let max_err = |s: usize| {
+            grid.iter()
+                .map(|&x| (exp_spline_approx(x, s) - x.exp()).abs())
+                .fold(0.0, f64::max)
+        };
+        let e1 = max_err(1);
+        let e3 = max_err(3);
+        assert!(e3 < e1, "e1={e1} e3={e3}");
+    }
+
+    #[test]
+    fn gmp_lse_approximation_improves_with_s() {
+        // The operative Fig. 2a claim: the *multi-input* GMP h approximates
+        // log-sum-exp more tightly with more splines.
+        use crate::sac::gmp::{solve_exact};
+        let pairs = [(0.3, -0.4), (1.0, 0.2), (-0.8, -0.1), (0.5, 0.45)];
+        let max_err = |s: usize| {
+            let (offs, cp) = schedule(s, 1.0);
+            pairs
+                .iter()
+                .map(|&(a, b)| {
+                    let mut x = Vec::new();
+                    for &o in &offs {
+                        x.push(a + o);
+                        x.push(b + o);
+                    }
+                    let h = solve_exact(&x, cp);
+                    let lse = (a.exp() + b.exp()).ln();
+                    (h - lse).abs()
+                })
+                .fold(0.0, f64::max)
+        };
+        let e1 = max_err(1);
+        let e3 = max_err(3);
+        assert!(e3 < e1, "e1={e1} e3={e3}");
+    }
+
+    #[test]
+    fn matches_python_goldens_shape() {
+        // spot values cross-checked against sacml.splines
+        let t = tuning_points(3);
+        assert!((t[0] - (-LN2 - 1.0)).abs() < 1e-12);
+        assert!((t[1] - (LN2 - 1.0)).abs() < 1e-12);
+        assert!((t[2] - (2.0 * LN2 - 1.0)).abs() < 1e-12);
+    }
+}

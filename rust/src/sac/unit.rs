@@ -1,0 +1,366 @@
+//! Device-exact S-AC unit: the Fig. 2b (N-type) / Fig. 2c (P-type) circuit,
+//! solved at transistor level.
+//!
+//! The circuit realizes (paper eqs. 11-12):
+//!
+//! ```text
+//!     Σ_ij f(V_ij, V_B) = C                      KCL at the common node V_B
+//!     f(V_B,0) − f(V_B,V_ij) + f(V_ij,V_B) = x_ij   per-branch balance
+//!     h(X) = f(V_B, 0)                           output mirror
+//! ```
+//!
+//! with `f` the device forward-current function (`Mosfet::forward`).  The
+//! solve is a nested root find:
+//!
+//!  * inner: for a trial V_B, each branch's balance equation is monotone in
+//! ```text
+//!    V_ij → bisection (Newton-accelerated) per branch;
+//! ```
+//!  * outer: the KCL residual is monotone decreasing in V_B → bisection.
+//!
+//! This is the "SPICE tier": every regime/process/temperature effect enters
+//! through the device model.  The table-model tier
+//! (`sac::table_model`) is calibrated against it.
+
+use crate::device::Mosfet;
+use crate::pdk::{Polarity, ProcessNode, regime::Regime};
+use crate::util::rng::Rng;
+
+/// Configuration of one S-AC unit instance.
+#[derive(Clone, Debug)]
+pub struct SacUnit {
+    pub node: &'static ProcessNode,
+    pub polarity: Polarity,
+    pub regime: Regime,
+    pub t_c: f64,
+    /// supply override [V] (Fig. 4c sweeps this); default node.vdd
+    pub vdd: f64,
+    /// tail bias current C [A]
+    pub c_bias: f64,
+    /// branch devices (one per input column; mismatch lives here)
+    pub branches: Vec<Mosfet>,
+    /// output device (h = f(V_B, 0))
+    pub out_dev: Mosfet,
+    /// deep-threshold mode (Fig. 5b): source shift + body bias
+    pub deep: bool,
+}
+
+/// Result of a unit solve.
+#[derive(Clone, Debug)]
+pub struct SolveOut {
+    /// output current h [A]
+    pub h: f64,
+    /// common-node voltage [V]
+    pub vb: f64,
+    /// per-branch gate voltages [V]
+    pub branch_v: Vec<f64>,
+    /// KCL residual at the solution [A]
+    pub residual: f64,
+}
+
+// §Perf: 48/40 bisection halvings resolve V_B / V_i to ~1e-11 V on a ~3 V
+// bracket — still 9 orders below U_T; cut from 64/56 after profiling the
+// nested solve (KCL-residual tests bound the error at 1e-3·C).
+const OUTER_ITERS: usize = 48;
+const INNER_ITERS: usize = 40;
+
+impl SacUnit {
+    /// Unit with `m` branches, nominal devices.
+    pub fn new(
+        node: &'static ProcessNode,
+        polarity: Polarity,
+        regime: Regime,
+        m: usize,
+    ) -> Self {
+        let dev = Mosfet::square(node, Polarity::N); // internal math is N-type
+        SacUnit {
+            node,
+            polarity,
+            regime,
+            t_c: 27.0,
+            vdd: node.vdd,
+            c_bias: node.bias_current(regime),
+            branches: vec![dev.clone(); m],
+            out_dev: dev,
+            deep: false,
+        }
+    }
+
+    pub fn at_temp(mut self, t_c: f64) -> Self {
+        self.t_c = t_c;
+        for d in &mut self.branches {
+            d.t_c = t_c;
+        }
+        self.out_dev.t_c = t_c;
+        self
+    }
+
+    pub fn with_supply(mut self, vdd: f64) -> Self {
+        self.vdd = vdd;
+        self
+    }
+
+    pub fn with_bias(mut self, c_bias: f64) -> Self {
+        self.c_bias = c_bias;
+        self
+    }
+
+    /// Deep-threshold variant (Fig. 5b): fixed source shift plus channel-
+    /// conduction manipulation (body at VDD), dropping operation to fA.
+    pub fn deep_threshold(mut self, source_shift: f64) -> Self {
+        self.deep = true;
+        for d in &mut self.branches {
+            d.source_shift = source_shift;
+            d.body_at_vdd = true;
+        }
+        self.out_dev.source_shift = source_shift;
+        self.out_dev.body_at_vdd = true;
+        self
+    }
+
+    /// Apply sampled mismatch to every device (Monte-Carlo trials).
+    pub fn with_mismatch(mut self, rng: &mut Rng) -> Self {
+        let mm = crate::device::MismatchModel::new(self.node);
+        for d in &mut self.branches {
+            *d = mm.sample(d, rng);
+        }
+        self.out_dev = mm.sample(&self.out_dev, rng);
+        self
+    }
+
+    /// Inner solve: V_i such that
+    /// f(V_B,0) − f(V_B,V_i) + f(V_i,V_B) = x  (eq. 12), monotone in V_i.
+    /// §Perf: operates on hoisted `DevOp` constants (no powf in the loop).
+    fn solve_branch_op(
+        &self,
+        op: &crate::device::ekv::DevOp,
+        vb: f64,
+        x: f64,
+        h_vb: f64,
+    ) -> f64 {
+        let (mut lo, mut hi) = (-0.6, self.vdd + 0.6);
+        // the residual is increasing in V_i; bisect
+        for _ in 0..INNER_ITERS {
+            let mid = 0.5 * (lo + hi);
+            let r = h_vb - op.forward(vb, mid) + op.forward(mid, vb) - x;
+            if r < 0.0 {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        0.5 * (lo + hi)
+    }
+
+    /// Full unit solve for input currents `x` [A] (length = #branches).
+    ///
+    /// Inputs are currents, hence clamped at the leakage floor.
+    pub fn solve(&self, x: &[f64]) -> SolveOut {
+        assert_eq!(x.len(), self.branches.len(), "input arity");
+        let xc: Vec<f64> = x
+            .iter()
+            .map(|&v| v.max(self.node.leak_floor))
+            .collect();
+        // hoist per-device constants out of the nested loops (§Perf)
+        let ops: Vec<crate::device::ekv::DevOp> =
+            self.branches.iter().map(|d| d.op_point()).collect();
+        let out_op = self.out_dev.op_point();
+
+        // outer bisection on V_B: KCL residual decreasing in V_B
+        let mut lo = -0.6;
+        let mut hi = self.vdd + 0.2;
+        let mut branch_v = vec![0.0; xc.len()];
+        for _ in 0..OUTER_ITERS {
+            let vb = 0.5 * (lo + hi);
+            let h_vb = out_op.forward(vb, 0.0);
+            let mut sum = 0.0;
+            for (i, &xi) in xc.iter().enumerate() {
+                let vi = self.solve_branch_op(&ops[i], vb, xi, h_vb);
+                branch_v[i] = vi;
+                sum += ops[i].forward(vi, vb);
+            }
+            if sum > self.c_bias {
+                lo = vb;
+            } else {
+                hi = vb;
+            }
+        }
+        let vb = 0.5 * (lo + hi);
+        let h_vb = out_op.forward(vb, 0.0);
+        let mut sum = 0.0;
+        for (i, &xi) in xc.iter().enumerate() {
+            let vi = self.solve_branch_op(&ops[i], vb, xi, h_vb);
+            branch_v[i] = vi;
+            sum += ops[i].forward(vi, vb);
+        }
+        SolveOut {
+            h: h_vb,
+            vb,
+            branch_v,
+            residual: sum - self.c_bias,
+        }
+    }
+
+    /// Normalized proto-shape (Fig. 3): input `z` in algorithmic units,
+    /// spline-expanded with a ground reference branch; output h normalized
+    /// by the unit's bias current.
+    ///
+    /// Current mapping: algorithmic value `v` ↦ `v * c_bias` (the
+    /// hyper-parameter C is the unit current of the cell).
+    pub fn proto_shape(&self, z: f64, s: usize) -> f64 {
+        let (offs, c_prime) = super::splines::schedule(s, 1.0);
+        let scale = self.c_bias;
+        let mut x = Vec::with_capacity(2 * s);
+        for &o in &offs {
+            x.push((z + o) * scale);
+        }
+        for &o in &offs {
+            x.push(o * scale);
+        }
+        let unit = self.resized(2 * s).with_bias(c_prime * scale);
+        unit.solve(&x).h / scale
+    }
+
+    /// Same unit config with a different branch count.
+    pub fn resized(&self, m: usize) -> SacUnit {
+        let mut u = self.clone();
+        let proto = u.branches.first().cloned().unwrap_or_else(|| {
+            Mosfet::square(self.node, Polarity::N)
+        });
+        u.branches = vec![proto; m];
+        u
+    }
+
+    /// Static power estimate of this unit at its bias point [W]:
+    /// tail current C plus the mirrored output current, times VDD.
+    pub fn static_power(&self, h: f64) -> f64 {
+        (self.c_bias + h) * self.vdd
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pdk::{CMOS180, FINFET7};
+    use crate::sac::gmp::{sac_h, Shape};
+
+    fn unit(node: &'static ProcessNode, regime: Regime, m: usize) -> SacUnit {
+        SacUnit::new(node, Polarity::N, regime, m)
+    }
+
+    #[test]
+    fn kcl_satisfied_at_solution() {
+        let u = unit(&CMOS180, Regime::WeakInversion, 3);
+        let c = u.c_bias;
+        let out = u.solve(&[0.8 * c, 0.3 * c, 1.4 * c]);
+        assert!(
+            out.residual.abs() < 1e-3 * c,
+            "residual={} c={c}",
+            out.residual
+        );
+        assert!(out.h >= 0.0);
+    }
+
+    #[test]
+    fn output_monotone_in_inputs() {
+        let u = unit(&CMOS180, Regime::WeakInversion, 2);
+        let c = u.c_bias;
+        let mut last = 0.0;
+        for k in 0..8 {
+            let x0 = 0.3 * c + 0.3 * c * k as f64;
+            let h = u.solve(&[x0, 0.5 * c]).h;
+            assert!(h >= last - 1e-18, "k={k}");
+            last = h;
+        }
+    }
+
+    #[test]
+    fn circuit_matches_algorithmic_gmp_wi() {
+        // In weak inversion the circuit must track the algorithmic GMP
+        // with a soft shape — the MP equivalence the framework rests on.
+        let u = unit(&CMOS180, Regime::WeakInversion, 4);
+        let c = u.c_bias;
+        let xn = [1.3, 0.4, 0.9, 1.8]; // algorithmic units
+        let x: Vec<f64> = xn.iter().map(|v| v * c).collect();
+        let h_circ = u.solve(&x).h / c;
+        // compare against relu-GMP: agreement within the soft-knee margin
+        let h_alg = sac_h(&xn, 1.0, Shape::Relu);
+        assert!(
+            (h_circ - h_alg).abs() < 0.25,
+            "h_circ={h_circ} h_alg={h_alg}"
+        );
+    }
+
+    #[test]
+    fn proto_shape_monotone_and_saturating() {
+        for regime in [Regime::WeakInversion, Regime::ModerateInversion] {
+            let u = unit(&CMOS180, regime, 1);
+            let mut last = -1.0;
+            for k in 0..=20 {
+                let z = -3.0 + 0.25 * k as f64;
+                let h = u.proto_shape(z, 3);
+                assert!(h >= last - 1e-6, "regime {regime} z={z}");
+                last = h;
+            }
+            assert!(last > 0.5, "regime {regime}: shape never rose (h={last})");
+        }
+    }
+
+    #[test]
+    fn shape_invariant_across_nodes_fig3() {
+        // Fig. 3a/b: normalized shapes at 180nm and 7nm coincide within a
+        // few percent of full scale.
+        let zs: Vec<f64> = (0..=24).map(|k| -2.5 + 0.15 * k as f64).collect();
+        let u180 = unit(&CMOS180, Regime::WeakInversion, 1);
+        let u7 = unit(&FINFET7, Regime::WeakInversion, 1);
+        let s180: Vec<f64> = zs.iter().map(|&z| u180.proto_shape(z, 3)).collect();
+        let s7: Vec<f64> = zs.iter().map(|&z| u7.proto_shape(z, 3)).collect();
+        let max180 = s180.iter().cloned().fold(0.0, f64::max);
+        let max7 = s7.iter().cloned().fold(0.0, f64::max);
+        for i in 0..zs.len() {
+            let d = (s180[i] / max180 - s7[i] / max7).abs();
+            assert!(d < 0.08, "z={} dev={d}", zs[i]);
+        }
+    }
+
+    #[test]
+    fn shape_robust_to_temperature_fig4a() {
+        let zs: Vec<f64> = (0..=16).map(|k| -2.0 + 0.2 * k as f64).collect();
+        let cold = unit(&CMOS180, Regime::WeakInversion, 1).at_temp(-45.0);
+        let hot = unit(&CMOS180, Regime::WeakInversion, 1).at_temp(125.0);
+        let sc: Vec<f64> = zs.iter().map(|&z| cold.proto_shape(z, 3)).collect();
+        let sh: Vec<f64> = zs.iter().map(|&z| hot.proto_shape(z, 3)).collect();
+        let mc = sc.iter().cloned().fold(0.0, f64::max);
+        let mh = sh.iter().cloned().fold(0.0, f64::max);
+        for i in 0..zs.len() {
+            assert!(
+                (sc[i] / mc - sh[i] / mh).abs() < 0.10,
+                "z={} cold={} hot={}",
+                zs[i],
+                sc[i] / mc,
+                sh[i] / mh
+            );
+        }
+    }
+
+    #[test]
+    fn deep_threshold_operates_at_femtoamps() {
+        // Fig. 5c: with source shifting the unit still computes at fA bias
+        let u = unit(&CMOS180, Regime::WeakInversion, 1)
+            .deep_threshold(0.35)
+            .with_bias(5.0e-14);
+        let h_low = u.proto_shape(-2.0, 3);
+        let h_high = u.proto_shape(1.0, 3);
+        assert!(
+            h_high > 4.0 * h_low.max(1e-3),
+            "shape collapsed: lo={h_low} hi={h_high}"
+        );
+    }
+
+    #[test]
+    fn static_power_scales_with_bias() {
+        let wi = unit(&CMOS180, Regime::WeakInversion, 2);
+        let si = unit(&CMOS180, Regime::StrongInversion, 2);
+        assert!(si.static_power(0.0) > 100.0 * wi.static_power(0.0));
+    }
+}

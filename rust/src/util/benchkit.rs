@@ -1,0 +1,165 @@
+//! Criterion-like micro-benchmark harness (criterion is not vendored).
+//!
+//! Warms up, picks an iteration count targeting a fixed measurement window,
+//! collects per-sample timings and reports mean / std / min / p50 /
+//! throughput.  Used by `rust/benches/*.rs` (wired as `harness = false`
+//! cargo benches) and by the §Perf iteration loop.
+
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// nanoseconds per iteration, one entry per sample
+    pub samples_ns: Vec<f64>,
+    pub iters_per_sample: u64,
+}
+
+impl BenchResult {
+    pub fn mean_ns(&self) -> f64 {
+        stats::summarize(&self.samples_ns).mean
+    }
+
+    pub fn std_ns(&self) -> f64 {
+        stats::summarize(&self.samples_ns).std
+    }
+
+    pub fn min_ns(&self) -> f64 {
+        stats::summarize(&self.samples_ns).min
+    }
+
+    pub fn p50_ns(&self) -> f64 {
+        stats::percentile(&self.samples_ns, 50.0)
+    }
+
+    /// items/second given `items` work items per iteration.
+    pub fn throughput(&self, items: f64) -> f64 {
+        items / (self.mean_ns() * 1e-9)
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>12}/iter  (±{:>8}, min {:>10}, p50 {:>10}, {} samples × {} iters)",
+            self.name,
+            fmt_ns(self.mean_ns()),
+            fmt_ns(self.std_ns()),
+            fmt_ns(self.min_ns()),
+            fmt_ns(self.p50_ns()),
+            self.samples_ns.len(),
+            self.iters_per_sample,
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark configuration.
+#[derive(Clone, Debug)]
+pub struct Bench {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub samples: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(300),
+            measure: Duration::from_millis(1200),
+            samples: 20,
+        }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Self {
+            warmup: Duration::from_millis(50),
+            measure: Duration::from_millis(200),
+            samples: 8,
+        }
+    }
+
+    /// Run `f` repeatedly; `f` should return something observable to keep
+    /// the optimizer honest (we black-box it).
+    pub fn run<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> BenchResult {
+        // Warmup + estimate cost of one iteration.
+        let t0 = Instant::now();
+        let mut warm_iters: u64 = 0;
+        while t0.elapsed() < self.warmup {
+            black_box(f());
+            warm_iters += 1;
+        }
+        let per_iter = self.warmup.as_nanos() as f64 / warm_iters.max(1) as f64;
+        let budget_ns = self.measure.as_nanos() as f64 / self.samples as f64;
+        let iters = ((budget_ns / per_iter).ceil() as u64).max(1);
+
+        let mut samples_ns = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..iters {
+                black_box(f());
+            }
+            samples_ns.push(t.elapsed().as_nanos() as f64 / iters as f64);
+        }
+        BenchResult {
+            name: name.to_string(),
+            samples_ns,
+            iters_per_sample: iters,
+        }
+    }
+}
+
+/// Optimization barrier (std::hint::black_box is stable since 1.66).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bench::quick();
+        let r = b.run("spin", || {
+            let mut s = 0u64;
+            for i in 0..100u64 {
+                s = s.wrapping_add(i * i);
+            }
+            s
+        });
+        assert!(r.mean_ns() > 0.0);
+        assert_eq!(r.samples_ns.len(), 8);
+        assert!(r.report().contains("spin"));
+    }
+
+    #[test]
+    fn throughput_sane() {
+        let b = Bench::quick();
+        let r = b.run("noop", || 1u64);
+        // a no-op loop iteration should exceed 1M items/s comfortably
+        assert!(r.throughput(1.0) > 1e6);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(12.0).contains("ns"));
+        assert!(fmt_ns(12_000.0).contains("µs"));
+        assert!(fmt_ns(12_000_000.0).contains("ms"));
+        assert!(fmt_ns(2e9).contains(" s"));
+    }
+}

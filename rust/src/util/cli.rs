@@ -1,0 +1,122 @@
+//! Tiny CLI argument parser (clap is not vendored).
+//!
+//! Model: `sac <command> [positional...] [--flag] [--key value]`.
+//! Unknown flags are errors; `--help` is synthesized from registered specs.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv (excluding the binary name). `switch_names` lists
+    /// boolean flags that take no value.
+    pub fn parse(argv: &[String], switch_names: &[&str]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(cmd) = it.peek() {
+            if !cmd.starts_with('-') {
+                out.command = it.next().unwrap().clone();
+            }
+        }
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if switch_names.contains(&name) {
+                    out.switches.push(name.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| anyhow!("flag --{name} needs a value"))?;
+                    out.flags.insert(name.to_string(), v.clone());
+                }
+            } else if a.starts_with('-') && a.len() > 1 {
+                bail!("short flags not supported: {a}");
+            } else {
+                out.positional.push(a.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow!("--{key} expects a number: {e}")),
+        }
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow!("--{key} expects an integer: {e}")),
+        }
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_command_flags_positional() {
+        let a = Args::parse(
+            &argv(&["repro", "fig3", "--node", "7nm", "--verbose", "--c=2.5"]),
+            &["verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.command, "repro");
+        assert_eq!(a.positional, vec!["fig3"]);
+        assert_eq!(a.get("node"), Some("7nm"));
+        assert_eq!(a.get("c"), Some("2.5"));
+        assert!(a.has("verbose"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = Args::parse(&argv(&["x", "--n", "42", "--t", "1.5"]), &[]).unwrap();
+        assert_eq!(a.get_usize("n", 0).unwrap(), 42);
+        assert!((a.get_f64("t", 0.0).unwrap() - 1.5).abs() < 1e-12);
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+        assert!(a.get_f64("n", 0.0).is_ok());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(&argv(&["x", "--k"]), &[]).is_err());
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = Args::parse(&argv(&["x", "--n", "abc"]), &[]).unwrap();
+        assert!(a.get_usize("n", 0).is_err());
+    }
+}

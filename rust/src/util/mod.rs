@@ -1,0 +1,11 @@
+//! Infrastructure substrates built in-repo (the image vendors no
+//! serde_json / clap / rayon / criterion / proptest — see DESIGN.md §4).
+
+pub mod benchkit;
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod propcheck;
+pub mod rng;
+pub mod stats;
+pub mod table;

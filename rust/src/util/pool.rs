@@ -1,0 +1,128 @@
+//! Scoped thread pool for parallel sweeps and Monte-Carlo trials
+//! (rayon is not vendored; std::thread::scope gives us safe borrows).
+//!
+//! The unit of work is an index range split into contiguous chunks, one
+//! queue entry per chunk, drained by `nthreads` workers through an atomic
+//! cursor — simple, allocation-free work distribution that scales fine for
+//! our coarse-grained trials (each MC trial is thousands of device
+//! evaluations).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use by default (leaves one core for the OS).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get().saturating_sub(1).max(1))
+        .unwrap_or(4)
+}
+
+/// Run `f(i)` for every `i in 0..n` across `nthreads` workers, collecting
+/// results in index order.  `f` must be `Sync` (called from many threads).
+pub fn parallel_map<T, F>(n: usize, nthreads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let nthreads = nthreads.max(1).min(n.max(1));
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    if n == 0 {
+        return Vec::new();
+    }
+    let cursor = AtomicUsize::new(0);
+    // fine-grained stealing: chunk of 1..=8 depending on n
+    let chunk = (n / (nthreads * 8)).clamp(1, 64);
+
+    {
+        let out_ptr = SendPtr(out.as_mut_ptr());
+        let out_ref = &out_ptr;
+        std::thread::scope(|scope| {
+            for _ in 0..nthreads {
+                let f = &f;
+                let cursor = &cursor;
+                let out_ptr = *out_ref;
+                scope.spawn(move || loop {
+                    let start = cursor.fetch_add(chunk, Ordering::Relaxed);
+                    if start >= n {
+                        break;
+                    }
+                    let end = (start + chunk).min(n);
+                    for i in start..end {
+                        let val = f(i);
+                        // SAFETY: each index i is claimed by exactly one
+                        // worker via the atomic cursor, and `out` outlives
+                        // the scope.
+                        unsafe {
+                            *out_ptr.get().add(i) = Some(val);
+                        }
+                    }
+                });
+            }
+        });
+    }
+    out.into_iter().map(|v| v.expect("worker wrote all")).collect()
+}
+
+/// Like `parallel_map` but reduces results with `combine` (order-insensitive).
+pub fn parallel_reduce<T, F, R>(n: usize, nthreads: usize, f: F, init: T, combine: R) -> T
+where
+    T: Send + Clone,
+    F: Fn(usize) -> T + Sync,
+    R: Fn(T, T) -> T,
+{
+    parallel_map(n, nthreads, f)
+        .into_iter()
+        .fold(init, combine)
+}
+
+struct SendPtr<T>(*mut T);
+
+// manual Clone/Copy: the derive would demand `T: Copy`, but we only copy
+// the pointer itself.
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    /// Whole-struct accessor: keeps edition-2021 disjoint closure capture
+    /// from capturing the raw pointer field (which is not `Send`) directly.
+    fn get(&self) -> *mut T {
+        self.0
+    }
+}
+// SAFETY: distinct indices are written by distinct workers (atomic cursor).
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_preserves_order() {
+        let out = parallel_map(1000, 4, |i| i * i);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn map_empty_and_single() {
+        assert!(parallel_map(0, 4, |i| i).is_empty());
+        assert_eq!(parallel_map(1, 4, |i| i + 7), vec![7]);
+    }
+
+    #[test]
+    fn reduce_sums() {
+        let total = parallel_reduce(100, 3, |i| i as u64, 0u64, |a, b| a + b);
+        assert_eq!(total, 4950);
+    }
+
+    #[test]
+    fn threads_more_than_items() {
+        let out = parallel_map(3, 16, |i| i);
+        assert_eq!(out, vec![0, 1, 2]);
+    }
+}

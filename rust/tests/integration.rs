@@ -1,0 +1,175 @@
+//! Integration tests across the stack: python-goldens ↔ rust solver
+//! parity, artifact loading, PJRT execution, serving coordinator, and the
+//! circuit-vs-compiled cross-check.  These need `make artifacts` to have
+//! run; each test skips (with a message) when artifacts are missing so
+//! `cargo test` stays green on a fresh checkout.
+
+use std::path::PathBuf;
+
+use sac::cells::{Algorithmic, HProvider};
+use sac::coordinator::InferenceServer;
+use sac::data::Dataset;
+use sac::runtime::Runtime;
+use sac::sac::gmp::{solve_bisect, Shape, GMP_ITERS};
+use sac::util::json;
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = sac::runtime::default_artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn rust_gmp_matches_python_goldens() {
+    let Some(dir) = artifacts() else { return };
+    let j = json::parse_file(&dir.join("goldens_gmp.json")).unwrap();
+    let cases = j.get("gmp").unwrap().as_arr().unwrap();
+    assert!(!cases.is_empty());
+    for case in cases {
+        let c = case.get("c").unwrap().as_f64().unwrap();
+        let xs = case.get("x").unwrap().as_f64_mat().unwrap();
+        let hs = case.get("h").unwrap().as_f64_vec().unwrap();
+        for (row, &h_py) in xs.iter().zip(&hs) {
+            let h_rs = solve_bisect(row, c, Shape::Relu, GMP_ITERS);
+            assert!(
+                (h_rs - h_py).abs() < 1e-5,
+                "c={c} rust={h_rs} python={h_py}"
+            );
+        }
+    }
+}
+
+#[test]
+fn rust_cells_match_python_goldens() {
+    let Some(dir) = artifacts() else { return };
+    let j = json::parse_file(&dir.join("goldens_gmp.json")).unwrap();
+    let zs = j.get("z").unwrap().as_f64_vec().unwrap();
+    let cells = j.get("cells").unwrap();
+    let alg = Algorithmic::relu();
+    let check = |name: &str, f: &dyn Fn(f64) -> f64| {
+        let py = cells.get(name).unwrap().as_f64_vec().unwrap();
+        for (&z, &y_py) in zs.iter().zip(&py) {
+            let y_rs = f(z);
+            assert!(
+                (y_rs - y_py).abs() < 1e-4,
+                "{name}(z={z}): rust={y_rs} python={y_py}"
+            );
+        }
+    };
+    check("proto_s1", &|z| sac::cells::proto_unit(&alg, z, 1, 1.0));
+    check("proto_s3", &|z| sac::cells::proto_unit(&alg, z, 3, 1.0));
+    check("relu", &|z| {
+        sac::cells::activations::relu_cell(&alg, z, 0.05)
+    });
+    check("phi1", &|z| {
+        sac::cells::activations::phi1_cell(&alg, z, 1.0, 3, 0.5)
+    });
+    check("cosh", &|z| {
+        sac::cells::activations::cosh_cell(&alg, z, 3, 1.0)
+    });
+    check("sinh", &|z| {
+        sac::cells::activations::sinh_cell(&alg, z, 3, 1.0)
+    });
+}
+
+#[test]
+fn pjrt_gmp_kernel_matches_rust_solver() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let exe = rt.load("gmp_kernel").unwrap();
+    let shape = &exe.spec.params[0].shape;
+    let (b, m) = (shape[0], shape[1]);
+    let c = exe.spec.meta.get("c").unwrap().as_f64().unwrap();
+    // deterministic pseudo-random input
+    let mut rng = sac::util::rng::Rng::new(99);
+    let buf: Vec<f32> = (0..b * m)
+        .map(|_| rng.uniform_in(-3.0, 3.0) as f32)
+        .collect();
+    let out = exe.run_f32(&[&buf]).unwrap();
+    assert_eq!(out.len(), b);
+    // spot-check rows against the rust bisection solver
+    for row in (0..b).step_by(97) {
+        let xs: Vec<f64> = (0..m).map(|j| buf[row * m + j] as f64).collect();
+        let h_rs = solve_bisect(&xs, c, Shape::Relu, GMP_ITERS);
+        assert!(
+            (out[row] as f64 - h_rs).abs() < 1e-4,
+            "row {row}: pjrt={} rust={h_rs}",
+            out[row]
+        );
+    }
+}
+
+#[test]
+fn serving_accuracy_matches_training_record() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    for task in ["xor", "arem"] {
+        let mut server = InferenceServer::new(&rt, task).unwrap();
+        let ds = Dataset::load_sacd(&dir.join(format!("{task}_test.bin"))).unwrap();
+        for i in 0..ds.n {
+            server.submit(ds.row(i).to_vec());
+        }
+        let results = server.drain().unwrap();
+        assert_eq!(results.len(), ds.n, "padding leaked into results");
+        let correct = results
+            .iter()
+            .filter(|&&(id, pred, _)| pred == ds.y[id as usize] as usize)
+            .count();
+        let acc = correct as f64 / ds.n as f64;
+        // the AOT graph runs the same math as training → accuracies match
+        // up to the bisect-vs-exact solver difference
+        let recorded = server.net.acc_sac_algorithmic;
+        assert!(
+            (acc - recorded).abs() < 0.03,
+            "{task}: served acc {acc:.3} vs recorded {recorded:.3}"
+        );
+    }
+}
+
+#[test]
+fn table_tier_agrees_with_algorithmic_on_xor() {
+    let Some(dir) = artifacts() else { return };
+    let net = sac::nn::load_net(&dir, "xor").unwrap();
+    let ds = Dataset::load_sacd(&dir.join("xor_test.bin")).unwrap();
+    let alg =
+        sac::nn::evaluate(&net, || Box::new(Algorithmic::relu()), &ds, 128, 4);
+    let tm = sac::sac::TableModel::calibrate(
+        &sac::pdk::CMOS180,
+        sac::pdk::regime::Regime::WeakInversion,
+        27.0,
+    );
+    let tab = sac::nn::evaluate(&net, || Box::new(tm.clone()), &ds, 128, 4);
+    assert!(
+        (alg.accuracy() - tab.accuracy()).abs() < 0.08,
+        "alg={} table={}",
+        alg.accuracy(),
+        tab.accuracy()
+    );
+}
+
+#[test]
+fn manifest_lists_all_tasks() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    for entry in ["gmp_kernel", "xor_mlp", "arem_mlp", "digits_mlp"] {
+        assert!(
+            rt.manifest.entries.contains_key(entry),
+            "missing manifest entry {entry}"
+        );
+    }
+}
+
+#[test]
+fn provider_backends_share_label_contract() {
+    let alg = Algorithmic::relu();
+    assert!(alg.label().contains("algorithmic"));
+    let cc = sac::cells::CircuitCorner::new(
+        &sac::pdk::CMOS180,
+        sac::pdk::regime::Regime::WeakInversion,
+    );
+    assert!(cc.label().contains("cmos180"));
+}
