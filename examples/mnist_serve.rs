@@ -1,11 +1,11 @@
 //! END-TO-END driver (DESIGN.md deliverable): load the trained S-AC digit
-//! classifier compiled ahead-of-time to an HLO artifact, serve batched
-//! classification requests through the rust coordinator on the PJRT
-//! runtime, report accuracy + latency/throughput, and cross-check one
-//! batch against the circuit-tier golden path.
+//! classifier exported by the AOT pipeline, serve batched classification
+//! requests through the coordinator on the native runtime, report accuracy
+//! + latency/throughput, and cross-check one batch against the circuit-tier
+//! golden path.
 //!
-//! This proves the three layers compose: the Pallas/JAX GMP kernel is
-//! inside the HLO, the rust coordinator batches and executes it, and the
+//! This proves the three layers compose: the GMP solve is inside the
+//! executed graph, the coordinator batches and executes it, and the
 //! device-level simulator agrees with the compiled fast path.
 //!
 //! Run: `make artifacts && cargo run --release --example mnist_serve`
@@ -23,15 +23,15 @@ use sac::sac::TableModel;
 fn main() -> anyhow::Result<()> {
     let artifacts = default_artifacts_dir();
     let rt = Runtime::new(&artifacts)?;
-    println!("PJRT platform: {}", rt.platform());
+    println!("backend: {}", rt.platform());
 
-    // ---- fast path: AOT-compiled S-AC network -------------------------
-    let t_compile = Instant::now();
+    // ---- fast path: the exported S-AC network -------------------------
+    let t_load = Instant::now();
     let mut server = InferenceServer::new(&rt, "digits")?;
     println!(
-        "compiled digits_mlp in {:.2}s  (net {:?}, batch {})",
-        t_compile.elapsed().as_secs_f64(),
-        server.net.sizes,
+        "loaded digits_mlp in {:.2}s  (net {:?}, batch {})",
+        t_load.elapsed().as_secs_f64(),
+        server.engine.net.sizes,
         server.batcher.batch_size
     );
 
@@ -46,7 +46,7 @@ fn main() -> anyhow::Result<()> {
         .filter(|&&(id, pred, _)| pred == ds.y[id as usize] as usize)
         .count();
     println!(
-        "\nfast path (PJRT): accuracy {}/{} = {:.1}%",
+        "\nfast path (native): accuracy {}/{} = {:.1}%",
         correct,
         n,
         correct as f64 / n as f64 * 100.0

@@ -1,5 +1,6 @@
 //! Hot-path micro-benchmarks (§Perf): the GMP solvers, the device-exact
-//! unit solve, cell evaluation and PJRT execution.
+//! unit solve, cell evaluation, native batched execution and the serving
+//! router (the artifact-dependent sections skip on a clean checkout).
 //!
 //! `cargo bench` (harness=false; uses the in-repo benchkit).
 
@@ -56,12 +57,13 @@ fn main() {
         }));
     }
 
-    // --- hot spot 5: PJRT batched execution ------------------------------
+    // --- hot spot 5: native batched execution (needs artifacts) ----------
     if let Ok(rt) = sac::runtime::Runtime::new(&artifacts) {
         if let Ok(exe) = rt.load("gmp_kernel") {
+            let exe = exe.with_par_threads(sac::util::pool::default_threads());
             let n: usize = exe.spec.params[0].shape.iter().product();
             let buf: Vec<f32> = (0..n).map(|i| (i % 17) as f32 * 0.1 - 0.8).collect();
-            reports.push(b.run("pjrt/gmp_kernel 4096x8", || {
+            reports.push(b.run("native/gmp_kernel 4096x8", || {
                 black_box(exe.run_f32(&[&buf]).unwrap())
             }));
         }
@@ -69,13 +71,45 @@ fn main() {
             let ds =
                 sac::data::Dataset::load_sacd(&artifacts.join("digits_test.bin")).unwrap();
             let quick = Bench::quick();
-            reports.push(quick.run("pjrt/digits_mlp batch=64", || {
+            reports.push(quick.run("native/digits_mlp batch=64", || {
                 for i in 0..64 {
                     server.submit(ds.row(i).to_vec());
                 }
                 black_box(server.drain().unwrap())
             }));
         }
+    }
+
+    // --- hot spot 6: router concurrent serving (synthetic, no artifacts) -
+    {
+        use sac::coordinator::{synthetic_engine, Router, RouterConfig};
+        use std::time::Duration;
+        let router = Router::new(
+            RouterConfig {
+                workers: sac::util::pool::default_threads().min(8),
+                ..RouterConfig::default()
+            },
+            vec![
+                ("a".into(), synthetic_engine(1, &[16, 12, 4], 32).unwrap()),
+                ("b".into(), synthetic_engine(2, &[16, 12, 4], 32).unwrap()),
+            ],
+        );
+        let quick = Bench::quick();
+        let mut rng = Rng::new(5);
+        let feats: Vec<Vec<f32>> = (0..128)
+            .map(|_| (0..16).map(|_| rng.uniform_in(-1.0, 1.0) as f32).collect())
+            .collect();
+        reports.push(quick.run("router/2-task 128 reqs (submit+drain)", || {
+            let reqs: Vec<_> = feats
+                .iter()
+                .enumerate()
+                .map(|(i, f)| router.submit(i % 2, f.clone()).unwrap())
+                .collect();
+            router.drain(Duration::from_secs(60)).unwrap();
+            for r in reqs {
+                black_box(router.try_take(r).unwrap());
+            }
+        }));
     }
 
     println!("\n=== hotpath benchmarks ===");

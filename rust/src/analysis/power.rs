@@ -16,6 +16,10 @@
 //! currents, supplies, capacitances) — those are what EXPERIMENTS.md
 //! compares.
 
+// Physical-unit annotations like "[V]" / "[A]" in the docs below are
+// prose, not intra-doc links.
+#![allow(rustdoc::broken_intra_doc_links)]
+
 use crate::cells::activations::CellKind;
 use crate::pdk::{Polarity, ProcessNode, regime::Regime};
 

@@ -11,6 +11,10 @@
 //! at all fidelities — which is precisely the paper's synthesizability
 //! claim for analog standard cells.
 
+// Physical-unit annotations like "[V]" / "[A]" in the docs below are
+// prose, not intra-doc links.
+#![allow(rustdoc::broken_intra_doc_links)]
+
 pub mod activations;
 pub mod multiplier;
 pub mod wta;

@@ -1,31 +1,78 @@
 //! Serving metrics: batch latency distribution and sustained throughput.
+//!
+//! The router keeps one `ServeMetrics` per task lane and
+//! [`ServeMetrics::merge`]s them into a fleet-wide aggregate on demand.
+//! Lifetime totals (batches, rows, busy time) are exact counters; the
+//! per-batch latency samples backing the mean/percentile estimates are a
+//! bounded window of the most recent batches, so a long-lived router does
+//! not grow without limit.
 
 use std::time::Duration;
 
 use crate::util::stats;
 
+/// Retained latency samples per lane; older samples are evicted in blocks
+/// (amortized O(1)) once the window overflows.
+const MAX_SAMPLES: usize = 8192;
+
 #[derive(Clone, Debug, Default)]
 pub struct ServeMetrics {
-    /// per-batch latency [s]
+    /// per-batch latency in seconds (bounded window, most recent batches)
     pub batch_latency_s: Vec<f64>,
-    /// live rows per batch
+    /// live rows per batch (window parallel to `batch_latency_s`)
     pub batch_rows: Vec<usize>,
+    /// lifetime batch count (exact, survives window eviction)
+    pub total_batches: usize,
+    /// lifetime request count (exact)
+    pub total_rows: usize,
+    /// lifetime busy time in seconds (exact)
+    pub total_time_s: f64,
 }
 
 impl ServeMetrics {
     pub fn record_batch(&mut self, rows: usize, dt: Duration) {
-        self.batch_latency_s.push(dt.as_secs_f64());
+        let secs = dt.as_secs_f64();
+        self.batch_latency_s.push(secs);
         self.batch_rows.push(rows);
+        self.total_batches += 1;
+        self.total_rows += rows;
+        self.total_time_s += secs;
+        self.evict();
+    }
+
+    /// Fold another lane's metrics into this one (per-task → aggregate).
+    ///
+    /// Deliberately does *not* evict: the aggregate is a transient
+    /// snapshot, and evicting here would bias its percentiles toward the
+    /// last-merged lane (earlier lanes' samples sit at the front of the
+    /// window).  It holds at most `lanes × MAX_SAMPLES` samples.
+    pub fn merge(&mut self, other: &ServeMetrics) {
+        self.batch_latency_s
+            .extend_from_slice(&other.batch_latency_s);
+        self.batch_rows.extend_from_slice(&other.batch_rows);
+        self.total_batches += other.total_batches;
+        self.total_rows += other.total_rows;
+        self.total_time_s += other.total_time_s;
+    }
+
+    fn evict(&mut self) {
+        if self.batch_latency_s.len() > MAX_SAMPLES {
+            let cut = self.batch_latency_s.len() - MAX_SAMPLES / 2;
+            self.batch_latency_s.drain(..cut);
+            self.batch_rows.drain(..cut);
+        }
     }
 
     pub fn total_requests(&self) -> usize {
-        self.batch_rows.iter().sum()
+        self.total_rows
     }
 
+    /// Mean batch latency over the retained window, in milliseconds.
     pub fn mean_latency_ms(&self) -> f64 {
         stats::summarize(&self.batch_latency_s).mean * 1e3
     }
 
+    /// p99 batch latency over the retained window, in milliseconds.
     pub fn p99_latency_ms(&self) -> f64 {
         if self.batch_latency_s.is_empty() {
             return 0.0;
@@ -33,20 +80,19 @@ impl ServeMetrics {
         stats::percentile(&self.batch_latency_s, 99.0) * 1e3
     }
 
-    /// requests / second over the measured batches
+    /// Lifetime requests / second of worker busy time.
     pub fn throughput_rps(&self) -> f64 {
-        let total_t: f64 = self.batch_latency_s.iter().sum();
-        if total_t <= 0.0 {
+        if self.total_time_s <= 0.0 {
             return 0.0;
         }
-        self.total_requests() as f64 / total_t
+        self.total_rows as f64 / self.total_time_s
     }
 
     pub fn report(&self) -> String {
         format!(
             "batches={} requests={} mean={:.3} ms p99={:.3} ms throughput={:.0} req/s",
-            self.batch_latency_s.len(),
-            self.total_requests(),
+            self.total_batches,
+            self.total_rows,
             self.mean_latency_ms(),
             self.p99_latency_ms(),
             self.throughput_rps()
@@ -68,6 +114,34 @@ mod tests {
         let rps = m.throughput_rps();
         assert!((rps - 6.0 / 0.030).abs() < 1.0, "rps={rps}");
         assert!(m.report().contains("requests=6"));
+    }
+
+    #[test]
+    fn merge_aggregates_lanes() {
+        let mut a = ServeMetrics::default();
+        a.record_batch(4, Duration::from_millis(10));
+        let mut b = ServeMetrics::default();
+        b.record_batch(2, Duration::from_millis(20));
+        b.record_batch(1, Duration::from_millis(5));
+        a.merge(&b);
+        assert_eq!(a.total_requests(), 7);
+        assert_eq!(a.total_batches, 3);
+        assert_eq!(a.batch_latency_s.len(), 3);
+    }
+
+    #[test]
+    fn window_is_bounded_but_totals_exact() {
+        let mut m = ServeMetrics::default();
+        let n = MAX_SAMPLES * 3;
+        for _ in 0..n {
+            m.record_batch(2, Duration::from_micros(100));
+        }
+        assert!(m.batch_latency_s.len() <= MAX_SAMPLES);
+        assert_eq!(m.batch_rows.len(), m.batch_latency_s.len());
+        assert_eq!(m.total_batches, n);
+        assert_eq!(m.total_requests(), 2 * n);
+        // throughput uses the exact lifetime counters, not the window
+        assert!((m.throughput_rps() - 2.0 / 100e-6).abs() < 1.0);
     }
 
     #[test]

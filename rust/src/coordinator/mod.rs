@@ -1,47 +1,74 @@
-//! Layer-3 coordinator: the inference server tying the stack together.
+//! Layer-3 coordinator: the serving subsystem tying the stack together.
 //!
-//! Requests → [`DynamicBatcher`] → backend:
-//!  * **PJRT fast path** — the AOT-compiled S-AC network (`runtime`),
-//!  * **circuit golden path** — the device-exact/table-model evaluator
-//!    (`nn`), used for cross-checks and characterization.
+//! Three pieces compose, smallest to largest:
 //!
-//! Python is never on this path; the process is self-contained once
-//! `artifacts/` exists.
+//! * [`Engine`] — one task's executable plus its pre-materialized weight
+//!   buffers.  Stateless (`run_batch(&self, …)`), `Send + Sync`, so many
+//!   workers can execute batches of the same task concurrently.
+//! * [`InferenceServer`] — the single-task synchronous facade: an `Engine`
+//!   behind a [`DynamicBatcher`] with its own [`ServeMetrics`].  Used by
+//!   the `serve` CLI smoke path and the examples.
+//! * [`router::Router`] — the multi-task, multi-worker serving subsystem:
+//!   N engines behind one submit API, batches dispatched to a
+//!   [`crate::util::pool::WorkerPool`], a deadline flusher so tail requests
+//!   are never stranded, and per-task metrics aggregation.
+//!
+//! Requests flow  submit → batcher → worker → engine → results map.  The
+//! backend is the native executor (`runtime`); the circuit golden path
+//! (`nn` on the table/device tiers) cross-checks it in the integration
+//! tests.  Python is never on this path.
 
 pub mod batcher;
 pub mod metrics;
+pub mod router;
 
-use std::path::Path;
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
 pub use batcher::{Batch, DynamicBatcher};
 pub use metrics::ServeMetrics;
+pub use router::{RequestId, Response, Router, RouterConfig};
 
 use crate::data::TrainedNet;
 use crate::runtime::{Executable, Runtime};
+use crate::util::rng::Rng;
 
-/// Inference server for one task's AOT executable.
-pub struct InferenceServer {
+/// One answered inference row: (request id, predicted class, logits).
+pub type Answer = (u64, usize, Vec<f32>);
+
+/// One task's executable with pre-materialized weight parameter buffers.
+///
+/// Execution is a pure function of the batch, which is what lets the
+/// router run many batches of the same task in parallel without locks.
+#[derive(Clone, Debug)]
+pub struct Engine {
     pub net: TrainedNet,
     pub exe: Executable,
-    pub batcher: DynamicBatcher,
     /// flattened f32 weight buffers in manifest parameter order
     weight_bufs: Vec<Vec<f32>>,
+    /// compiled batch dimension
+    pub batch_size: usize,
+    /// input feature dimension
+    pub dim: usize,
     pub n_classes: usize,
-    pub metrics: ServeMetrics,
 }
 
-impl InferenceServer {
+impl Engine {
     /// Build from the artifact directory: loads `<task>_mlp` and
     /// `weights_<task>.json`, pre-materializing the weight literals.
-    pub fn new(rt: &Runtime, task: &str) -> Result<InferenceServer> {
+    pub fn new(rt: &Runtime, task: &str) -> Result<Engine> {
         let net = TrainedNet::load(
             &rt.artifacts_dir.join(format!("weights_{task}.json")),
         )?;
         let exe = rt.load(&format!("{task}_mlp"))?;
-        // parameter order: w1,b1,w2,b2,...,x  (see aot.py)
+        Engine::from_parts(net, exe)
+    }
+
+    /// Build from in-memory parts (artifact-free: see
+    /// [`Executable::native_mlp`]).
+    pub fn from_parts(net: TrainedNet, exe: Executable) -> Result<Engine> {
+        // parameter order: w1,b1,w2,b2,…,x  (see aot.py)
         let mut weight_bufs = Vec::new();
         for li in 0..net.n_layers() {
             weight_bufs.push(net.weights[li].iter().map(|&v| v as f32).collect());
@@ -52,37 +79,31 @@ impl InferenceServer {
             .params
             .last()
             .ok_or_else(|| anyhow!("no params in manifest"))?;
-        let batch = xspec.shape[0];
+        let batch_size = xspec.shape[0];
         let dim = xspec.shape[1];
         if dim != net.sizes[0] {
             return Err(anyhow!("manifest dim {dim} != net input {}", net.sizes[0]));
         }
         let n_classes = *net.sizes.last().unwrap();
-        Ok(InferenceServer {
+        Ok(Engine {
             net,
             exe,
-            batcher: DynamicBatcher::new(batch, dim),
             weight_bufs,
+            batch_size,
+            dim,
             n_classes,
-            metrics: ServeMetrics::default(),
         })
     }
 
-    /// Enqueue one request.
-    pub fn submit(&mut self, features: Vec<f32>) -> u64 {
-        self.batcher.submit(features)
-    }
-
     /// Run one materialized batch through the executable; returns
-    /// (request id, predicted class, logits) per live row.
-    pub fn run_batch(&mut self, batch: &Batch) -> Result<Vec<(u64, usize, Vec<f32>)>> {
-        let t0 = Instant::now();
+    /// (request id, predicted class, logits) per live row.  Only the live
+    /// rows are computed — a deadline-flushed tail batch with one request
+    /// costs one row of solves, not the whole padded batch.
+    pub fn run_batch(&self, batch: &Batch) -> Result<Vec<Answer>> {
         let mut params: Vec<&[f32]> =
             self.weight_bufs.iter().map(|b| b.as_slice()).collect();
         params.push(&batch.data);
-        let out = self.exe.run_f32(&params)?;
-        let dt = t0.elapsed();
-        self.metrics.record_batch(batch.live, dt);
+        let out = self.exe.run_f32_rows(&params, batch.live)?;
         let k = self.n_classes;
         let mut results = Vec::with_capacity(batch.live);
         for (r, &id) in batch.ids.iter().enumerate() {
@@ -97,9 +118,83 @@ impl InferenceServer {
         }
         Ok(results)
     }
+}
+
+/// A deterministic synthetic engine for benches / demos / tests that must
+/// run without any artifact directory: a random-weight S-AC MLP with the
+/// cheap `relu`/`S=1` cell configuration.
+pub fn synthetic_engine(seed: u64, sizes: &[usize], batch: usize) -> Result<Engine> {
+    assert!(sizes.len() >= 2, "need at least [in, out] sizes");
+    let mut rng = Rng::new(seed);
+    let nl = sizes.len() - 1;
+    let mut weights = Vec::with_capacity(nl);
+    let mut biases = Vec::with_capacity(nl);
+    for li in 0..nl {
+        weights.push(
+            (0..sizes[li] * sizes[li + 1])
+                .map(|_| rng.uniform_in(-0.8, 0.8))
+                .collect(),
+        );
+        biases.push(
+            (0..sizes[li + 1])
+                .map(|_| rng.uniform_in(-0.1, 0.1))
+                .collect(),
+        );
+    }
+    let net = TrainedNet {
+        task: format!("synthetic{seed}"),
+        sizes: sizes.to_vec(),
+        activation: "relu".into(),
+        splines: 1,
+        c: 1.0,
+        acc_sw: 0.0,
+        acc_sac_algorithmic: 0.0,
+        weights,
+        biases,
+    };
+    let exe = Executable::native_mlp(&net, batch)?;
+    Engine::from_parts(net, exe)
+}
+
+/// Single-task synchronous inference server: an [`Engine`] behind a
+/// [`DynamicBatcher`], recording [`ServeMetrics`].
+pub struct InferenceServer {
+    pub engine: Engine,
+    pub batcher: DynamicBatcher,
+    pub metrics: ServeMetrics,
+}
+
+impl InferenceServer {
+    /// Build from the artifact directory (see [`Engine::new`]).
+    pub fn new(rt: &Runtime, task: &str) -> Result<InferenceServer> {
+        Ok(InferenceServer::from_engine(Engine::new(rt, task)?))
+    }
+
+    /// Wrap an existing engine.
+    pub fn from_engine(engine: Engine) -> InferenceServer {
+        let batcher = DynamicBatcher::new(engine.batch_size, engine.dim);
+        InferenceServer {
+            engine,
+            batcher,
+            metrics: ServeMetrics::default(),
+        }
+    }
+
+    /// Enqueue one request.
+    pub fn submit(&mut self, features: Vec<f32>) -> u64 {
+        self.batcher.submit(features)
+    }
+
+    /// Run one materialized batch, recording latency metrics.
+    pub fn run_batch(&mut self, batch: &Batch) -> Result<Vec<Answer>> {
+        let t0 = Instant::now();
+        let results = self.engine.run_batch(batch)?;
+        self.metrics.record_batch(batch.live, t0.elapsed());
+        Ok(results)
+    }
 
     /// Drain the queue: run all pending batches (padding the tail).
-    pub fn drain(&mut self) -> Result<Vec<(u64, usize, Vec<f32>)>> {
+    pub fn drain(&mut self) -> Result<Vec<Answer>> {
         let batches = self.batcher.flush();
         let mut all = Vec::new();
         for b in &batches {
@@ -111,7 +206,36 @@ impl InferenceServer {
 
 #[cfg(test)]
 mod tests {
-    // InferenceServer needs compiled artifacts; its end-to-end behaviour is
-    // covered by rust/tests/integration.rs and examples/mnist_serve.rs.
-    // The pure coordination logic is tested in `batcher` and `metrics`.
+    use super::*;
+
+    #[test]
+    fn synthetic_engine_round_trips() {
+        let engine = synthetic_engine(3, &[4, 6, 3], 8).unwrap();
+        assert_eq!(engine.batch_size, 8);
+        assert_eq!(engine.dim, 4);
+        assert_eq!(engine.n_classes, 3);
+        let mut server = InferenceServer::from_engine(engine);
+        for i in 0..10 {
+            server.submit(vec![0.1 * i as f32; 4]);
+        }
+        let results = server.drain().unwrap();
+        assert_eq!(results.len(), 10, "padding leaked into results");
+        let ids: Vec<u64> = results.iter().map(|r| r.0).collect();
+        assert_eq!(ids, (0..10).collect::<Vec<u64>>());
+        assert!(results.iter().all(|r| r.2.len() == 3));
+        assert_eq!(server.metrics.total_requests(), 10);
+    }
+
+    #[test]
+    fn engine_is_deterministic() {
+        let engine = synthetic_engine(5, &[3, 4, 2], 4).unwrap();
+        let mut b = DynamicBatcher::new(4, 3);
+        for i in 0..4 {
+            b.submit(vec![0.2 * i as f32, -0.1, 0.4]);
+        }
+        let batch = &b.flush()[0];
+        let a = engine.run_batch(batch).unwrap();
+        let b2 = engine.run_batch(batch).unwrap();
+        assert_eq!(a, b2);
+    }
 }

@@ -1,0 +1,742 @@
+//! Multi-task serving router: N task engines behind a single submit API,
+//! batches dispatched to a shared worker pool, deadline-based flushing so
+//! tail requests are never stranded.
+//!
+//! ```text
+//!             submit(task, features)
+//!                      │
+//!          ┌───────────▼───────────┐   per-task lane
+//!          │  Mutex<LaneBatcher>   │   (DynamicBatcher + enqueue times)
+//!          └───────────┬───────────┘
+//!        full batch ───┤                 ┌──────────────┐
+//!                      ├──◄── flusher ───┤ every tick:  │
+//!                      │   (partial      │ age ≥ max_wait│
+//!          ┌───────────▼────────┐  batch)└──────────────┘
+//!          │ WorkerPool (shared)│  each job: Engine::run_batch (lock-free)
+//!          └───────────┬────────┘
+//!          ┌───────────▼───────────┐
+//!          │ Mutex<results: id→…>  │ ← wait()/try_take() remove exactly once
+//!          └───────────────────────┘
+//! ```
+//!
+//! Invariants (tested below and in `tests/integration.rs`):
+//!
+//!  * every submitted request is answered exactly once — batches are only
+//!    materialized under the lane lock, and each materialized batch is
+//!    handed to exactly one worker;
+//!  * a partial batch waits at most `max_wait` (+ one flusher tick) before
+//!    execution — the deadline flush;
+//!  * engines run without locks (`Engine::run_batch(&self, …)`), so
+//!    batches of the *same* task execute concurrently on many workers;
+//!  * an engine failure resolves every request of its batch with the
+//!    error ([`Router::wait`] reports it immediately; [`Router::drain`]
+//!    and [`Router::failures`] surface it), never a silent timeout;
+//!  * metrics are recorded per task and can be aggregated across tasks.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::batcher::{Batch, DynamicBatcher};
+use super::metrics::ServeMetrics;
+use super::Engine;
+use crate::util::pool::{PoolHandle, WorkerPool};
+
+/// Handle to one submitted request: the task lane plus the per-lane
+/// request id assigned by the batcher.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct RequestId {
+    pub task: usize,
+    pub id: u64,
+}
+
+/// One answered request.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Response {
+    pub id: u64,
+    pub pred: usize,
+    pub logits: Vec<f32>,
+}
+
+/// Router tuning knobs.
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    /// worker threads shared by all tasks
+    pub workers: usize,
+    /// maximum time a partial batch may wait before being flushed
+    pub max_wait: Duration,
+    /// flusher wake-up cadence (effective tail deadline is
+    /// `max_wait + flush_tick`)
+    pub flush_tick: Duration,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            workers: crate::util::pool::default_threads().min(8),
+            max_wait: Duration::from_millis(2),
+            flush_tick: Duration::from_micros(500),
+        }
+    }
+}
+
+/// Per-task batcher plus the enqueue timestamp of every pending request
+/// (front = oldest), driving the deadline flush.
+struct LaneBatcher {
+    batcher: DynamicBatcher,
+    enqueued_at: VecDeque<Instant>,
+}
+
+impl LaneBatcher {
+    fn new(batch_size: usize, dim: usize) -> LaneBatcher {
+        LaneBatcher {
+            batcher: DynamicBatcher::new(batch_size, dim),
+            enqueued_at: VecDeque::new(),
+        }
+    }
+
+    fn submit(&mut self, features: Vec<f32>) -> u64 {
+        let id = self.batcher.submit(features);
+        self.enqueued_at.push_back(Instant::now());
+        id
+    }
+
+    /// Drop timestamps of requests that left the queue (always popped from
+    /// the front — the batcher materializes in FIFO order).
+    fn trim(&mut self) {
+        while self.enqueued_at.len() > self.batcher.pending() {
+            self.enqueued_at.pop_front();
+        }
+    }
+
+    fn pop_fulls(&mut self) -> Vec<Batch> {
+        let mut out = Vec::new();
+        while let Some(b) = self.batcher.pop_full() {
+            out.push(b);
+        }
+        self.trim();
+        out
+    }
+
+    fn flush_all(&mut self) -> Vec<Batch> {
+        let out = self.batcher.flush();
+        self.enqueued_at.clear();
+        out
+    }
+
+    /// Full batches always; the partial tail too once its oldest request
+    /// has waited `max_wait`.
+    fn take_overdue(&mut self, max_wait: Duration) -> Vec<Batch> {
+        let mut out = self.pop_fulls();
+        if self.batcher.pending() > 0 {
+            if let Some(t0) = self.enqueued_at.front() {
+                if t0.elapsed() >= max_wait {
+                    out.extend(self.flush_all());
+                }
+            }
+        }
+        out
+    }
+
+    fn pending(&self) -> usize {
+        self.batcher.pending()
+    }
+}
+
+/// Per-lane outcome store: computed responses plus the ids of requests
+/// whose batch failed in the engine (so waiters get the error immediately
+/// instead of a misleading timeout).
+#[derive(Default)]
+struct LaneResults {
+    ready: HashMap<u64, Response>,
+    failed: HashMap<u64, String>,
+}
+
+struct Lane {
+    name: String,
+    engine: Engine,
+    queue: Mutex<LaneBatcher>,
+    /// Cheap idle hint so the flusher skips lanes without taking the
+    /// queue lock; only ever written while holding the queue lock.
+    has_pending: AtomicBool,
+    results: Mutex<LaneResults>,
+    results_cv: Condvar,
+    metrics: Mutex<ServeMetrics>,
+}
+
+struct Shared {
+    lanes: Vec<Lane>,
+    /// batches enqueued on the pool or executing
+    inflight: Mutex<usize>,
+    idle_cv: Condvar,
+    shutdown: AtomicBool,
+    failures: Mutex<Vec<String>>,
+    /// set by `submit` when a lane gains a pending partial batch; the
+    /// flusher parks on this when every lane is empty instead of
+    /// tick-polling an idle router
+    flush_signal: Mutex<bool>,
+    flush_cv: Condvar,
+}
+
+/// The multi-task serving router.  See the module docs for the dataflow.
+pub struct Router {
+    shared: Arc<Shared>,
+    pool: WorkerPool,
+    pool_handle: PoolHandle,
+    flusher: Option<thread::JoinHandle<()>>,
+}
+
+impl Router {
+    /// Host one lane per `(name, engine)` task behind `cfg.workers` shared
+    /// workers, and start the deadline flusher.
+    pub fn new(cfg: RouterConfig, tasks: Vec<(String, Engine)>) -> Router {
+        assert!(!tasks.is_empty(), "router needs at least one task");
+        let lanes = tasks
+            .into_iter()
+            .map(|(name, engine)| {
+                let queue = Mutex::new(LaneBatcher::new(engine.batch_size, engine.dim));
+                Lane {
+                    name,
+                    engine,
+                    queue,
+                    has_pending: AtomicBool::new(false),
+                    results: Mutex::new(LaneResults::default()),
+                    results_cv: Condvar::new(),
+                    metrics: Mutex::new(ServeMetrics::default()),
+                }
+            })
+            .collect();
+        let shared = Arc::new(Shared {
+            lanes,
+            inflight: Mutex::new(0),
+            idle_cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            failures: Mutex::new(Vec::new()),
+            flush_signal: Mutex::new(false),
+            flush_cv: Condvar::new(),
+        });
+        let pool = WorkerPool::new(cfg.workers);
+        let pool_handle = pool.handle();
+
+        let flusher = {
+            let shared = Arc::clone(&shared);
+            let handle = pool.handle();
+            let max_wait = cfg.max_wait;
+            let tick = cfg.flush_tick.max(Duration::from_micros(50));
+            thread::Builder::new()
+                .name("sac-flusher".into())
+                .spawn(move || loop {
+                    // Park while idle: zero wakeups on a quiet router.
+                    // `submit` raises flush_signal when a lane gains a
+                    // pending partial batch; a bounded wait keeps the
+                    // shutdown latency small even if a notify is missed.
+                    {
+                        let mut sig = shared.flush_signal.lock().unwrap();
+                        while !*sig && !shared.shutdown.load(Ordering::SeqCst) {
+                            let (guard, _) = shared
+                                .flush_cv
+                                .wait_timeout(sig, Duration::from_millis(50))
+                                .unwrap();
+                            sig = guard;
+                        }
+                    }
+                    if shared.shutdown.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    // Active phase: tick-scan until every lane is empty.
+                    loop {
+                        if shared.shutdown.load(Ordering::SeqCst) {
+                            return;
+                        }
+                        // clear the signal *before* scanning: a submit
+                        // racing with the scan re-raises it, so the park
+                        // loop above re-enters the active phase immediately
+                        *shared.flush_signal.lock().unwrap() = false;
+                        let mut any_pending = false;
+                        for li in 0..shared.lanes.len() {
+                            let lane = &shared.lanes[li];
+                            // idle lanes cost one atomic load, not a lock
+                            // acquisition contending with submitters
+                            if !lane.has_pending.load(Ordering::SeqCst) {
+                                continue;
+                            }
+                            // enqueue under the lane lock: a batch is never
+                            // "in limbo" outside both the queue and the
+                            // inflight counter (drain correctness).
+                            let mut q = lane.queue.lock().unwrap();
+                            for b in q.take_overdue(max_wait) {
+                                enqueue_batch(&shared, &handle, li, b);
+                            }
+                            let still = q.pending() > 0;
+                            lane.has_pending.store(still, Ordering::SeqCst);
+                            any_pending |= still;
+                        }
+                        if !any_pending {
+                            break; // back to the park loop
+                        }
+                        thread::sleep(tick);
+                    }
+                })
+                .expect("spawn flusher thread")
+        };
+
+        Router {
+            shared,
+            pool,
+            pool_handle,
+            flusher: Some(flusher),
+        }
+    }
+
+    /// Number of hosted tasks.
+    pub fn n_tasks(&self) -> usize {
+        self.shared.lanes.len()
+    }
+
+    /// Task names in lane order.
+    pub fn task_names(&self) -> Vec<&str> {
+        self.shared.lanes.iter().map(|l| l.name.as_str()).collect()
+    }
+
+    /// Lane index of a task name.
+    pub fn task_index(&self, name: &str) -> Option<usize> {
+        self.shared.lanes.iter().position(|l| l.name == name)
+    }
+
+    /// Submit one request to a task lane; returns its handle.  The batch
+    /// dispatches immediately when full, otherwise within
+    /// `max_wait + flush_tick`.
+    pub fn submit(&self, task: usize, features: Vec<f32>) -> Result<RequestId> {
+        let lane = self
+            .shared
+            .lanes
+            .get(task)
+            .ok_or_else(|| anyhow!("no task lane #{task}"))?;
+        if features.len() != lane.engine.dim {
+            bail!(
+                "task {:?}: feature dim {} != {}",
+                lane.name,
+                features.len(),
+                lane.engine.dim
+            );
+        }
+        let mut q = lane.queue.lock().unwrap();
+        let id = q.submit(features);
+        for b in q.pop_fulls() {
+            enqueue_batch(&self.shared, &self.pool_handle, task, b);
+        }
+        let pending = q.pending() > 0;
+        lane.has_pending.store(pending, Ordering::SeqCst);
+        drop(q);
+        if pending {
+            // wake the parked flusher so the deadline clock on this
+            // partial batch is serviced
+            let mut sig = self.shared.flush_signal.lock().unwrap();
+            if !*sig {
+                *sig = true;
+                self.shared.flush_cv.notify_one();
+            }
+        }
+        Ok(RequestId { task, id })
+    }
+
+    /// Submit by task name.
+    pub fn submit_to(&self, name: &str, features: Vec<f32>) -> Result<RequestId> {
+        let task = self
+            .task_index(name)
+            .ok_or_else(|| anyhow!("no task named {name:?}"))?;
+        self.submit(task, features)
+    }
+
+    /// Take a response if it is ready (removes it — each response is
+    /// delivered at most once).  `Ok(None)` means *not ready yet*; an
+    /// engine failure for this request's batch is consumed and returned
+    /// as `Err`, so pollers terminate instead of spinning forever.
+    pub fn try_take(&self, req: RequestId) -> Result<Option<Response>> {
+        let lane = self
+            .shared
+            .lanes
+            .get(req.task)
+            .ok_or_else(|| anyhow!("no task lane #{}", req.task))?;
+        let mut res = lane.results.lock().unwrap();
+        if let Some(r) = res.ready.remove(&req.id) {
+            return Ok(Some(r));
+        }
+        if let Some(msg) = res.failed.remove(&req.id) {
+            bail!("request {}/{} failed: {msg}", lane.name, req.id);
+        }
+        Ok(None)
+    }
+
+    /// Block until the response arrives (relies on the deadline flusher for
+    /// partial batches) or `timeout` elapses.  Reports an engine failure
+    /// for this request's batch immediately instead of timing out.
+    pub fn wait(&self, req: RequestId, timeout: Duration) -> Result<Response> {
+        let lane = self
+            .shared
+            .lanes
+            .get(req.task)
+            .ok_or_else(|| anyhow!("no task lane #{}", req.task))?;
+        let deadline = Instant::now() + timeout;
+        let mut res = lane.results.lock().unwrap();
+        loop {
+            if let Some(r) = res.ready.remove(&req.id) {
+                return Ok(r);
+            }
+            if let Some(msg) = res.failed.remove(&req.id) {
+                bail!("request {}/{} failed: {msg}", lane.name, req.id);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                bail!(
+                    "request {}/{} timed out after {timeout:?}",
+                    lane.name,
+                    req.id
+                );
+            }
+            let (guard, _) = lane
+                .results_cv
+                .wait_timeout(res, deadline - now)
+                .unwrap();
+            res = guard;
+        }
+    }
+
+    /// Force-materialize every pending partial batch right now.
+    pub fn flush(&self) {
+        for (li, lane) in self.shared.lanes.iter().enumerate() {
+            let mut q = lane.queue.lock().unwrap();
+            for b in q.flush_all() {
+                enqueue_batch(&self.shared, &self.pool_handle, li, b);
+            }
+            lane.has_pending.store(false, Ordering::SeqCst);
+        }
+    }
+
+    /// Flush everything and wait until no batch is queued or executing.
+    /// Fails on timeout or if any worker reported a failure.
+    pub fn drain(&self, timeout: Duration) -> Result<()> {
+        self.flush();
+        let deadline = Instant::now() + timeout;
+        let mut n = self.shared.inflight.lock().unwrap();
+        while *n > 0 {
+            if Instant::now() >= deadline {
+                bail!("drain timed out with {} batch(es) in flight", *n);
+            }
+            let (guard, _) = self
+                .shared
+                .idle_cv
+                .wait_timeout(n, Duration::from_millis(20))
+                .unwrap();
+            n = guard;
+        }
+        drop(n);
+        let fails = self.shared.failures.lock().unwrap();
+        if !fails.is_empty() {
+            bail!("{} worker failure(s): {}", fails.len(), fails.join("; "));
+        }
+        Ok(())
+    }
+
+    /// Requests still waiting in lane queues (not yet materialized).
+    pub fn pending(&self) -> usize {
+        self.shared
+            .lanes
+            .iter()
+            .map(|l| l.queue.lock().unwrap().pending())
+            .sum()
+    }
+
+    /// Responses computed but not yet taken.
+    pub fn ready(&self) -> usize {
+        self.shared
+            .lanes
+            .iter()
+            .map(|l| l.results.lock().unwrap().ready.len())
+            .sum()
+    }
+
+    /// Snapshot of one task's metrics.
+    pub fn metrics(&self, task: usize) -> ServeMetrics {
+        self.shared.lanes[task].metrics.lock().unwrap().clone()
+    }
+
+    /// Metrics aggregated across every task lane.
+    pub fn aggregate_metrics(&self) -> ServeMetrics {
+        let mut total = ServeMetrics::default();
+        for lane in &self.shared.lanes {
+            total.merge(&lane.metrics.lock().unwrap());
+        }
+        total
+    }
+
+    /// Worker failure messages collected so far (normally empty).
+    pub fn failures(&self) -> Vec<String> {
+        self.shared.failures.lock().unwrap().clone()
+    }
+
+    /// Worker threads serving this router.
+    pub fn workers(&self) -> usize {
+        self.pool.workers()
+    }
+}
+
+impl Drop for Router {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.flush_cv.notify_all(); // wake a parked flusher
+        if let Some(h) = self.flusher.take() {
+            let _ = h.join();
+        }
+        // WorkerPool's Drop drains every queued batch before joining, so
+        // accepted work still completes; unmaterialized queue tails are
+        // dropped (call `drain` first for a clean shutdown).
+    }
+}
+
+/// Hand one materialized batch to the worker pool.  Must be called with
+/// the originating lane's queue lock held (see the flusher comment).
+fn enqueue_batch(shared: &Arc<Shared>, pool: &PoolHandle, li: usize, batch: Batch) {
+    *shared.inflight.lock().unwrap() += 1;
+    let shared = Arc::clone(shared);
+    pool.execute(move || {
+        let lane = &shared.lanes[li];
+        let t0 = Instant::now();
+        // Contain panics from the engine (e.g. a poisoned artifact): the
+        // inflight decrement below must always run, or drain() would hang
+        // forever, and the batch's waiters must still be resolved.
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            lane.engine.run_batch(&batch)
+        }))
+        .unwrap_or_else(|p| {
+            let msg = p
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| p.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "engine panicked".to_string());
+            Err(anyhow!("engine panicked: {msg}"))
+        });
+        match outcome {
+            Ok(rows) => {
+                lane.metrics
+                    .lock()
+                    .unwrap()
+                    .record_batch(batch.live, t0.elapsed());
+                let mut res = lane.results.lock().unwrap();
+                for (id, pred, logits) in rows {
+                    if res.ready.insert(id, Response { id, pred, logits }).is_some() {
+                        shared
+                            .failures
+                            .lock()
+                            .unwrap()
+                            .push(format!("duplicate response id {id} on lane {li}"));
+                    }
+                }
+                drop(res);
+                lane.results_cv.notify_all();
+            }
+            Err(e) => {
+                // resolve every request of the failed batch so waiters get
+                // the engine error immediately, not a timeout
+                let msg = format!("{e:#}");
+                let mut res = lane.results.lock().unwrap();
+                for &id in &batch.ids {
+                    res.failed.insert(id, msg.clone());
+                }
+                drop(res);
+                shared
+                    .failures
+                    .lock()
+                    .unwrap()
+                    .push(format!("lane {:?}: {msg}", lane.name));
+                lane.results_cv.notify_all();
+            }
+        }
+        let mut n = shared.inflight.lock().unwrap();
+        *n -= 1;
+        if *n == 0 {
+            shared.idle_cv.notify_all();
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::synthetic_engine;
+
+    fn quick_cfg(workers: usize) -> RouterConfig {
+        RouterConfig {
+            workers,
+            max_wait: Duration::from_millis(2),
+            flush_tick: Duration::from_micros(200),
+        }
+    }
+
+    fn toy_router(workers: usize) -> Router {
+        Router::new(
+            quick_cfg(workers),
+            vec![
+                ("alpha".into(), synthetic_engine(11, &[3, 4, 2], 4).unwrap()),
+                ("beta".into(), synthetic_engine(12, &[2, 3, 3], 3).unwrap()),
+            ],
+        )
+    }
+
+    #[test]
+    fn answers_every_request_exactly_once() {
+        let router = toy_router(3);
+        let mut reqs = Vec::new();
+        for i in 0..23 {
+            let t = i % 2;
+            let dim = if t == 0 { 3 } else { 2 };
+            reqs.push(router.submit(t, vec![0.05 * i as f32; dim]).unwrap());
+        }
+        router.drain(Duration::from_secs(10)).unwrap();
+        for &req in &reqs {
+            assert!(router.try_take(req).unwrap().is_some(), "unanswered {req:?}");
+            assert!(
+                router.try_take(req).unwrap().is_none(),
+                "answered twice {req:?}"
+            );
+        }
+        assert_eq!(router.ready(), 0);
+        assert_eq!(router.pending(), 0);
+        assert_eq!(router.aggregate_metrics().total_requests(), 23);
+        assert!(router.failures().is_empty());
+    }
+
+    #[test]
+    fn deadline_flush_rescues_partial_batches() {
+        // one request into a batch-of-4 lane: without the deadline flusher
+        // this would strand forever
+        let router = toy_router(2);
+        let req = router.submit(0, vec![0.3, -0.2, 0.1]).unwrap();
+        let r = router.wait(req, Duration::from_secs(5)).unwrap();
+        assert_eq!(r.id, req.id);
+        assert_eq!(r.logits.len(), 2);
+    }
+
+    #[test]
+    fn per_task_metrics_are_isolated() {
+        let router = toy_router(2);
+        for i in 0..8 {
+            router.submit(0, vec![0.1 * i as f32; 3]).unwrap();
+        }
+        for i in 0..3 {
+            router.submit(1, vec![0.2 * i as f32; 2]).unwrap();
+        }
+        router.drain(Duration::from_secs(10)).unwrap();
+        assert_eq!(router.metrics(0).total_requests(), 8);
+        assert_eq!(router.metrics(1).total_requests(), 3);
+        assert_eq!(router.aggregate_metrics().total_requests(), 11);
+    }
+
+    #[test]
+    fn rejects_bad_task_and_bad_dim() {
+        let router = toy_router(1);
+        assert!(router.submit(9, vec![0.0; 3]).is_err());
+        assert!(router.submit(0, vec![0.0; 5]).is_err());
+        assert!(router.submit_to("nope", vec![0.0; 3]).is_err());
+        assert!(router.submit_to("alpha", vec![0.0, 0.0, 0.0]).is_ok());
+    }
+
+    #[test]
+    fn concurrent_submitters_all_answered() {
+        let router = toy_router(4);
+        let n_threads = 6;
+        let per_thread = 20;
+        let reqs: Vec<Vec<RequestId>> = thread::scope(|scope| {
+            let handles: Vec<_> = (0..n_threads)
+                .map(|t| {
+                    let router = &router;
+                    scope.spawn(move || {
+                        (0..per_thread)
+                            .map(|k| {
+                                let task = (t + k) % 2;
+                                let dim = if task == 0 { 3 } else { 2 };
+                                router
+                                    .submit(task, vec![0.01 * (t * 100 + k) as f32; dim])
+                                    .unwrap()
+                            })
+                            .collect::<Vec<_>>()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        router.drain(Duration::from_secs(20)).unwrap();
+        let mut seen = std::collections::HashSet::new();
+        for req in reqs.into_iter().flatten() {
+            let r = router
+                .try_take(req)
+                .unwrap()
+                .expect("every request answered");
+            assert!(seen.insert((req.task, r.id)), "duplicate {req:?}");
+        }
+        assert_eq!(seen.len(), n_threads * per_thread);
+        assert_eq!(
+            router.aggregate_metrics().total_requests(),
+            n_threads * per_thread
+        );
+    }
+
+    #[test]
+    fn engine_failure_is_reported_not_timed_out() {
+        use crate::data::TrainedNet;
+        use crate::runtime::Executable;
+        let mk = |sizes: &[usize]| TrainedNet {
+            task: "x".into(),
+            sizes: sizes.to_vec(),
+            activation: "relu".into(),
+            splines: 1,
+            c: 1.0,
+            acc_sw: 0.0,
+            acc_sac_algorithmic: 0.0,
+            weights: sizes.windows(2).map(|w| vec![0.25; w[0] * w[1]]).collect(),
+            biases: sizes[1..].iter().map(|&n| vec![0.0; n]).collect(),
+        };
+        // engine whose weights disagree with its executable's manifest
+        // shapes: same input dim (passes from_parts), wrong hidden width
+        // (every run_batch fails at the run_f32 shape check)
+        let net = mk(&[2, 3, 2]);
+        let wrong = mk(&[2, 4, 2]);
+        let exe = Executable::native_mlp(&wrong, 4).unwrap();
+        let engine = Engine::from_parts(net, exe).unwrap();
+        let router = Router::new(quick_cfg(1), vec![("broken".into(), engine)]);
+        let req = router.submit(0, vec![0.1, 0.2]).unwrap();
+        let err = router.wait(req, Duration::from_secs(5)).unwrap_err();
+        assert!(err.to_string().contains("failed"), "unexpected error: {err}");
+        assert!(!router.failures().is_empty());
+        assert!(router.drain(Duration::from_secs(5)).is_err());
+        // a polling client sees the failure too (second request, try_take)
+        let req2 = router.submit(0, vec![0.3, 0.4]).unwrap();
+        let t0 = std::time::Instant::now();
+        loop {
+            match router.try_take(req2) {
+                Ok(None) => {
+                    assert!(t0.elapsed() < Duration::from_secs(5), "poll never resolved");
+                    thread::sleep(Duration::from_millis(1));
+                }
+                Ok(Some(_)) => panic!("broken engine produced a response"),
+                Err(e) => {
+                    assert!(e.to_string().contains("failed"), "{e}");
+                    break;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn names_resolve() {
+        let router = toy_router(1);
+        assert_eq!(router.n_tasks(), 2);
+        assert_eq!(router.task_index("beta"), Some(1));
+        assert_eq!(router.task_names(), vec!["alpha", "beta"]);
+        assert!(router.workers() >= 1);
+    }
+}

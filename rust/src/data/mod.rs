@@ -112,7 +112,7 @@ impl TrainedNet {
         self.sizes.len() - 1
     }
 
-    /// w[layer][i][k] accessor (layer 0-based, row-major [in × out]).
+    /// `w[layer][i][k]` accessor (layer 0-based, row-major `[in × out]`).
     pub fn w(&self, layer: usize, i: usize, k: usize) -> f64 {
         let out = self.sizes[layer + 1];
         self.weights[layer][i * out + k]

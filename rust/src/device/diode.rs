@@ -6,6 +6,10 @@
 //! of a diode-connected MOSFET (gate tied to anode), which is what a
 //! compact S-AC layout actually uses.
 
+// Physical-unit annotations like "[V]" / "[A]" in the docs below are
+// prose, not intra-doc links.
+#![allow(rustdoc::broken_intra_doc_links)]
+
 use super::ekv::Mosfet;
 use crate::pdk::{Polarity, ProcessNode};
 

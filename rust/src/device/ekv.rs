@@ -18,6 +18,10 @@
 //! `F(v) → (v/2)²` (square law); moderate inversion interpolates — this is
 //! what Fig. 1's gm/Id plot and Fig. 3's bias-scalability rest on.
 
+// Physical-unit annotations like "[V]" / "[A]" in the docs below are
+// prose, not intra-doc links.
+#![allow(rustdoc::broken_intra_doc_links)]
+
 use crate::pdk::{Polarity, ProcessNode};
 
 /// One transistor instance with geometry, temperature and mismatch state.

@@ -1,6 +1,10 @@
 //! Figure-of-merit sweeps (Fig. 1): transconductance efficiency gm/Id and
 //! the gm/Id · f_T product versus overdrive voltage, per process node.
 
+// Physical-unit annotations like "[V]" / "[A]" in the docs below are
+// prose, not intra-doc links.
+#![allow(rustdoc::broken_intra_doc_links)]
+
 use super::ekv::Mosfet;
 use crate::pdk::{Polarity, ProcessNode};
 

@@ -5,6 +5,10 @@
 //! devices at 7 nm see *larger relative* mismatch despite the smaller A_VT
 //! — Fig. 13b/c's story.
 
+// Physical-unit annotations like "[V]" / "[A]" in the docs below are
+// prose, not intra-doc links.
+#![allow(rustdoc::broken_intra_doc_links)]
+
 use super::ekv::Mosfet;
 use crate::pdk::ProcessNode;
 use crate::util::rng::Rng;

@@ -5,6 +5,10 @@
 //! claim that N parallel S-AC blocks improve SNR by ~2× per doubling
 //! (coherent signal vs incoherent noise summation, eq. 31-36).
 
+// Physical-unit annotations like "[V]" / "[A]" in the docs below are
+// prose, not intra-doc links.
+#![allow(rustdoc::broken_intra_doc_links)]
+
 use super::ekv::Mosfet;
 
 const KB: f64 = 1.380_649e-23;

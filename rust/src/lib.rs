@@ -2,8 +2,27 @@
 //!
 //! Full-stack reproduction of *"Process, Bias and Temperature Scalable
 //! CMOS Analog Computing Circuits for Machine Learning"* (Kumar et al.,
-//! IEEE TCSI 2022).  See DESIGN.md for the architecture and EXPERIMENTS.md
-//! for paper-vs-measured results.
+//! IEEE TCSI 2022), plus a multi-task serving layer on top of it.
+//!
+//! The stack, bottom to top (repo-root `DESIGN.md` has the full
+//! architecture; `EXPERIMENTS.md` tracks paper-vs-measured results):
+//!
+//! 1. **Device** — [`pdk`] process decks and the [`device`] EKV all-region
+//!    MOSFET / diode / mismatch / noise models.
+//! 2. **S-AC core** — [`sac`]: the algorithmic GMP solvers, spline
+//!    schedule, device-exact unit circuit and calibrated table models.
+//! 3. **Cells & networks** — [`cells`] standard cells (activations,
+//!    multiplier, WTA) and [`nn`] network evaluation on any fidelity tier.
+//! 4. **Serving** — [`runtime`] executes the AOT-exported graphs natively;
+//!    [`coordinator`] batches, routes and serves them across tasks and
+//!    worker threads.
+//!
+//! [`analysis`] and [`repro`] regenerate the paper's figures/tables;
+//! [`data`] loads the exported datasets/weights; [`util`] holds the
+//! in-repo infrastructure substrates (JSON, CLI, RNG, stats, pools,
+//! property testing, benchmarking — the image vendors no serde_json /
+//! clap / rayon / criterion / proptest).
+
 pub mod util;
 pub mod pdk;
 pub mod device;

@@ -1,25 +1,29 @@
 //! `sac` — the S-AC framework CLI.
 //!
-//! Subcommands:
-//!   repro <id|all>        regenerate a paper table/figure (results/*.csv)
-//!   serve <task>          batched inference via the AOT PJRT executable
-//!   characterize <cell>   DC sweep of a standard cell across corners
-//!   mc <cell>             Monte-Carlo mismatch campaign
-//!   info                  stack/PDK/artifact status
+//! ```text
+//! repro <id|all>        regenerate a paper table/figure (results/*.csv)
+//! serve <task>          batched inference through the multi-task router
+//! bench-serve           synthetic router throughput bench (no artifacts)
+//! characterize <cell>   DC sweep of a standard cell across corners
+//! mc <cell>             Monte-Carlo mismatch campaign
+//! info                  stack/PDK/artifact status
+//! ```
 
 use std::path::PathBuf;
+use std::time::{Duration, Instant};
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 
 use sac::analysis::{dc, montecarlo as mc};
 use sac::cells::activations::CellKind;
 use sac::cells::CircuitCorner;
-use sac::coordinator::InferenceServer;
+use sac::coordinator::{synthetic_engine, Engine, Router, RouterConfig};
 use sac::data::Dataset;
 use sac::pdk::{regime::Regime, ProcessNode};
 use sac::repro::{self, ReproOpts};
 use sac::runtime::{default_artifacts_dir, Runtime};
 use sac::util::cli::Args;
+use sac::util::rng::Rng;
 use sac::util::table::{write_xy_csv, Table};
 
 const USAGE: &str = "\
@@ -27,7 +31,8 @@ sac — shape-based analog computing framework (TCSI 2022 reproduction)
 
 USAGE:
   sac repro <id|all> [--out results] [--limit N] [--threads N] [--mc-trials N]
-  sac serve <task> [--artifacts DIR] [--requests N]
+  sac serve <task> [--artifacts DIR] [--requests N] [--workers N]
+  sac bench-serve [--tasks K] [--workers N] [--submitters N] [--requests N] [--batch B]
   sac characterize <cell> [--node NAME] [--regime WI|MI|SI] [--temp C] [--out results]
   sac mc <cell> [--node NAME] [--trials N]
   sac info [--artifacts DIR]
@@ -55,6 +60,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
     match args.command.as_str() {
         "repro" => cmd_repro(&args),
         "serve" => cmd_serve(&args),
+        "bench-serve" => cmd_bench_serve(&args),
         "characterize" => cmd_characterize(&args),
         "mc" => cmd_mc(&args),
         "info" => cmd_info(&args),
@@ -92,6 +98,8 @@ fn cmd_repro(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Serve one task's test set through the router (single lane, shared
+/// worker pool) and score it against the recorded labels.
 fn cmd_serve(args: &Args) -> Result<()> {
     let task = args
         .positional
@@ -102,22 +110,36 @@ fn cmd_serve(args: &Args) -> Result<()> {
         args.get_or("artifacts", default_artifacts_dir().to_str().unwrap()),
     );
     let n_req = args.get_usize("requests", 256)?;
+    let workers = args.get_usize("workers", sac::util::pool::default_threads())?;
     let rt = Runtime::new(&artifacts)?;
-    println!("PJRT platform: {}", rt.platform());
-    let mut server = InferenceServer::new(&rt, task)?;
+    println!("backend: {}", rt.platform());
+    let engine = Engine::new(&rt, task)?;
     println!(
-        "serving {task}: net {:?}, batch={} dim={}",
-        server.net.sizes, server.batcher.batch_size, server.batcher.dim
+        "serving {task}: net {:?}, batch={} dim={} workers={workers}",
+        engine.net.sizes, engine.batch_size, engine.dim
     );
     let ds = Dataset::load_sacd(&artifacts.join(format!("{task}_test.bin")))?;
     let n = n_req.min(ds.n);
+    let router = Router::new(
+        RouterConfig {
+            workers,
+            ..RouterConfig::default()
+        },
+        vec![(task.to_string(), engine)],
+    );
+    let t0 = Instant::now();
+    let mut reqs = Vec::with_capacity(n);
     for i in 0..n {
-        server.submit(ds.row(i).to_vec());
+        reqs.push(router.submit(0, ds.row(i).to_vec())?);
     }
-    let results = server.drain()?;
+    router.drain(Duration::from_secs(600))?;
+    let wall = t0.elapsed().as_secs_f64();
     let mut correct = 0;
-    for &(id, pred, _) in &results {
-        if pred == ds.y[id as usize] as usize {
+    for (i, req) in reqs.iter().enumerate() {
+        let r = router
+            .try_take(*req)?
+            .ok_or_else(|| anyhow!("request {i} unanswered"))?;
+        if r.pred == ds.y[i] as usize {
             correct += 1;
         }
     }
@@ -126,7 +148,77 @@ fn cmd_serve(args: &Args) -> Result<()> {
         correct,
         n,
         correct as f64 / n as f64 * 100.0,
-        server.metrics.report()
+        router.metrics(0).report()
+    );
+    println!(
+        "end-to-end: {:.2}s wall = {:.0} req/s through the router",
+        wall,
+        n as f64 / wall
+    );
+    Ok(())
+}
+
+/// Synthetic multi-task serving benchmark: K random-weight S-AC nets, M
+/// concurrent submitters, one shared worker pool.  Runs on a clean
+/// checkout (no artifacts needed) — this is the router's smoke workload.
+fn cmd_bench_serve(args: &Args) -> Result<()> {
+    let tasks = args.get_usize("tasks", 2)?.max(1);
+    let workers = args.get_usize("workers", sac::util::pool::default_threads())?;
+    let submitters = args.get_usize("submitters", 4)?.max(1);
+    let requests = args.get_usize("requests", 512)?;
+    let batch = args.get_usize("batch", 32)?.max(1);
+    const DIM: usize = 16;
+    println!(
+        "bench-serve: {tasks} task(s) × [{DIM},12,4] S-AC nets, batch={batch}, \
+         {submitters} submitter(s), {workers} worker(s), {requests} requests"
+    );
+    let engines = (0..tasks)
+        .map(|t| {
+            Ok((
+                format!("task{t}"),
+                synthetic_engine(100 + t as u64, &[DIM, 12, 4], batch)?,
+            ))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let router = Router::new(
+        RouterConfig {
+            workers,
+            ..RouterConfig::default()
+        },
+        engines,
+    );
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for s in 0..submitters {
+            let router = &router;
+            scope.spawn(move || {
+                let mut rng = Rng::new(900 + s as u64);
+                let per = requests / submitters
+                    + usize::from(s < requests % submitters);
+                for k in 0..per {
+                    let task = (s + k) % tasks;
+                    let feats: Vec<f32> =
+                        (0..DIM).map(|_| rng.uniform_in(-1.0, 1.0) as f32).collect();
+                    router.submit(task, feats).expect("submit");
+                }
+            });
+        }
+    });
+    router.drain(Duration::from_secs(600))?;
+    let wall = t0.elapsed().as_secs_f64();
+    for t in 0..tasks {
+        println!("  task{t}: {}", router.metrics(t).report());
+    }
+    let agg = router.aggregate_metrics();
+    ensure!(
+        agg.total_requests() == requests,
+        "answered {} of {requests} requests",
+        agg.total_requests()
+    );
+    println!("  aggregate: {}", agg.report());
+    println!(
+        "end-to-end: {requests} requests in {wall:.2}s = {:.0} req/s",
+        requests as f64 / wall
     );
     Ok(())
 }
@@ -199,7 +291,11 @@ fn cmd_info(args: &Args) -> Result<()> {
     println!("{}", t.render());
     match Runtime::new(&artifacts) {
         Ok(rt) => {
-            println!("artifacts @ {}: PJRT {}", artifacts.display(), rt.platform());
+            println!(
+                "artifacts @ {}: backend {}",
+                artifacts.display(),
+                rt.platform()
+            );
             for (name, e) in &rt.manifest.entries {
                 println!("  {name}: {} ({} params)", e.file, e.params.len());
             }

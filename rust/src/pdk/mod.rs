@@ -15,6 +15,10 @@
 //!  * temperature behaviour: `U_T = kT/q`, `V_T0(T)` linear decrease,
 //!    mobility `~ (T/T0)^-1.5`.
 
+// Physical-unit annotations like "[V]" / "[A]" in the docs below are
+// prose, not intra-doc links.
+#![allow(rustdoc::broken_intra_doc_links)]
+
 pub mod regime;
 
 use regime::Regime;

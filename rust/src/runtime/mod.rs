@@ -1,50 +1,65 @@
-//! PJRT runtime: load the AOT-compiled HLO artifacts and execute them on
-//! the request path.  Python never runs here — `make artifacts` produced
-//! HLO *text* (see python/compile/aot.py for why text, not serialized
-//! protos) and this module compiles it once per process through the `xla`
-//! crate's PJRT CPU client.
+//! Artifact runtime: load the AOT-compiled artifact manifest and execute
+//! its entries on the request path.
+//!
+//! `python/compile/aot.py` writes `artifacts/manifest.json` describing each
+//! compiled graph (parameter order, shapes, dtypes, and the S-AC metadata —
+//! sizes/splines/C/activation).  This module loads that manifest and builds
+//! a [`native::NativeExec`] per entry: a self-contained, dependency-free
+//! interpreter that computes the same math as the lowered graph (see
+//! `runtime/native.rs` and DESIGN.md §"Runtime" for the contract).  Python
+//! never runs on the request path; the process is self-contained once
+//! `artifacts/` exists.
+//!
+//! Executables can also be constructed *without* artifacts via
+//! [`Executable::native_mlp`] — that is what the serving router's tests and
+//! the `bench-serve` subcommand use, so the coordinator is exercisable on a
+//! clean checkout.
 
 pub mod artifact;
+pub mod native;
 
 use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, Context, Result};
 
-pub use artifact::{Manifest, ParamSpec};
+pub use artifact::{EntrySpec, Manifest, ParamSpec};
+pub use native::{Graph, MlpSpec, NativeExec};
 
-/// A compiled, ready-to-execute artifact.
+use crate::data::TrainedNet;
+use crate::util::json::Json;
+
+/// A loaded, ready-to-execute artifact entry.
+#[derive(Clone, Debug)]
 pub struct Executable {
     pub name: String,
-    pub spec: artifact::EntrySpec,
-    exe: xla::PjRtLoadedExecutable,
+    pub spec: EntrySpec,
+    exec: NativeExec,
 }
 
-/// The runtime: one PJRT client and the artifact directory.
+/// The runtime: the artifact directory plus its parsed manifest.
+#[derive(Clone, Debug)]
 pub struct Runtime {
-    client: xla::PjRtClient,
     pub artifacts_dir: PathBuf,
     pub manifest: Manifest,
 }
 
 impl Runtime {
-    /// Create a CPU PJRT client and read the artifact manifest.
+    /// Read the artifact manifest from `artifacts_dir`.
     pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow!("creating PJRT CPU client: {e:?}"))?;
         let manifest = Manifest::load(&artifacts_dir.join("manifest.json"))
             .with_context(|| "run `make artifacts` first")?;
         Ok(Runtime {
-            client,
             artifacts_dir: artifacts_dir.to_path_buf(),
             manifest,
         })
     }
 
+    /// Backend identifier (kept for CLI/report compatibility).
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        "native-cpu".to_string()
     }
 
-    /// Load + compile one artifact by manifest entry name.
+    /// Build the executor for one manifest entry.
     pub fn load(&self, entry: &str) -> Result<Executable> {
         let spec = self
             .manifest
@@ -52,29 +67,163 @@ impl Runtime {
             .get(entry)
             .ok_or_else(|| anyhow!("no artifact entry {entry:?} in manifest"))?
             .clone();
-        let path = self.artifacts_dir.join(&spec.file);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
-        )
-        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {entry}: {e:?}"))?;
+        let exec = exec_from_spec(entry, &spec)?;
         Ok(Executable {
             name: entry.to_string(),
             spec,
-            exe,
+            exec,
         })
     }
 }
 
+/// Derive the native executor from a manifest entry's shapes + metadata.
+///
+/// Cross-validates the meta `sizes` against every parameter shape so an
+/// inconsistent manifest (version skew with `aot.py`, hand edits) fails
+/// here with a clean error instead of panicking inside a worker later.
+fn exec_from_spec(name: &str, spec: &EntrySpec) -> Result<NativeExec> {
+    if let Ok(sizes_j) = spec.meta.get("sizes") {
+        // S-AC MLP graph: params are w1,b1,…,wL,bL,x (see aot.py).
+        let sizes: Vec<usize> = sizes_j
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_usize())
+            .collect::<Result<_>>()?;
+        if sizes.len() < 2 {
+            return Err(anyhow!("{name}: sizes needs at least [in, out]"));
+        }
+        let nl = sizes.len() - 1;
+        if spec.params.len() != 2 * nl + 1 {
+            return Err(anyhow!(
+                "{name}: {} params in manifest, but sizes {:?} implies {}",
+                spec.params.len(),
+                sizes,
+                2 * nl + 1
+            ));
+        }
+        for li in 0..nl {
+            let w = &spec.params[2 * li];
+            if w.shape != [sizes[li], sizes[li + 1]] {
+                return Err(anyhow!(
+                    "{name}: param {} shape {:?} != sizes-implied [{}, {}]",
+                    w.name,
+                    w.shape,
+                    sizes[li],
+                    sizes[li + 1]
+                ));
+            }
+            let b = &spec.params[2 * li + 1];
+            if b.shape != [sizes[li + 1]] {
+                return Err(anyhow!(
+                    "{name}: param {} shape {:?} != sizes-implied [{}]",
+                    b.name,
+                    b.shape,
+                    sizes[li + 1]
+                ));
+            }
+        }
+        let xspec = spec.params.last().unwrap();
+        if xspec.shape.len() != 2 || xspec.shape[1] != sizes[0] {
+            return Err(anyhow!(
+                "{name}: input param shape {:?} != [batch, {}]",
+                xspec.shape,
+                sizes[0]
+            ));
+        }
+        NativeExec::mlp(MlpSpec {
+            sizes,
+            splines: spec.meta.get("splines")?.as_usize()?,
+            c: spec.meta.get("c")?.as_f64()?,
+            activation: spec.meta.get("activation")?.as_str()?.to_string(),
+            batch: xspec.shape[0],
+        })
+    } else if spec.params.len() == 1 && spec.params[0].shape.len() == 2 {
+        // Batched GMP kernel: a single [B × M] input and a `c` constant.
+        let c = spec.meta.get("c")?.as_f64()?;
+        Ok(NativeExec::gmp(
+            spec.params[0].shape[0],
+            spec.params[0].shape[1],
+            c,
+        ))
+    } else {
+        Err(anyhow!("{name}: unrecognized artifact entry shape"))
+    }
+}
+
 impl Executable {
+    /// Build an MLP executable directly from trained weights, without any
+    /// artifact directory — the in-memory path used by the router tests,
+    /// `bench-serve`, and synthetic workloads.
+    pub fn native_mlp(net: &TrainedNet, batch: usize) -> Result<Executable> {
+        let nl = net.n_layers();
+        let mut params = Vec::with_capacity(2 * nl + 1);
+        for li in 0..nl {
+            params.push(ParamSpec {
+                name: format!("w{}", li + 1),
+                shape: vec![net.sizes[li], net.sizes[li + 1]],
+                dtype: "f32".into(),
+            });
+            params.push(ParamSpec {
+                name: format!("b{}", li + 1),
+                shape: vec![net.sizes[li + 1]],
+                dtype: "f32".into(),
+            });
+        }
+        params.push(ParamSpec {
+            name: "x".into(),
+            shape: vec![batch, net.sizes[0]],
+            dtype: "f32".into(),
+        });
+        let outputs = vec![ParamSpec {
+            name: "logits".into(),
+            shape: vec![batch, *net.sizes.last().unwrap()],
+            dtype: "f32".into(),
+        }];
+        let meta = Json::obj(vec![
+            (
+                "sizes",
+                Json::Arr(net.sizes.iter().map(|&s| Json::Num(s as f64)).collect()),
+            ),
+            ("splines", Json::Num(net.splines as f64)),
+            ("c", Json::Num(net.c)),
+            ("activation", Json::Str(net.activation.clone())),
+        ]);
+        let exec = NativeExec::mlp(MlpSpec {
+            sizes: net.sizes.clone(),
+            splines: net.splines,
+            c: net.c,
+            activation: net.activation.clone(),
+            batch,
+        })?;
+        Ok(Executable {
+            name: format!("{}_mlp", net.task),
+            spec: EntrySpec {
+                file: String::new(),
+                params,
+                outputs,
+                meta,
+            },
+            exec,
+        })
+    }
+
+    /// Raise intra-batch row parallelism (single-task paths only; the
+    /// router's worker pool already provides outer parallelism).
+    pub fn with_par_threads(mut self, n: usize) -> Executable {
+        self.exec = self.exec.with_par_threads(n);
+        self
+    }
+
     /// Execute with f32 parameter buffers in manifest order.  Each buffer's
-    /// length must match the manifest shape.  Returns the flat f32 outputs
-    /// (the AOT graphs return a 1-tuple).
+    /// length must match the manifest shape.  Returns the flat f32 outputs.
     pub fn run_f32(&self, params: &[&[f32]]) -> Result<Vec<f32>> {
+        self.run_f32_rows(params, usize::MAX)
+    }
+
+    /// Like [`Executable::run_f32`], but computes only the first
+    /// `min(rows, batch)` batch rows (the serving path passes the live row
+    /// count so zero-padded tail rows cost nothing).
+    pub fn run_f32_rows(&self, params: &[&[f32]], rows: usize) -> Result<Vec<f32>> {
         if params.len() != self.spec.params.len() {
             return Err(anyhow!(
                 "{}: expected {} params, got {}",
@@ -83,7 +232,6 @@ impl Executable {
                 params.len()
             ));
         }
-        let mut lits = Vec::with_capacity(params.len());
         for (buf, spec) in params.iter().zip(&self.spec.params) {
             let want: usize = spec.shape.iter().product();
             if buf.len() != want {
@@ -95,24 +243,8 @@ impl Executable {
                     spec.shape
                 ));
             }
-            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
-            let lit = xla::Literal::vec1(buf)
-                .reshape(&dims)
-                .map_err(|e| anyhow!("reshape {}: {e:?}", spec.name))?;
-            lits.push(lit);
         }
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&lits)
-            .map_err(|e| anyhow!("execute {}: {e:?}", self.name))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("sync {}: {e:?}", self.name))?;
-        // aot.py lowers with return_tuple=True → 1-tuple
-        let out = result
-            .to_tuple1()
-            .map_err(|e| anyhow!("untuple {}: {e:?}", self.name))?;
-        out.to_vec::<f32>()
-            .map_err(|e| anyhow!("to_vec {}: {e:?}", self.name))
+        self.exec.run_rows(params, rows)
     }
 
     /// Expected output element count (flat).
@@ -130,4 +262,130 @@ pub fn default_artifacts_dir() -> PathBuf {
     std::env::var("SAC_ARTIFACTS")
         .map(PathBuf::from)
         .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_net() -> TrainedNet {
+        TrainedNet {
+            task: "toy".into(),
+            sizes: vec![2, 3, 2],
+            activation: "phi1".into(),
+            splines: 3,
+            c: 1.0,
+            acc_sw: 0.0,
+            acc_sac_algorithmic: 0.0,
+            weights: vec![
+                vec![0.8, -0.8, 0.5, -0.8, 0.8, 0.5],
+                vec![0.9, -0.9, 0.9, -0.9, -0.9, 0.9],
+            ],
+            biases: vec![vec![-0.2, -0.2, -0.6], vec![0.0, 0.0]],
+        }
+    }
+
+    #[test]
+    fn native_mlp_spec_shapes() {
+        let exe = Executable::native_mlp(&toy_net(), 4).unwrap();
+        assert_eq!(exe.spec.params.len(), 5);
+        assert_eq!(exe.spec.params[0].shape, vec![2, 3]);
+        assert_eq!(exe.spec.params[4].shape, vec![4, 2]);
+        assert_eq!(exe.output_len(), 8);
+    }
+
+    #[test]
+    fn run_f32_validates_shapes() {
+        let exe = Executable::native_mlp(&toy_net(), 2).unwrap();
+        let bad: Vec<&[f32]> = vec![&[0.0]];
+        assert!(exe.run_f32(&bad).is_err());
+    }
+
+    #[test]
+    fn manifest_entry_roundtrips_to_executor() {
+        // Write a minimal manifest and check Runtime::load derives the
+        // right executor families from it.
+        let text = r#"{
+            "gmp_kernel": {
+                "file": "gmp_kernel.hlo.txt",
+                "params": [{"name": "x", "shape": [8, 4], "dtype": "f32"}],
+                "outputs": [{"name": "h", "shape": [8], "dtype": "f32"}],
+                "c": 1.0
+            },
+            "toy_mlp": {
+                "file": "toy_mlp.hlo.txt",
+                "params": [
+                    {"name": "w1", "shape": [2, 2], "dtype": "f32"},
+                    {"name": "b1", "shape": [2], "dtype": "f32"},
+                    {"name": "x", "shape": [4, 2], "dtype": "f32"}
+                ],
+                "outputs": [{"name": "logits", "shape": [4, 2], "dtype": "f32"}],
+                "sizes": [2, 2], "splines": 1, "c": 1.0, "activation": "relu"
+            }
+        }"#;
+        let dir = std::env::temp_dir().join("sac_runtime_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+        let rt = Runtime::new(&dir).unwrap();
+        assert_eq!(rt.platform(), "native-cpu");
+
+        let gmp = rt.load("gmp_kernel").unwrap();
+        let x = vec![0.25f32; 32];
+        let bufs: Vec<&[f32]> = vec![&x];
+        assert_eq!(gmp.run_f32(&bufs).unwrap().len(), 8);
+
+        let mlp = rt.load("toy_mlp").unwrap();
+        let w1 = vec![0.5f32, -0.5, 0.25, 0.75];
+        let b1 = vec![0.0f32, 0.0];
+        let xin = vec![0.1f32; 8];
+        let bufs: Vec<&[f32]> = vec![&w1, &b1, &xin];
+        assert_eq!(mlp.run_f32(&bufs).unwrap().len(), 8);
+
+        assert!(rt.load("missing").is_err());
+    }
+
+    #[test]
+    fn inconsistent_manifest_rejected_at_load() {
+        // meta sizes say [2,3,2] but w1 is [2,2]: must fail at load(), not
+        // panic inside a worker at run time
+        let text = r#"{
+            "skewed_mlp": {
+                "file": "skewed_mlp.hlo.txt",
+                "params": [
+                    {"name": "w1", "shape": [2, 2], "dtype": "f32"},
+                    {"name": "b1", "shape": [3], "dtype": "f32"},
+                    {"name": "w2", "shape": [3, 2], "dtype": "f32"},
+                    {"name": "b2", "shape": [2], "dtype": "f32"},
+                    {"name": "x", "shape": [4, 2], "dtype": "f32"}
+                ],
+                "outputs": [{"name": "logits", "shape": [4, 2], "dtype": "f32"}],
+                "sizes": [2, 3, 2], "splines": 1, "c": 1.0, "activation": "relu"
+            }
+        }"#;
+        let dir = std::env::temp_dir().join("sac_runtime_skew_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+        let rt = Runtime::new(&dir).unwrap();
+        let err = rt.load("skewed_mlp").unwrap_err();
+        assert!(err.to_string().contains("w1"), "unexpected error: {err:#}");
+    }
+
+    #[test]
+    fn run_f32_rows_limits_output() {
+        let exe = Executable::native_mlp(&toy_net(), 4).unwrap();
+        let net = toy_net();
+        let bufs: Vec<Vec<f32>> = vec![
+            net.weights[0].iter().map(|&v| v as f32).collect(),
+            net.biases[0].iter().map(|&v| v as f32).collect(),
+            net.weights[1].iter().map(|&v| v as f32).collect(),
+            net.biases[1].iter().map(|&v| v as f32).collect(),
+            vec![0.1; 8],
+        ];
+        let refs: Vec<&[f32]> = bufs.iter().map(|b| b.as_slice()).collect();
+        let full = exe.run_f32(&refs).unwrap();
+        let one = exe.run_f32_rows(&refs, 1).unwrap();
+        assert_eq!(full.len(), 8);
+        assert_eq!(one.len(), 2);
+        assert_eq!(&full[..2], &one[..]);
+    }
 }

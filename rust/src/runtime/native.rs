@@ -1,0 +1,319 @@
+//! Native executor: the in-process interpreter for AOT artifact entries.
+//!
+//! The python build path (`python/compile/aot.py`) lowers two graph
+//! families and records their parameter order / shapes / metadata in
+//! `manifest.json`:
+//!
+//! ```text
+//!   gmp_kernel   x:[B×M] ↦ h:[B]             (meta: c)
+//!   <task>_mlp   w1,b1,…,wL,bL,x:[B×D] ↦ logits:[B×K]
+//!                                            (meta: sizes, splines, c, activation)
+//! ```
+//!
+//! Instead of shipping an XLA/PJRT runtime dependency, this module executes
+//! those graphs natively with the crate's own S-AC math — the *same*
+//! algorithms the python graphs were traced from (`kernels/gmp.py` ↔
+//! [`crate::sac::gmp`], `nets.sac_forward` ↔ [`crate::nn::forward`]), so
+//! the numbers agree to solver tolerance.  Cross-language parity is pinned
+//! by `artifacts/goldens_gmp.json` in the integration tests.
+//!
+//! The executor is plain data (`Send + Sync`), so the serving router can run
+//! batches of the same task concurrently on many workers without locking.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::cells::multiplier::Multiplier;
+use crate::cells::Algorithmic;
+use crate::data::TrainedNet;
+use crate::nn;
+use crate::sac::gmp::{solve_bisect, Shape, GMP_ITERS};
+use crate::util::pool;
+
+/// Shape/metadata of an S-AC MLP inference graph (mirror of the manifest
+/// entry written by `aot.py::export_task_mlp`).
+#[derive(Clone, Debug)]
+pub struct MlpSpec {
+    /// layer sizes, e.g. `[256, 15, 10]`
+    pub sizes: Vec<usize>,
+    /// spline count S of the multiplier / activation cells
+    pub splines: usize,
+    /// GMP constraint current C (algorithmic units)
+    pub c: f64,
+    /// hidden activation: `phi1` | `phi2` | `relu` | `softplus`
+    pub activation: String,
+    /// compiled batch dimension
+    pub batch: usize,
+}
+
+/// Which graph family a [`NativeExec`] interprets.
+#[derive(Clone, Debug)]
+pub enum Graph {
+    /// Batched GMP solve `x:[b×m] ↦ h:[b]` (the Layer-1 microkernel).
+    Gmp { b: usize, m: usize, c: f64 },
+    /// Full S-AC MLP inference graph.
+    Mlp(MlpSpec),
+}
+
+/// A native, self-contained executor for one artifact entry.
+#[derive(Clone, Debug)]
+pub struct NativeExec {
+    pub graph: Graph,
+    /// Multiplier calibration shared by every MAC.  Weight-independent
+    /// (a property of (S, C) only), so it is computed once at load time
+    /// rather than per batch.
+    mult: Option<Multiplier>,
+    /// Row-parallelism inside one batch.  Defaults to 1: the serving
+    /// router already parallelizes across batches/tasks, and nesting
+    /// thread pools would oversubscribe the machine.  The single-task
+    /// CLI path raises this.
+    pub par_threads: usize,
+}
+
+impl NativeExec {
+    /// Executor for the batched GMP kernel.
+    pub fn gmp(b: usize, m: usize, c: f64) -> NativeExec {
+        NativeExec {
+            graph: Graph::Gmp { b, m, c },
+            mult: None,
+            par_threads: 1,
+        }
+    }
+
+    /// Executor for an S-AC MLP graph; calibrates the multiplier once.
+    pub fn mlp(spec: MlpSpec) -> Result<NativeExec> {
+        if spec.sizes.len() < 2 {
+            bail!("mlp needs at least [in, out] sizes, got {:?}", spec.sizes);
+        }
+        match spec.activation.as_str() {
+            "phi1" | "phi2" | "relu" | "softplus" => {}
+            other => bail!("unknown activation {other:?}"),
+        }
+        let mult = Multiplier::calibrate(&Algorithmic::relu(), spec.splines, spec.c);
+        Ok(NativeExec {
+            graph: Graph::Mlp(spec),
+            mult: Some(mult),
+            par_threads: 1,
+        })
+    }
+
+    /// Row-parallel variant (for the single-task CLI/bench path).
+    pub fn with_par_threads(mut self, n: usize) -> NativeExec {
+        self.par_threads = n.max(1);
+        self
+    }
+
+    /// Number of f32 parameter buffers this executor expects.
+    pub fn n_params(&self) -> usize {
+        match &self.graph {
+            Graph::Gmp { .. } => 1,
+            Graph::Mlp(spec) => 2 * (spec.sizes.len() - 1) + 1,
+        }
+    }
+
+    /// Execute with parameter buffers in manifest order; returns the flat
+    /// f32 outputs for the full compiled batch.  Buffer shapes must have
+    /// been validated by the caller
+    /// ([`crate::runtime::Executable::run_f32`]).
+    pub fn run(&self, params: &[&[f32]]) -> Result<Vec<f32>> {
+        self.run_rows(params, usize::MAX)
+    }
+
+    /// Like [`NativeExec::run`], but computes only the first
+    /// `min(rows, batch)` rows and returns `rows × out_dim` outputs.
+    /// This is the deadline-flush fast path: a padded tail batch with one
+    /// live request costs one row of GMP solves, not the whole batch.
+    pub fn run_rows(&self, params: &[&[f32]], rows: usize) -> Result<Vec<f32>> {
+        if params.len() != self.n_params() {
+            bail!("expected {} params, got {}", self.n_params(), params.len());
+        }
+        match &self.graph {
+            Graph::Gmp { b, m, c } => self.run_gmp(params[0], *b, *m, *c, rows.min(*b)),
+            Graph::Mlp(spec) => {
+                let rows = rows.min(spec.batch);
+                self.run_mlp(spec, params, rows)
+            }
+        }
+    }
+
+    fn run_gmp(&self, x: &[f32], b: usize, m: usize, c: f64, rows: usize) -> Result<Vec<f32>> {
+        if x.len() != b * m {
+            bail!("gmp input length {} != {b}x{m}", x.len());
+        }
+        let row_h = |r: usize| -> f32 {
+            let xs: Vec<f64> = x[r * m..(r + 1) * m].iter().map(|&v| v as f64).collect();
+            solve_bisect(&xs, c, Shape::Relu, GMP_ITERS) as f32
+        };
+        if self.par_threads <= 1 {
+            Ok((0..rows).map(row_h).collect())
+        } else {
+            Ok(pool::parallel_map(rows, self.par_threads, row_h))
+        }
+    }
+
+    fn run_mlp(&self, spec: &MlpSpec, params: &[&[f32]], rows: usize) -> Result<Vec<f32>> {
+        let nl = spec.sizes.len() - 1;
+        // Materialize the weights into the TrainedNet layout nn::forward
+        // expects.  Weights arrive as f32 parameter buffers per the AOT
+        // contract (the graph treats them as inputs, not constants), so
+        // this f32→f64 conversion recurs per batch by design; its cost is
+        // ~3 orders of magnitude below the GMP solves it feeds.
+        let mut weights = Vec::with_capacity(nl);
+        let mut biases = Vec::with_capacity(nl);
+        for li in 0..nl {
+            weights.push(params[2 * li].iter().map(|&v| v as f64).collect());
+            biases.push(params[2 * li + 1].iter().map(|&v| v as f64).collect());
+        }
+        let net = TrainedNet {
+            task: String::new(),
+            sizes: spec.sizes.clone(),
+            activation: spec.activation.clone(),
+            splines: spec.splines,
+            c: spec.c,
+            acc_sw: 0.0,
+            acc_sac_algorithmic: 0.0,
+            weights,
+            biases,
+        };
+        let x = params[2 * nl];
+        let din = spec.sizes[0];
+        let k = *spec.sizes.last().unwrap();
+        if x.len() != spec.batch * din {
+            bail!("mlp input length {} != {}x{din}", x.len(), spec.batch);
+        }
+        let mult = self
+            .mult
+            .as_ref()
+            .ok_or_else(|| anyhow!("mlp executor missing multiplier calibration"))?;
+        let provider = Algorithmic::relu();
+        let row_logits = |r: usize| -> Vec<f64> {
+            nn::forward(&net, &provider, mult, &x[r * din..(r + 1) * din])
+        };
+        let row_results: Vec<Vec<f64>> = if self.par_threads <= 1 {
+            (0..rows).map(row_logits).collect()
+        } else {
+            pool::parallel_map(rows, self.par_threads, row_logits)
+        };
+        let mut out = Vec::with_capacity(rows * k);
+        for row in row_results {
+            debug_assert_eq!(row.len(), k);
+            out.extend(row.into_iter().map(|v| v as f32));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sac::gmp::solve_exact;
+
+    #[test]
+    fn gmp_exec_matches_solver() {
+        let exec = NativeExec::gmp(3, 4, 1.0);
+        let x: Vec<f32> = vec![
+            0.5, -0.2, 1.0, 0.1, //
+            -1.0, -1.0, -1.0, -1.0, //
+            2.0, 1.5, 0.0, -0.5,
+        ];
+        let bufs: Vec<&[f32]> = vec![&x];
+        let h = exec.run(&bufs).unwrap();
+        assert_eq!(h.len(), 3);
+        for r in 0..3 {
+            let xs: Vec<f64> = x[r * 4..(r + 1) * 4].iter().map(|&v| v as f64).collect();
+            let expect = solve_exact(&xs, 1.0);
+            assert!(
+                (h[r] as f64 - expect).abs() < 1e-5,
+                "row {r}: {} vs {expect}",
+                h[r]
+            );
+        }
+    }
+
+    #[test]
+    fn gmp_exec_parallel_agrees_with_serial() {
+        let b = 16;
+        let m = 5;
+        let mut rng = crate::util::rng::Rng::new(7);
+        let x: Vec<f32> = (0..b * m).map(|_| rng.uniform_in(-2.0, 2.0) as f32).collect();
+        let serial = NativeExec::gmp(b, m, 0.8);
+        let par = NativeExec::gmp(b, m, 0.8).with_par_threads(4);
+        let bufs: Vec<&[f32]> = vec![&x];
+        assert_eq!(serial.run(&bufs).unwrap(), par.run(&bufs).unwrap());
+    }
+
+    #[test]
+    fn mlp_exec_matches_direct_forward() {
+        let spec = MlpSpec {
+            sizes: vec![2, 3, 2],
+            splines: 3,
+            c: 1.0,
+            activation: "phi1".into(),
+            batch: 2,
+        };
+        let exec = NativeExec::mlp(spec).unwrap();
+        // f32-exact weights so the f32→f64 round-trip is lossless
+        let w1: Vec<f32> = vec![0.5, -0.25, 0.75, -0.5, 0.25, 0.5];
+        let b1: Vec<f32> = vec![-0.125, 0.0, 0.25];
+        let w2: Vec<f32> = vec![0.5, -0.5, 0.25, -0.25, -0.75, 0.75];
+        let b2: Vec<f32> = vec![0.0, 0.125];
+        let x: Vec<f32> = vec![0.5, -0.5, -0.25, 0.75];
+        let bufs: Vec<&[f32]> = vec![&w1, &b1, &w2, &b2, &x];
+        let out = exec.run(&bufs).unwrap();
+        assert_eq!(out.len(), 4);
+
+        let net = TrainedNet {
+            task: "t".into(),
+            sizes: vec![2, 3, 2],
+            activation: "phi1".into(),
+            splines: 3,
+            c: 1.0,
+            acc_sw: 0.0,
+            acc_sac_algorithmic: 0.0,
+            weights: vec![
+                w1.iter().map(|&v| v as f64).collect(),
+                w2.iter().map(|&v| v as f64).collect(),
+            ],
+            biases: vec![
+                b1.iter().map(|&v| v as f64).collect(),
+                b2.iter().map(|&v| v as f64).collect(),
+            ],
+        };
+        let p = Algorithmic::relu();
+        let m = Multiplier::calibrate(&p, 3, 1.0);
+        for r in 0..2 {
+            let logits = nn::forward(&net, &p, &m, &x[r * 2..(r + 1) * 2]);
+            for (j, &l) in logits.iter().enumerate() {
+                assert!(
+                    (out[r * 2 + j] as f64 - l).abs() < 1e-5,
+                    "row {r} logit {j}: {} vs {l}",
+                    out[r * 2 + j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn run_rows_computes_only_live_rows() {
+        let exec = NativeExec::gmp(8, 3, 1.0);
+        let mut rng = crate::util::rng::Rng::new(3);
+        let x: Vec<f32> = (0..24).map(|_| rng.uniform_in(-2.0, 2.0) as f32).collect();
+        let bufs: Vec<&[f32]> = vec![&x];
+        let full = exec.run(&bufs).unwrap();
+        let two = exec.run_rows(&bufs, 2).unwrap();
+        assert_eq!(full.len(), 8);
+        assert_eq!(two.len(), 2);
+        assert_eq!(&full[..2], &two[..]);
+    }
+
+    #[test]
+    fn mlp_rejects_bad_activation() {
+        let spec = MlpSpec {
+            sizes: vec![2, 2],
+            splines: 1,
+            c: 1.0,
+            activation: "gelu".into(),
+            batch: 1,
+        };
+        assert!(NativeExec::mlp(spec).is_err());
+    }
+}

@@ -12,7 +12,7 @@ pub const GMP_ITERS: usize = 60;
 /// The GMP shape function g (paper Sec. II-B).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Shape {
-    /// g(z) = [z]_+ (eq. 3, the MP limit)
+    /// `g(z) = [z]_+` (eq. 3, the MP limit)
     Relu,
     /// g(z) = w·ln(1+e^{z/w}) — the weak-inversion device shape with knee
     /// width `w` (normalized units)

@@ -22,6 +22,10 @@
 //! through the device model.  The table-model tier
 //! (`sac::table_model`) is calibrated against it.
 
+// Physical-unit annotations like "[V]" / "[A]" in the docs below are
+// prose, not intra-doc links.
+#![allow(rustdoc::broken_intra_doc_links)]
+
 use crate::device::Mosfet;
 use crate::pdk::{Polarity, ProcessNode, regime::Regime};
 use crate::util::rng::Rng;

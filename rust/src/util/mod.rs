@@ -1,5 +1,16 @@
-//! Infrastructure substrates built in-repo (the image vendors no
-//! serde_json / clap / rayon / criterion / proptest — see DESIGN.md §4).
+//! Infrastructure substrates built in-repo — the image vendors no
+//! serde_json / clap / rayon / criterion / proptest, so each has a small,
+//! property-tested substitute here (see the repo-root DESIGN.md
+//! §"Infrastructure substrates" for the full table):
+//!
+//! * [`json`] — recursive-descent JSON parser/writer
+//! * [`cli`] — flag/positional argument parsing
+//! * [`rng`] — deterministic SplitMix64/Xoshiro256++ with forkable streams
+//! * [`pool`] — scoped `parallel_map` + the persistent serving `WorkerPool`
+//! * [`propcheck`] — seeded property-testing runner
+//! * [`benchkit`] — warmup/sampling micro-benchmark harness
+//! * [`stats`] — summaries, percentiles, confusion matrices, histograms
+//! * [`table`] — ASCII tables, CSV writers, terminal plots
 
 pub mod benchkit;
 pub mod cli;

@@ -1,13 +1,25 @@
-//! Scoped thread pool for parallel sweeps and Monte-Carlo trials
-//! (rayon is not vendored; std::thread::scope gives us safe borrows).
+//! Thread pools (rayon is not vendored).
 //!
-//! The unit of work is an index range split into contiguous chunks, one
-//! queue entry per chunk, drained by `nthreads` workers through an atomic
-//! cursor — simple, allocation-free work distribution that scales fine for
-//! our coarse-grained trials (each MC trial is thousands of device
-//! evaluations).
+//! Two substrates live here:
+//!
+//! * [`parallel_map`] / [`parallel_reduce`] — a *scoped* fork-join pool for
+//!   parallel sweeps and Monte-Carlo trials.  The unit of work is an index
+//!   range split into contiguous chunks, drained by `nthreads` workers
+//!   through an atomic cursor — simple, allocation-free work distribution
+//!   that scales fine for coarse-grained trials (each MC trial is thousands
+//!   of device evaluations).  `std::thread::scope` gives us safe borrows.
+//!
+//! * [`WorkerPool`] — a *persistent* pool of named worker threads draining
+//!   a queue of boxed jobs.  This is the execution substrate of the serving
+//!   router (`coordinator::router`): batches materialize on the submit path
+//!   and are executed by whichever worker frees up first.  Shutdown is
+//!   graceful — on drop the pool finishes every queued job before joining,
+//!   so no accepted work is silently discarded.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
 
 /// Number of worker threads to use by default (leaves one core for the OS).
 pub fn default_threads() -> usize {
@@ -96,6 +108,121 @@ impl<T> SendPtr<T> {
 unsafe impl<T> Send for SendPtr<T> {}
 unsafe impl<T> Sync for SendPtr<T> {}
 
+// ---------------------------------------------------------------------------
+// Persistent worker pool
+// ---------------------------------------------------------------------------
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct PoolInner {
+    jobs: Mutex<VecDeque<Job>>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// A persistent pool of worker threads executing boxed jobs from a shared
+/// queue.  Cheap cloneable submit handles ([`PoolHandle`]) let auxiliary
+/// threads (e.g. the router's deadline flusher) enqueue work without owning
+/// the pool.
+pub struct WorkerPool {
+    inner: Arc<PoolInner>,
+    handles: Vec<thread::JoinHandle<()>>,
+}
+
+/// Submit-only handle to a [`WorkerPool`].
+#[derive(Clone)]
+pub struct PoolHandle {
+    inner: Arc<PoolInner>,
+}
+
+impl WorkerPool {
+    /// Spawn `nthreads` named workers (`sac-worker-N`).
+    pub fn new(nthreads: usize) -> WorkerPool {
+        let inner = Arc::new(PoolInner {
+            jobs: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let handles = (0..nthreads.max(1))
+            .map(|i| {
+                let inner = Arc::clone(&inner);
+                thread::Builder::new()
+                    .name(format!("sac-worker-{i}"))
+                    .spawn(move || worker_loop(&inner))
+                    .expect("spawn worker thread")
+            })
+            .collect();
+        WorkerPool { inner, handles }
+    }
+
+    /// A cloneable submit handle.
+    pub fn handle(&self) -> PoolHandle {
+        PoolHandle {
+            inner: Arc::clone(&self.inner),
+        }
+    }
+
+    /// Enqueue a job for the next free worker.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, job: F) {
+        self.handle().execute(job);
+    }
+
+    /// Jobs accepted but not yet started.
+    pub fn queued(&self) -> usize {
+        self.inner.jobs.lock().unwrap().len()
+    }
+
+    /// Number of worker threads.
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+}
+
+impl PoolHandle {
+    /// Enqueue a job for the next free worker.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, job: F) {
+        self.inner.jobs.lock().unwrap().push_back(Box::new(job));
+        self.inner.cv.notify_one();
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.inner.shutdown.store(true, Ordering::SeqCst);
+        self.inner.cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(inner: &PoolInner) {
+    loop {
+        let job = {
+            let mut q = inner.jobs.lock().unwrap();
+            loop {
+                if let Some(j) = q.pop_front() {
+                    break Some(j);
+                }
+                if inner.shutdown.load(Ordering::SeqCst) {
+                    break None;
+                }
+                q = inner.cv.wait(q).unwrap();
+            }
+        };
+        match job {
+            // A panicking job must not kill the worker: the pool would
+            // silently lose capacity for the rest of the process.  The
+            // job's owner is responsible for reporting its own failures
+            // (the router converts panics to failure records itself).
+            Some(j) => {
+                let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(j));
+            }
+            None => return,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -124,5 +251,53 @@ mod tests {
     fn threads_more_than_items() {
         let out = parallel_map(3, 16, |i| i);
         assert_eq!(out, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn worker_pool_runs_all_jobs() {
+        let pool = WorkerPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // graceful: drains the queue before joining
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn worker_pool_handle_submits() {
+        let pool = WorkerPool::new(2);
+        assert_eq!(pool.workers(), 2);
+        let h = pool.handle();
+        let flag = Arc::new(AtomicBool::new(false));
+        let f = Arc::clone(&flag);
+        h.execute(move || f.store(true, Ordering::SeqCst));
+        drop(pool);
+        assert!(flag.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn worker_pool_survives_panicking_job() {
+        let pool = WorkerPool::new(1);
+        pool.execute(|| panic!("job blew up"));
+        let done = Arc::new(AtomicBool::new(false));
+        let d = Arc::clone(&done);
+        pool.execute(move || d.store(true, Ordering::SeqCst));
+        drop(pool);
+        assert!(done.load(Ordering::SeqCst), "worker died with the panic");
+    }
+
+    #[test]
+    fn worker_pool_zero_threads_clamps_to_one() {
+        let pool = WorkerPool::new(0);
+        assert_eq!(pool.workers(), 1);
+        let done = Arc::new(AtomicBool::new(false));
+        let d = Arc::clone(&done);
+        pool.execute(move || d.store(true, Ordering::SeqCst));
+        drop(pool);
+        assert!(done.load(Ordering::SeqCst));
     }
 }

@@ -1,4 +1,8 @@
-//! Statistics helpers shared by the analysis engines and the repro harness.
+//! Statistics helpers shared by the analysis engines, the serving metrics
+//! and the repro harness: sample summaries ([`summarize`]), interpolated
+//! [`percentile`]s (the p99 latency numbers), curve-deviation metrics,
+//! Pearson correlation, k-class [`Confusion`] matrices (Table IV / Fig. 15)
+//! and fixed-width [`Histogram`]s.
 
 /// Running summary of a sample set.
 #[derive(Clone, Debug, Default)]
@@ -75,7 +79,7 @@ pub fn pearson(a: &[f64], b: &[f64]) -> f64 {
 #[derive(Clone, Debug)]
 pub struct Confusion {
     pub k: usize,
-    /// counts[true][pred]
+    /// `counts[true][pred]`
     pub counts: Vec<Vec<usize>>,
 }
 

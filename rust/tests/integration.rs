@@ -1,24 +1,36 @@
 //! Integration tests across the stack: python-goldens ↔ rust solver
-//! parity, artifact loading, PJRT execution, serving coordinator, and the
-//! circuit-vs-compiled cross-check.  These need `make artifacts` to have
-//! run; each test skips (with a message) when artifacts are missing so
-//! `cargo test` stays green on a fresh checkout.
+//! parity, artifact loading, native execution, the serving coordinator,
+//! and the circuit-vs-compiled cross-check.
+//!
+//! Tests that need `make artifacts` detect the missing directory through
+//! the `artifacts()` helper and *skip with a message* instead of failing,
+//! so `cargo test -q` stays green on a clean checkout.  The router /
+//! coordinator tests construct their engines in memory and always run.
 
+use std::collections::HashSet;
 use std::path::PathBuf;
+use std::time::Duration;
 
+use sac::cells::multiplier::Multiplier;
 use sac::cells::{Algorithmic, HProvider};
-use sac::coordinator::InferenceServer;
-use sac::data::Dataset;
-use sac::runtime::Runtime;
+use sac::coordinator::{Engine, InferenceServer, RequestId, Router, RouterConfig};
+use sac::data::{Dataset, TrainedNet};
+use sac::runtime::{Executable, Runtime};
 use sac::sac::gmp::{solve_bisect, Shape, GMP_ITERS};
 use sac::util::json;
 
+/// Artifact directory, or `None` (with an explanatory message) when the
+/// artifacts have not been built — the caller returns early, skipping the
+/// test body without failing the suite.
 fn artifacts() -> Option<PathBuf> {
     let dir = sac::runtime::default_artifacts_dir();
     if dir.join("manifest.json").exists() {
         Some(dir)
     } else {
-        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        eprintln!(
+            "skipping: artifacts/ not built (run `make artifacts`, i.e. \
+             python -m compile.aot from python/)"
+        );
         None
     }
 }
@@ -77,7 +89,7 @@ fn rust_cells_match_python_goldens() {
 }
 
 #[test]
-fn pjrt_gmp_kernel_matches_rust_solver() {
+fn native_gmp_kernel_matches_rust_solver() {
     let Some(dir) = artifacts() else { return };
     let rt = Runtime::new(&dir).unwrap();
     let exe = rt.load("gmp_kernel").unwrap();
@@ -97,7 +109,7 @@ fn pjrt_gmp_kernel_matches_rust_solver() {
         let h_rs = solve_bisect(&xs, c, Shape::Relu, GMP_ITERS);
         assert!(
             (out[row] as f64 - h_rs).abs() < 1e-4,
-            "row {row}: pjrt={} rust={h_rs}",
+            "row {row}: native={} rust={h_rs}",
             out[row]
         );
     }
@@ -120,9 +132,9 @@ fn serving_accuracy_matches_training_record() {
             .filter(|&&(id, pred, _)| pred == ds.y[id as usize] as usize)
             .count();
         let acc = correct as f64 / ds.n as f64;
-        // the AOT graph runs the same math as training → accuracies match
-        // up to the bisect-vs-exact solver difference
-        let recorded = server.net.acc_sac_algorithmic;
+        // the exported graph runs the same math as training → accuracies
+        // match up to the bisect-vs-exact solver difference
+        let recorded = server.engine.net.acc_sac_algorithmic;
         assert!(
             (acc - recorded).abs() < 0.03,
             "{task}: served acc {acc:.3} vs recorded {recorded:.3}"
@@ -172,4 +184,166 @@ fn provider_backends_share_label_contract() {
         sac::pdk::regime::Regime::WeakInversion,
     );
     assert!(cc.label().contains("cmos180"));
+}
+
+// ---------------------------------------------------------------------------
+// Router: concurrent multi-task serving (artifact-free — always runs)
+// ---------------------------------------------------------------------------
+
+/// A hand-built net with f32-exact weights so the engine's f32 weight
+/// buffers and the f64 golden path compute identical numbers.
+fn toy_net(task: &str, seed: u64, sizes: &[usize]) -> TrainedNet {
+    let mut rng = sac::util::rng::Rng::new(seed);
+    let nl = sizes.len() - 1;
+    let mut weights = Vec::with_capacity(nl);
+    let mut biases = Vec::with_capacity(nl);
+    // quantize to 1/64 so every weight is exactly representable in f32
+    let mut q = |lo: f64, hi: f64| (rng.uniform_in(lo, hi) * 64.0).round() / 64.0;
+    for li in 0..nl {
+        weights.push((0..sizes[li] * sizes[li + 1]).map(|_| q(-0.9, 0.9)).collect());
+        biases.push((0..sizes[li + 1]).map(|_| q(-0.2, 0.2)).collect());
+    }
+    TrainedNet {
+        task: task.to_string(),
+        sizes: sizes.to_vec(),
+        activation: "phi1".into(),
+        splines: 3,
+        c: 1.0,
+        acc_sw: 0.0,
+        acc_sac_algorithmic: 0.0,
+        weights,
+        biases,
+    }
+}
+
+fn toy_engine(net: &TrainedNet, batch: usize) -> Engine {
+    let exe = Executable::native_mlp(net, batch).unwrap();
+    Engine::from_parts(net.clone(), exe).unwrap()
+}
+
+/// Deterministic, f32-exact feature vector for (submitter, k).
+fn toy_features(dim: usize, submitter: usize, k: usize) -> Vec<f32> {
+    (0..dim)
+        .map(|j| {
+            let v = ((submitter * 7 + k * 3 + j * 5) % 33) as f32;
+            (v - 16.0) / 16.0
+        })
+        .collect()
+}
+
+/// The tentpole acceptance test: many concurrent submitters against a
+/// two-task router; every request id must be answered exactly once, and
+/// every answer must match the golden circuit path (`nn::forward` on the
+/// algorithmic tier with the same multiplier calibration).
+#[test]
+fn router_concurrent_serving_exactly_once_with_golden_outputs() {
+    let nets = [
+        toy_net("alpha", 21, &[3, 5, 2]),
+        toy_net("beta", 22, &[2, 4, 3]),
+    ];
+    let router = Router::new(
+        RouterConfig {
+            workers: 4,
+            max_wait: Duration::from_millis(2),
+            flush_tick: Duration::from_micros(200),
+        },
+        vec![
+            ("alpha".into(), toy_engine(&nets[0], 4)),
+            ("beta".into(), toy_engine(&nets[1], 3)),
+        ],
+    );
+
+    let n_submitters = 6;
+    let per_submitter = 25;
+    // (request handle, task, features) per submitter
+    let submitted: Vec<Vec<(RequestId, usize, Vec<f32>)>> =
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..n_submitters)
+                .map(|s| {
+                    let router = &router;
+                    scope.spawn(move || {
+                        (0..per_submitter)
+                            .map(|k| {
+                                let task = (s + k) % 2;
+                                let dim = if task == 0 { 3 } else { 2 };
+                                let feats = toy_features(dim, s, k);
+                                let req =
+                                    router.submit(task, feats.clone()).unwrap();
+                                (req, task, feats)
+                            })
+                            .collect::<Vec<_>>()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+
+    router
+        .drain(Duration::from_secs(30))
+        .expect("router drained cleanly");
+
+    // golden path: the circuit-tier forward with the identical calibration
+    let provider = Algorithmic::relu();
+    let mults: Vec<Multiplier> = nets
+        .iter()
+        .map(|n| Multiplier::calibrate(&provider, n.splines, n.c))
+        .collect();
+
+    let total = n_submitters * per_submitter;
+    let mut seen: HashSet<(usize, u64)> = HashSet::new();
+    for (req, task, feats) in submitted.into_iter().flatten() {
+        let r = router
+            .try_take(req)
+            .expect("no engine failure")
+            .unwrap_or_else(|| panic!("request {req:?} never answered"));
+        assert!(
+            seen.insert((task, r.id)),
+            "request {req:?} answered more than once"
+        );
+        // exactly-once delivery: a second take must find nothing
+        assert!(router.try_take(req).unwrap().is_none());
+
+        let golden = sac::nn::forward(&nets[task], &provider, &mults[task], &feats);
+        assert_eq!(r.logits.len(), golden.len());
+        for (j, (&got, &want)) in r.logits.iter().zip(&golden).enumerate() {
+            assert!(
+                (got as f64 - want).abs() < 1e-4,
+                "{req:?} logit {j}: served {got} vs golden {want}"
+            );
+        }
+        let golden_pred = golden
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(j, _)| j)
+            .unwrap();
+        assert_eq!(r.pred, golden_pred, "{req:?}: prediction diverged");
+    }
+    assert_eq!(seen.len(), total, "lost requests");
+    assert_eq!(router.ready(), 0, "stray responses left behind");
+    assert_eq!(router.pending(), 0, "stranded requests in a lane queue");
+    assert_eq!(router.aggregate_metrics().total_requests(), total);
+    assert!(router.failures().is_empty(), "{:?}", router.failures());
+}
+
+/// Partial batches must be executed by the deadline flusher even when no
+/// one calls drain — tail requests are never stranded.
+#[test]
+fn router_deadline_flush_answers_tail_requests() {
+    let net = toy_net("tail", 31, &[2, 3, 2]);
+    let router = Router::new(
+        RouterConfig {
+            workers: 2,
+            max_wait: Duration::from_millis(1),
+            flush_tick: Duration::from_micros(200),
+        },
+        vec![("tail".into(), toy_engine(&net, 8))],
+    );
+    // a single request in a batch-of-8 lane
+    let req = router.submit(0, vec![0.25, -0.5]).unwrap();
+    let r = router
+        .wait(req, Duration::from_secs(5))
+        .expect("deadline flush delivered the tail request");
+    assert_eq!(r.id, req.id);
+    assert_eq!(r.logits.len(), 2);
 }
