@@ -112,6 +112,42 @@ fn main() {
         }));
     }
 
+    // --- hot spot 7: scalar vs batched engine, one 64-row batch ----------
+    // The ISSUE-2 acceptance floor: the columnar lookup-grid engine must
+    // be ≥ 5× faster than the scalar per-row path on a 64-row batch of
+    // the bench net.
+    {
+        use sac::coordinator::{synthetic_engine_with_mode, DynamicBatcher};
+        use sac::runtime::ExecMode;
+        let sizes = [16usize, 12, 4];
+        let scalar = synthetic_engine_with_mode(42, &sizes, 64, ExecMode::Scalar).unwrap();
+        let batched = synthetic_engine_with_mode(42, &sizes, 64, ExecMode::Batched).unwrap();
+        let mut b64 = DynamicBatcher::new(64, 16);
+        let mut rng = Rng::new(9);
+        for _ in 0..64 {
+            b64.submit((0..16).map(|_| rng.uniform_in(-1.0, 1.0) as f32).collect());
+        }
+        let batch = b64.flush().remove(0);
+        let quick = Bench::quick();
+        let rs = quick.run("engine/scalar 64×[16,12,4] batch", || {
+            black_box(scalar.run_batch(&batch).unwrap())
+        });
+        let rb = quick.run("engine/batched 64×[16,12,4] batch", || {
+            black_box(batched.run_batch(&batch).unwrap())
+        });
+        let speedup = rs.mean_ns() / rb.mean_ns();
+        println!(
+            "engine/batched vs engine/scalar on a 64-row batch: {speedup:.1}× \
+             (acceptance floor: 5×)"
+        );
+        assert!(
+            speedup >= 5.0,
+            "batched engine speedup {speedup:.1}× is below the 5× acceptance floor"
+        );
+        reports.push(rs);
+        reports.push(rb);
+    }
+
     println!("\n=== hotpath benchmarks ===");
     for r in &reports {
         println!("{}", r.report());

@@ -31,7 +31,7 @@ pub use metrics::ServeMetrics;
 pub use router::{RequestId, Response, Router, RouterConfig};
 
 use crate::data::TrainedNet;
-use crate::runtime::{Executable, Runtime};
+use crate::runtime::{Executable, ExecMode, Runtime};
 use crate::util::rng::Rng;
 
 /// One answered inference row: (request id, predicted class, logits).
@@ -56,13 +56,25 @@ pub struct Engine {
 
 impl Engine {
     /// Build from the artifact directory: loads `<task>_mlp` and
-    /// `weights_<task>.json`, pre-materializing the weight literals.
+    /// `weights_<task>.json`, pre-materializing the weight literals
+    /// (scalar execution — see [`Engine::new_with_mode`]).
     pub fn new(rt: &Runtime, task: &str) -> Result<Engine> {
+        Engine::new_with_mode(rt, task, ExecMode::Scalar)
+    }
+
+    /// [`Engine::new`] with an explicit execution strategy (the CLI's
+    /// `--engine {scalar,batched}` flag lands here).
+    pub fn new_with_mode(rt: &Runtime, task: &str, mode: ExecMode) -> Result<Engine> {
         let net = TrainedNet::load(
             &rt.artifacts_dir.join(format!("weights_{task}.json")),
         )?;
-        let exe = rt.load(&format!("{task}_mlp"))?;
+        let exe = rt.load_with_mode(&format!("{task}_mlp"), mode)?;
         Engine::from_parts(net, exe)
+    }
+
+    /// Which execution strategy this engine's executable uses.
+    pub fn mode(&self) -> ExecMode {
+        self.exe.mode()
     }
 
     /// Build from in-memory parts (artifact-free: see
@@ -122,8 +134,20 @@ impl Engine {
 
 /// A deterministic synthetic engine for benches / demos / tests that must
 /// run without any artifact directory: a random-weight S-AC MLP with the
-/// cheap `relu`/`S=1` cell configuration.
+/// cheap `relu`/`S=1` cell configuration (scalar execution).
 pub fn synthetic_engine(seed: u64, sizes: &[usize], batch: usize) -> Result<Engine> {
+    synthetic_engine_with_mode(seed, sizes, batch, ExecMode::Scalar)
+}
+
+/// [`synthetic_engine`] with an explicit execution strategy — the
+/// scalar-vs-batched comparison surface of `bench-serve` and
+/// `benches/hotpath.rs`.
+pub fn synthetic_engine_with_mode(
+    seed: u64,
+    sizes: &[usize],
+    batch: usize,
+    mode: ExecMode,
+) -> Result<Engine> {
     assert!(sizes.len() >= 2, "need at least [in, out] sizes");
     let mut rng = Rng::new(seed);
     let nl = sizes.len() - 1;
@@ -152,7 +176,7 @@ pub fn synthetic_engine(seed: u64, sizes: &[usize], batch: usize) -> Result<Engi
         weights,
         biases,
     };
-    let exe = Executable::native_mlp(&net, batch)?;
+    let exe = Executable::native_mlp_with_mode(&net, batch, mode)?;
     Engine::from_parts(net, exe)
 }
 
@@ -168,6 +192,13 @@ impl InferenceServer {
     /// Build from the artifact directory (see [`Engine::new`]).
     pub fn new(rt: &Runtime, task: &str) -> Result<InferenceServer> {
         Ok(InferenceServer::from_engine(Engine::new(rt, task)?))
+    }
+
+    /// [`InferenceServer::new`] with an explicit execution strategy.
+    pub fn new_with_mode(rt: &Runtime, task: &str, mode: ExecMode) -> Result<InferenceServer> {
+        Ok(InferenceServer::from_engine(Engine::new_with_mode(
+            rt, task, mode,
+        )?))
     }
 
     /// Wrap an existing engine.
@@ -237,5 +268,31 @@ mod tests {
         let a = engine.run_batch(batch).unwrap();
         let b2 = engine.run_batch(batch).unwrap();
         assert_eq!(a, b2);
+    }
+
+    #[test]
+    fn batched_engine_agrees_with_scalar_engine() {
+        let scalar = synthetic_engine_with_mode(9, &[4, 5, 3], 6, ExecMode::Scalar).unwrap();
+        let batched = synthetic_engine_with_mode(9, &[4, 5, 3], 6, ExecMode::Batched).unwrap();
+        assert_eq!(scalar.mode(), ExecMode::Scalar);
+        assert_eq!(batched.mode(), ExecMode::Batched);
+        let mut b = DynamicBatcher::new(6, 4);
+        for i in 0..6 {
+            let t = i as f32;
+            b.submit(vec![0.15 * t, -0.1 * t, 0.3 - 0.05 * t, 0.2]);
+        }
+        let batch = &b.flush()[0];
+        let sa = scalar.run_batch(batch).unwrap();
+        let ba = batched.run_batch(batch).unwrap();
+        assert_eq!(sa.len(), ba.len());
+        for ((sid, _, slog), (bid, _, blog)) in sa.iter().zip(&ba) {
+            assert_eq!(sid, bid);
+            for (j, (&sv, &bv)) in slog.iter().zip(blog).enumerate() {
+                assert!(
+                    (sv - bv).abs() < 1e-2,
+                    "req {sid} logit {j}: scalar {sv} vs batched {bv}"
+                );
+            }
+        }
     }
 }

@@ -311,6 +311,9 @@ impl Router {
     /// dispatches immediately when full, otherwise within
     /// `max_wait + flush_tick`.
     pub fn submit(&self, task: usize, features: Vec<f32>) -> Result<RequestId> {
+        if self.shared.shutdown.load(Ordering::SeqCst) {
+            bail!("router is shut down");
+        }
         let lane = self
             .shared
             .lanes
@@ -482,6 +485,27 @@ impl Router {
     /// Worker threads serving this router.
     pub fn workers(&self) -> usize {
         self.pool.workers()
+    }
+
+    /// Stop accepting new submissions (idempotent).  Work already
+    /// accepted still completes: the deadline flusher exits on shutdown,
+    /// so pending partial batches are materialized here, and computed
+    /// responses remain takeable via
+    /// [`Router::try_take`]/[`Router::wait`].  A submit racing this call
+    /// may still land in a lane queue just after the final flush — call
+    /// [`Router::drain`] for a clean handoff.  Dropping the router
+    /// implies shutdown.
+    pub fn shutdown(&self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.flush_cv.notify_all();
+        // The flusher is gone after the flag flips; materialize whatever
+        // is already queued so accepted requests are not stranded.
+        self.flush();
+    }
+
+    /// Whether [`Router::shutdown`] has been called.
+    pub fn is_shut_down(&self) -> bool {
+        self.shared.shutdown.load(Ordering::SeqCst)
     }
 }
 
@@ -729,6 +753,22 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn shutdown_rejects_new_submits_but_completes_accepted_work() {
+        let router = toy_router(2);
+        let req = router.submit(0, vec![0.1, 0.2, 0.3]).unwrap();
+        assert!(!router.is_shut_down());
+        router.shutdown();
+        router.shutdown(); // idempotent
+        assert!(router.is_shut_down());
+        let err = router.submit(0, vec![0.4, 0.5, 0.6]).unwrap_err();
+        assert!(err.to_string().contains("shut down"), "{err}");
+        // the accepted request is still served once flushed
+        router.flush();
+        router.drain(Duration::from_secs(10)).unwrap();
+        assert!(router.try_take(req).unwrap().is_some());
     }
 
     #[test]

@@ -77,6 +77,11 @@ pub struct TrainedNet {
 impl TrainedNet {
     pub fn load(path: &Path) -> Result<TrainedNet> {
         let j = parse_file(path)?;
+        let activation = j.get("activation")?.as_str()?.to_string();
+        // Validate here so serving / evaluation hot loops never meet an
+        // unknown activation name (nn::forward relies on this).
+        crate::nn::Activation::parse(&activation)
+            .map_err(|e| anyhow!("{}: {e}", path.display()))?;
         let sizes: Vec<usize> = j
             .get("sizes")?
             .as_arr()?
@@ -98,7 +103,7 @@ impl TrainedNet {
         Ok(TrainedNet {
             task: j.get("task")?.as_str()?.to_string(),
             sizes,
-            activation: j.get("activation")?.as_str()?.to_string(),
+            activation,
             splines: j.get("splines")?.as_usize()?,
             c: j.get("c")?.as_f64()?,
             acc_sw: j.get("acc_sw")?.as_f64()?,
@@ -110,6 +115,13 @@ impl TrainedNet {
 
     pub fn n_layers(&self) -> usize {
         self.sizes.len() - 1
+    }
+
+    /// Parsed hidden-activation kind.  `Err` only for hand-constructed
+    /// nets with a bogus name — [`TrainedNet::load`] validates on disk
+    /// input, so loaded nets always succeed.
+    pub fn activation_kind(&self) -> Result<crate::nn::Activation> {
+        crate::nn::Activation::parse(&self.activation)
     }
 
     /// `w[layer][i][k]` accessor (layer 0-based, row-major `[in × out]`).
@@ -194,6 +206,41 @@ mod tests {
         assert_eq!(net.n_layers(), 2);
         assert_eq!(net.w(0, 1, 2), 6.0);
         assert_eq!(net.biases[0], vec![0.1, 0.2, 0.3]);
+    }
+
+    #[test]
+    fn weights_json_rejects_unknown_activation() {
+        // the load-time validation path of the satellite: an unknown
+        // activation is an error here, not a panic inside nn::forward
+        let text = r#"{
+            "task": "toy", "sizes": [2, 2], "activation": "gelu",
+            "splines": 1, "c": 1.0, "acc_sw": 0.0, "acc_sac_algorithmic": 0.0,
+            "weights": { "w1": [[1, 0], [0, 1]], "b1": [0, 0] }
+        }"#;
+        let dir = std::env::temp_dir().join("sac_data_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad_act.json");
+        std::fs::write(&p, text).unwrap();
+        let err = TrainedNet::load(&p).unwrap_err();
+        assert!(err.to_string().contains("gelu"), "unexpected error: {err:#}");
+    }
+
+    #[test]
+    fn activation_kind_parses() {
+        let text = r#"{
+            "task": "toy", "sizes": [2, 2], "activation": "softplus",
+            "splines": 1, "c": 1.0, "acc_sw": 0.0, "acc_sac_algorithmic": 0.0,
+            "weights": { "w1": [[1, 0], [0, 1]], "b1": [0, 0] }
+        }"#;
+        let dir = std::env::temp_dir().join("sac_data_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("good_act.json");
+        std::fs::write(&p, text).unwrap();
+        let net = TrainedNet::load(&p).unwrap();
+        assert_eq!(
+            net.activation_kind().unwrap(),
+            crate::nn::Activation::Softplus
+        );
     }
 
     #[test]

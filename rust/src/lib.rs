@@ -23,6 +23,19 @@
 //! property testing, benchmarking — the image vendors no serde_json /
 //! clap / rayon / criterion / proptest).
 
+// Lint posture for a numeric-kernel codebase (CI runs
+// `cargo clippy -- -D warnings`): index-based loops mirror the paper's
+// subscripted equations and frequently index several buffers with
+// derived offsets, solver/cell signatures legitimately carry many scalar
+// knobs, and `.max(lo).min(hi)` chains predate `clamp` in the seed.
+// Correctness/suspicious/perf lints stay fully enforced.
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::manual_clamp,
+    clippy::type_complexity
+)]
+
 pub mod util;
 pub mod pdk;
 pub mod device;

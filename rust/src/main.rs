@@ -9,6 +9,9 @@
 //! info                  stack/PDK/artifact status
 //! ```
 
+// Same lint posture as the library crate (see src/lib.rs).
+#![allow(clippy::needless_range_loop, clippy::manual_clamp)]
+
 use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
@@ -17,11 +20,11 @@ use anyhow::{anyhow, bail, ensure, Result};
 use sac::analysis::{dc, montecarlo as mc};
 use sac::cells::activations::CellKind;
 use sac::cells::CircuitCorner;
-use sac::coordinator::{synthetic_engine, Engine, Router, RouterConfig};
+use sac::coordinator::{synthetic_engine_with_mode, Engine, Router, RouterConfig};
 use sac::data::Dataset;
 use sac::pdk::{regime::Regime, ProcessNode};
 use sac::repro::{self, ReproOpts};
-use sac::runtime::{default_artifacts_dir, Runtime};
+use sac::runtime::{default_artifacts_dir, ExecMode, Runtime};
 use sac::util::cli::Args;
 use sac::util::rng::Rng;
 use sac::util::table::{write_xy_csv, Table};
@@ -31,11 +34,14 @@ sac — shape-based analog computing framework (TCSI 2022 reproduction)
 
 USAGE:
   sac repro <id|all> [--out results] [--limit N] [--threads N] [--mc-trials N]
-  sac serve <task> [--artifacts DIR] [--requests N] [--workers N]
+  sac serve <task> [--artifacts DIR] [--requests N] [--workers N] [--engine scalar|batched]
   sac bench-serve [--tasks K] [--workers N] [--submitters N] [--requests N] [--batch B]
+                  [--engine scalar|batched]
   sac characterize <cell> [--node NAME] [--regime WI|MI|SI] [--temp C] [--out results]
   sac mc <cell> [--node NAME] [--trials N]
   sac info [--artifacts DIR]
+
+engines: batched (default; columnar lookup-grid engine) | scalar (per-row GMP solves)
 
 ids: fig1 fig2a fig3 fig4 fig5 fig7 fig8 fig10 fig12 fig13 fig15
      table1 table2 table3 table4 table5 | all
@@ -111,12 +117,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     let n_req = args.get_usize("requests", 256)?;
     let workers = args.get_usize("workers", sac::util::pool::default_threads())?;
+    let mode = ExecMode::parse(args.get_or("engine", "batched"))?;
     let rt = Runtime::new(&artifacts)?;
     println!("backend: {}", rt.platform());
-    let engine = Engine::new(&rt, task)?;
+    let engine = Engine::new_with_mode(&rt, task, mode)?;
     println!(
-        "serving {task}: net {:?}, batch={} dim={} workers={workers}",
-        engine.net.sizes, engine.batch_size, engine.dim
+        "serving {task}: net {:?}, batch={} dim={} workers={workers} engine={}",
+        engine.net.sizes,
+        engine.batch_size,
+        engine.dim,
+        engine.mode().name()
     );
     let ds = Dataset::load_sacd(&artifacts.join(format!("{task}_test.bin")))?;
     let n = n_req.min(ds.n);
@@ -167,16 +177,19 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
     let submitters = args.get_usize("submitters", 4)?.max(1);
     let requests = args.get_usize("requests", 512)?;
     let batch = args.get_usize("batch", 32)?.max(1);
+    let mode = ExecMode::parse(args.get_or("engine", "batched"))?;
     const DIM: usize = 16;
     println!(
         "bench-serve: {tasks} task(s) × [{DIM},12,4] S-AC nets, batch={batch}, \
-         {submitters} submitter(s), {workers} worker(s), {requests} requests"
+         {submitters} submitter(s), {workers} worker(s), {requests} requests, \
+         engine={}",
+        mode.name()
     );
     let engines = (0..tasks)
         .map(|t| {
             Ok((
                 format!("task{t}"),
-                synthetic_engine(100 + t as u64, &[DIM, 12, 4], batch)?,
+                synthetic_engine_with_mode(100 + t as u64, &[DIM, 12, 4], batch, mode)?,
             ))
         })
         .collect::<Result<Vec<_>>>()?;

@@ -1,0 +1,535 @@
+//! Batch-major columnar execution engine for S-AC network inference.
+//!
+//! The scalar path (`nn::forward`) re-derives the S-AC shape math per MAC:
+//! every `Multiplier::mul` is four proto-unit GMP solves, so a `B×D` batch
+//! through a `[D, H, K]` net costs `4·B·(D·H + H·K)` solver calls.  The
+//! paper's point is that the *shapes* are robust across (node, regime,
+//! temperature) corners — so at NN scale the shape responses can be
+//! sampled **once per corner** into dense lookup grids and replayed by
+//! interpolation for the whole serving lifetime (the crossbar-style
+//! batched-MAC structure of Binas et al. / Liu-Strachan-Basu).
+//!
+//! Two grids per corner, both sampled from the calibrated backend
+//! ([`crate::cells::HProvider`]) at engine-build time:
+//!
+//! * [`MulGrid`] — the four-quadrant multiplier's lookup.  Eq. 24
+//!   factorizes through the 1-D proto-shape response `P(z)` —
+//!   `mul(x,w) = scale·(P(a+w+x) − P(a+w−x) + P(a−w−x) − P(a−w+x))` —
+//!   so the dense grid is one very fine 1-D table of `P` rather than a
+//!   coarse 2-D surface: build cost `O(points)`, and on the ReLU-shape
+//!   tier `P` is piecewise linear, making linear interpolation *exact*
+//!   away from the (measure-zero) kink cells.
+//! * [`ActGrid`] — the hidden activation cell's 1-D transfer, sampled
+//!   post-gain (`z = ACT_GAIN · preactivation`).
+//!
+//! Operands outside a grid's range fall back to the exact cell evaluation
+//! (never clamped — correctness is preserved, only speed degrades), so
+//! the engine is numerically safe for unbounded activations (relu /
+//! softplus hidden layers) and out-of-distribution inputs.
+//!
+//! The kernel itself is **columnar**: activations live column-major
+//! (`h[i·rows + r]`), the weight loop is outermost and the row loop
+//! innermost, so one weight's four grid bases are hoisted across the
+//! whole batch and both the input column and the accumulator column are
+//! contiguous.  Padded tail rows are skipped by the `rows` (live-row)
+//! argument — the padded-row contract of `coordinator::batcher::Batch`.
+//!
+//! DESIGN.md §7 documents grid resolution and the interpolation error
+//! budget; `tests/integration.rs` pins batched-vs-scalar equivalence at
+//! every corner the table tier exercises.
+
+use std::fmt;
+
+use anyhow::Result;
+
+use crate::cells::multiplier::Multiplier;
+use crate::cells::{proto_unit, HProvider};
+use crate::data::TrainedNet;
+
+use super::{Activation, ACT_GAIN};
+
+/// Resolution / range knobs for the per-corner lookup grids.
+///
+/// Defaults give a proto-shape step of `1/2048` over `z ∈ [−12, 12]`
+/// (393 KB, L2-resident) and an activation step of `1/1024` over
+/// `z ∈ [−8, 8]` — see DESIGN.md §7 for the error budget behind these.
+#[derive(Clone, Copy, Debug)]
+pub struct GridConfig {
+    /// half-range of the proto-shape grid (covers `a ± w ± x`)
+    pub proto_range: f64,
+    /// proto-shape samples per unit of z
+    pub proto_density: usize,
+    /// half-range of the activation grid (post-gain z)
+    pub act_range: f64,
+    /// activation samples per unit of z
+    pub act_density: usize,
+}
+
+impl Default for GridConfig {
+    fn default() -> Self {
+        GridConfig {
+            proto_range: 12.0,
+            proto_density: 2048,
+            act_range: 8.0,
+            act_density: 1024,
+        }
+    }
+}
+
+/// A dense 1-D sample table with linear interpolation.
+#[derive(Clone, Debug)]
+pub struct Grid1D {
+    lo: f64,
+    hi: f64,
+    inv_step: f64,
+    values: Vec<f64>,
+}
+
+impl Grid1D {
+    /// Sample `f` on `n ≥ 2` evenly spaced points over `[lo, hi]`.
+    pub fn sample<F: Fn(f64) -> f64>(lo: f64, hi: f64, n: usize, f: F) -> Grid1D {
+        assert!(n >= 2 && hi > lo, "grid needs n>=2 points and hi>lo");
+        let step = (hi - lo) / (n - 1) as f64;
+        let values: Vec<f64> = (0..n).map(|i| f(lo + step * i as f64)).collect();
+        Grid1D {
+            lo,
+            hi,
+            inv_step: 1.0 / step,
+            values,
+        }
+    }
+
+    #[inline]
+    pub fn contains(&self, z: f64) -> bool {
+        z >= self.lo && z <= self.hi
+    }
+
+    /// Linear interpolation at `z`; the caller guarantees `contains(z)`.
+    #[inline]
+    pub fn eval(&self, z: f64) -> f64 {
+        let t = (z - self.lo) * self.inv_step;
+        // min() guards the z == hi endpoint (t lands exactly on the last
+        // sample); anything further out is the caller's contract breach.
+        let i = (t as usize).min(self.values.len() - 2);
+        let f = t - i as f64;
+        self.values[i] + (self.values[i + 1] - self.values[i]) * f
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+}
+
+/// Dense lookup grid for the calibrated four-quadrant multiplier
+/// (Fig. 11): a fine 1-D table of the proto-shape response `P(z)` plus
+/// the calibration's operating point `a` and output scale.
+#[derive(Clone, Debug)]
+pub struct MulGrid {
+    grid: Grid1D,
+    a: f64,
+    scale: f64,
+}
+
+impl MulGrid {
+    /// Sample the backend's proto-shape once over the configured range.
+    pub fn build(p: &dyn HProvider, mult: &Multiplier, cfg: &GridConfig) -> MulGrid {
+        let n = (2.0 * cfg.proto_range * cfg.proto_density as f64) as usize + 1;
+        let s = mult.s;
+        let c = mult.c;
+        let grid = Grid1D::sample(-cfg.proto_range, cfg.proto_range, n, |z| {
+            proto_unit(p, z, s, c)
+        });
+        MulGrid {
+            grid,
+            a: mult.a,
+            scale: mult.scale,
+        }
+    }
+
+    /// eq. 24 through the interpolated proto-shape (all four arguments in
+    /// range; `wp = a + w`, `wm = a − w` hoisted by the caller).
+    #[inline]
+    fn eval(&self, x: f64, wp: f64, wm: f64) -> f64 {
+        self.scale
+            * (self.grid.eval(wp + x) - self.grid.eval(wp - x) + self.grid.eval(wm - x)
+                - self.grid.eval(wm + x))
+    }
+
+    /// `dst[r] += mul(xs[r], w)` for every row: the grid where the proto
+    /// arguments stay in range, the exact cell (`mult.mul`) otherwise.
+    pub fn accumulate(
+        &self,
+        p: &dyn HProvider,
+        mult: &Multiplier,
+        xs: &[f64],
+        w: f64,
+        dst: &mut [f64],
+    ) {
+        debug_assert_eq!(xs.len(), dst.len());
+        let wp = self.a + w;
+        let wm = self.a - w;
+        // every proto argument obeys |arg| ≤ max(|wp|, |wm|) + |x|, so
+        // |x| < margin keeps all four lookups inside the grid
+        let margin = self.grid.hi - wp.abs().max(wm.abs());
+        for (d, &x) in dst.iter_mut().zip(xs) {
+            if x.abs() < margin {
+                *d += self.eval(x, wp, wm);
+            } else {
+                *d += mult.mul(p, x, w);
+            }
+        }
+    }
+
+    /// Single interpolated multiply (test/diagnostic surface; the batch
+    /// path uses [`MulGrid::accumulate`]).
+    pub fn mul(&self, p: &dyn HProvider, mult: &Multiplier, x: f64, w: f64) -> f64 {
+        let mut acc = [0.0f64];
+        self.accumulate(p, mult, &[x], w, &mut acc);
+        acc[0]
+    }
+
+    /// Number of proto-shape samples backing the grid.
+    pub fn points(&self) -> usize {
+        self.grid.len()
+    }
+}
+
+/// Dense 1-D lookup grid for a hidden-activation cell's transfer.
+#[derive(Clone, Debug)]
+pub struct ActGrid {
+    grid: Grid1D,
+    act: Activation,
+    splines: usize,
+}
+
+impl ActGrid {
+    /// Sample `act` on the backend once over the configured post-gain range.
+    pub fn build(p: &dyn HProvider, act: Activation, splines: usize, cfg: &GridConfig) -> ActGrid {
+        let n = (2.0 * cfg.act_range * cfg.act_density as f64) as usize + 1;
+        let grid = Grid1D::sample(-cfg.act_range, cfg.act_range, n, |z| act.eval(p, z, splines));
+        ActGrid { grid, act, splines }
+    }
+
+    /// `v ← act(v · gain)` elementwise: interpolated where in range, the
+    /// exact cell otherwise (unbounded activations stay correct).
+    pub fn apply(&self, p: &dyn HProvider, vals: &mut [f64], gain: f64) {
+        for v in vals.iter_mut() {
+            let z = *v * gain;
+            *v = if self.grid.contains(z) {
+                self.grid.eval(z)
+            } else {
+                self.act.eval(p, z, self.splines)
+            };
+        }
+    }
+
+    /// Number of samples backing the grid.
+    pub fn points(&self) -> usize {
+        self.grid.len()
+    }
+}
+
+/// One corner's batched execution kernel: the calibrated multiplier and
+/// activation grids plus the backend they were sampled from (kept for
+/// exact out-of-range fallbacks).  Weight-independent — the same kernel
+/// serves every net sharing `(activation, splines, C)` on this corner.
+///
+/// `Send + Sync` (plain data + a `Send + Sync` backend), so the serving
+/// router can run many batches through one kernel concurrently.
+pub struct BatchKernel {
+    provider: Box<dyn HProvider + Send + Sync>,
+    mult: Multiplier,
+    act: Activation,
+    splines: usize,
+    c: f64,
+    mul_grid: MulGrid,
+    act_grid: ActGrid,
+}
+
+impl fmt::Debug for BatchKernel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("BatchKernel")
+            .field("backend", &self.provider.label())
+            .field("activation", &self.act)
+            .field("splines", &self.splines)
+            .field("c", &self.c)
+            .field("mul_grid_points", &self.mul_grid.points())
+            .field("act_grid_points", &self.act_grid.points())
+            .finish()
+    }
+}
+
+impl BatchKernel {
+    /// Calibrate the multiplier on `provider` and sample both grids.
+    pub fn new(
+        provider: Box<dyn HProvider + Send + Sync>,
+        act: Activation,
+        splines: usize,
+        c: f64,
+        cfg: &GridConfig,
+    ) -> BatchKernel {
+        let mult = Multiplier::calibrate(provider.as_ref(), splines, c);
+        let mul_grid = MulGrid::build(provider.as_ref(), &mult, cfg);
+        let act_grid = ActGrid::build(provider.as_ref(), act, splines, cfg);
+        BatchKernel {
+            provider,
+            mult,
+            act,
+            splines,
+            c,
+            mul_grid,
+            act_grid,
+        }
+    }
+
+    /// Kernel matching a trained net's `(activation, splines, C)` triple.
+    pub fn for_net(
+        provider: Box<dyn HProvider + Send + Sync>,
+        net: &TrainedNet,
+        cfg: &GridConfig,
+    ) -> Result<BatchKernel> {
+        let act = net.activation_kind()?;
+        Ok(BatchKernel::new(provider, act, net.splines, net.c, cfg))
+    }
+
+    /// The multiplier calibration the grids were sampled with (identical
+    /// to what the scalar path computes for the same backend).
+    pub fn multiplier(&self) -> &Multiplier {
+        &self.mult
+    }
+
+    pub fn activation(&self) -> Activation {
+        self.act
+    }
+
+    /// Evaluate eq. 40 over a whole batch.
+    ///
+    /// * `x` — row-major `[batch × sizes[0]]` feature buffer (at least
+    ///   `rows` rows; padded tail rows are never read),
+    /// * `rows` — live-row count (the `Batch::live` contract),
+    /// * `weights[li]` — row-major `[sizes[li] × sizes[li+1]]`,
+    ///
+    /// Returns row-major `[rows × sizes.last()]` logits.
+    pub fn forward_batch(
+        &self,
+        sizes: &[usize],
+        weights: &[Vec<f64>],
+        biases: &[Vec<f64>],
+        x: &[f32],
+        rows: usize,
+    ) -> Vec<f64> {
+        let nl = sizes.len() - 1;
+        let din = sizes[0];
+        debug_assert!(x.len() >= rows * din, "input batch shorter than rows");
+        let p = self.provider.as_ref();
+
+        // columnar layout: h[i·rows + r] holds input i of row r
+        let mut h = vec![0.0f64; din * rows];
+        for r in 0..rows {
+            for i in 0..din {
+                h[i * rows + r] = x[r * din + i] as f64;
+            }
+        }
+
+        for li in 0..nl {
+            let n_in = sizes[li];
+            let n_out = sizes[li + 1];
+            let w = &weights[li];
+            let mut out = vec![0.0f64; n_out * rows];
+            for (k, &b) in biases[li].iter().enumerate() {
+                for v in &mut out[k * rows..(k + 1) * rows] {
+                    *v = b;
+                }
+            }
+            // weights outermost, rows innermost: one weight's grid bases
+            // are hoisted across the whole batch, and both the input
+            // column and the accumulator column are contiguous
+            for i in 0..n_in {
+                let col = &h[i * rows..i * rows + rows];
+                for k in 0..n_out {
+                    let dst = &mut out[k * rows..(k + 1) * rows];
+                    self.mul_grid
+                        .accumulate(p, &self.mult, col, w[i * n_out + k], dst);
+                }
+            }
+            if li < nl - 1 {
+                self.act_grid.apply(p, &mut out, ACT_GAIN);
+            }
+            h = out;
+        }
+
+        // transpose back to the row-major contract of the runtime
+        let k_out = sizes[nl];
+        let mut logits = vec![0.0f64; rows * k_out];
+        for k in 0..k_out {
+            for r in 0..rows {
+                logits[r * k_out + k] = h[k * rows + r];
+            }
+        }
+        logits
+    }
+
+    /// [`BatchKernel::forward_batch`] with the shapes taken from a
+    /// [`TrainedNet`] (test / direct-evaluation convenience).
+    pub fn forward_net(&self, net: &TrainedNet, x: &[f32], rows: usize) -> Vec<f64> {
+        debug_assert_eq!(
+            net.splines, self.splines,
+            "kernel calibrated for a different spline count"
+        );
+        self.forward_batch(&net.sizes, &net.weights, &net.biases, x, rows)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cells::Algorithmic;
+    use crate::nn;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn grid1d_exact_on_linear_function() {
+        let g = Grid1D::sample(-2.0, 2.0, 41, |z| 3.0 * z - 0.5);
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let z = rng.uniform_in(-2.0, 2.0);
+            assert!((g.eval(z) - (3.0 * z - 0.5)).abs() < 1e-12, "z={z}");
+        }
+        // endpoints are in range and safe
+        assert!(g.contains(2.0) && g.contains(-2.0));
+        assert!((g.eval(2.0) - 5.5).abs() < 1e-12);
+        assert!((g.eval(-2.0) - (-6.5)).abs() < 1e-12);
+        assert_eq!(g.len(), 41);
+        assert!(!g.is_empty());
+    }
+
+    #[test]
+    fn mul_grid_matches_exact_multiplier() {
+        let p = Algorithmic::relu();
+        let mult = Multiplier::calibrate(&p, 3, 1.0);
+        let grid = MulGrid::build(&p, &mult, &GridConfig::default());
+        let mut rng = Rng::new(7);
+        let mut worst = 0.0f64;
+        for _ in 0..500 {
+            let x = rng.uniform_in(-1.5, 1.5);
+            let w = rng.uniform_in(-1.0, 1.0);
+            let got = grid.mul(&p, &mult, x, w);
+            let want = mult.mul(&p, x, w);
+            worst = worst.max((got - want).abs());
+        }
+        assert!(worst < 2e-3, "worst grid-vs-exact error {worst}");
+    }
+
+    #[test]
+    fn mul_grid_out_of_range_falls_back_exactly() {
+        let p = Algorithmic::relu();
+        let mult = Multiplier::calibrate(&p, 3, 1.0);
+        let grid = MulGrid::build(&p, &mult, &GridConfig::default());
+        // |x| far beyond the grid: the fallback is the exact cell, so the
+        // answers are bit-identical
+        for x in [25.0, -40.0, 1e3] {
+            let got = grid.mul(&p, &mult, x, 0.7);
+            let want = mult.mul(&p, x, 0.7);
+            assert_eq!(got, want, "x={x}");
+        }
+    }
+
+    #[test]
+    fn act_grid_matches_cell_and_falls_back() {
+        let p = Algorithmic::relu();
+        for act in [
+            Activation::Phi1,
+            Activation::Phi2,
+            Activation::Relu,
+            Activation::Softplus,
+        ] {
+            let g = ActGrid::build(&p, act, 3, &GridConfig::default());
+            let mut vals = vec![-1.5, -0.25, 0.0, 0.4, 1.9, 30.0, -30.0];
+            let expect: Vec<f64> = vals
+                .iter()
+                .map(|&v| act.eval(&p, v * ACT_GAIN, 3))
+                .collect();
+            g.apply(&p, &mut vals, ACT_GAIN);
+            for (got, want) in vals.iter().zip(&expect) {
+                assert!(
+                    (got - want).abs() < 1e-3,
+                    "{act:?}: got {got} want {want}"
+                );
+            }
+        }
+    }
+
+    fn toy_net() -> TrainedNet {
+        TrainedNet {
+            task: "toy".into(),
+            sizes: vec![2, 3, 2],
+            activation: "phi1".into(),
+            splines: 3,
+            c: 1.0,
+            acc_sw: 0.0,
+            acc_sac_algorithmic: 0.0,
+            weights: vec![
+                vec![0.8, -0.8, 0.5, -0.8, 0.8, 0.5],
+                vec![0.9, -0.9, 0.9, -0.9, -0.9, 0.9],
+            ],
+            biases: vec![vec![-0.2, -0.2, -0.6], vec![0.0, 0.0]],
+        }
+    }
+
+    #[test]
+    fn forward_net_matches_scalar_forward() {
+        let net = toy_net();
+        let p = Algorithmic::relu();
+        let mult = Multiplier::calibrate(&p, net.splines, net.c);
+        let kernel =
+            BatchKernel::for_net(Box::new(Algorithmic::relu()), &net, &GridConfig::default())
+                .unwrap();
+        let x: Vec<f32> = vec![0.5, -0.5, -0.25, 0.75, 0.1, 0.9, -0.8, -0.3];
+        let rows = 4;
+        let batched = kernel.forward_net(&net, &x, rows);
+        assert_eq!(batched.len(), rows * 2);
+        for r in 0..rows {
+            let golden = nn::forward(&net, &p, &mult, &x[r * 2..(r + 1) * 2]);
+            for (j, &want) in golden.iter().enumerate() {
+                let got = batched[r * 2 + j];
+                assert!(
+                    (got - want).abs() < 5e-3,
+                    "row {r} logit {j}: batched {got} vs scalar {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn forward_batch_skips_padded_rows() {
+        let net = toy_net();
+        let kernel =
+            BatchKernel::for_net(Box::new(Algorithmic::relu()), &net, &GridConfig::default())
+                .unwrap();
+        // 4-row buffer, 2 live rows: output covers only the live rows and
+        // equals the full-batch prefix
+        let x: Vec<f32> = vec![0.5, -0.5, -0.25, 0.75, 0.0, 0.0, 0.0, 0.0];
+        let full = kernel.forward_net(&net, &x, 4);
+        let live = kernel.forward_net(&net, &x, 2);
+        assert_eq!(live.len(), 4);
+        assert_eq!(&full[..4], &live[..]);
+        // zero rows is a clean no-op
+        assert!(kernel.forward_net(&net, &x, 0).is_empty());
+    }
+
+    #[test]
+    fn kernel_debug_is_informative() {
+        let net = toy_net();
+        let kernel =
+            BatchKernel::for_net(Box::new(Algorithmic::relu()), &net, &GridConfig::default())
+                .unwrap();
+        let s = format!("{kernel:?}");
+        assert!(s.contains("BatchKernel") && s.contains("algorithmic"), "{s}");
+        assert_eq!(kernel.activation(), Activation::Phi1);
+        assert!(kernel.multiplier().scale.is_finite());
+    }
+}

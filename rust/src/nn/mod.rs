@@ -3,10 +3,12 @@
 //! corner — the Table IV "H/W" columns — plus the Fig. 15 confusion matrix
 //! and operating-regime census.
 
+pub mod batch;
+
 use std::cell::RefCell;
 use std::path::Path;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::cells::activations as act;
 use crate::cells::multiplier::Multiplier;
@@ -20,11 +22,90 @@ use crate::util::stats::Confusion;
 /// range (mirrors python nets.sac_forward's `act_gain`).
 pub const ACT_GAIN: f64 = 4.0;
 
+/// Hidden-layer activation of the eq. 40 network.
+///
+/// Parsed (and thereby validated) when a net is loaded —
+/// [`TrainedNet::load`] rejects unknown names with an error instead of
+/// the hot loop panicking per element mid-inference.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Activation {
+    Phi1,
+    Phi2,
+    Relu,
+    Softplus,
+}
+
+impl Activation {
+    /// The python trainer's activation vocabulary.
+    pub const NAMES: [&'static str; 4] = ["phi1", "phi2", "relu", "softplus"];
+
+    /// Parse a trained net's activation name.
+    pub fn parse(name: &str) -> Result<Activation> {
+        match name {
+            "phi1" => Ok(Activation::Phi1),
+            "phi2" => Ok(Activation::Phi2),
+            "relu" => Ok(Activation::Relu),
+            "softplus" => Ok(Activation::Softplus),
+            other => Err(anyhow!(
+                "unknown activation {other:?} (expected one of {:?})",
+                Activation::NAMES
+            )),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Activation::Phi1 => "phi1",
+            Activation::Phi2 => "phi2",
+            Activation::Relu => "relu",
+            Activation::Softplus => "softplus",
+        }
+    }
+
+    /// The cell transfer applied between layers (the `− 1` on φ2 recenters
+    /// the sigmoid's `[0, 2K]` output around zero, mirroring
+    /// `nets.sac_forward`).
+    pub fn eval(self, p: &dyn HProvider, z: f64, splines: usize) -> f64 {
+        match self {
+            Activation::Phi1 => act::phi1_cell(p, z, 1.0, splines, 0.5),
+            Activation::Phi2 => act::phi2_cell(p, z, 1.0, splines, 0.5) - 1.0,
+            Activation::Relu => act::relu_cell(p, z, 0.05),
+            Activation::Softplus => act::softplus_cell(p, z, splines, 0.5),
+        }
+    }
+}
+
+/// The activation applied between layers, parsed once.  Single-layer
+/// nets never evaluate a hidden activation, so their activation string
+/// is not consulted (load-time validation in [`TrainedNet::load`] still
+/// rejects unknown names on disk input).
+fn hidden_activation(net: &TrainedNet) -> Activation {
+    if net.n_layers() <= 1 {
+        // never evaluated — any placeholder works
+        return Activation::Relu;
+    }
+    net.activation_kind()
+        .expect("TrainedNet activation is validated at load time")
+}
+
 /// Forward one input row through the S-AC network on a backend.
 pub fn forward(
     net: &TrainedNet,
     p: &dyn HProvider,
     mult: &Multiplier,
+    x: &[f32],
+) -> Vec<f64> {
+    forward_with(net, p, mult, hidden_activation(net), x)
+}
+
+/// Like [`forward`], with the activation pre-parsed so batch drivers
+/// ([`batch::BatchKernel`], [`evaluate`]) hoist the parse out of their
+/// loops.
+pub fn forward_with(
+    net: &TrainedNet,
+    p: &dyn HProvider,
+    mult: &Multiplier,
+    act: Activation,
     x: &[f32],
 ) -> Vec<f64> {
     let nl = net.n_layers();
@@ -43,14 +124,7 @@ pub fn forward(
         }
         if li < nl - 1 {
             for v in out.iter_mut() {
-                let z = *v * ACT_GAIN;
-                *v = match net.activation.as_str() {
-                    "phi1" => act::phi1_cell(p, z, 1.0, net.splines, 0.5),
-                    "phi2" => act::phi2_cell(p, z, 1.0, net.splines, 0.5) - 1.0,
-                    "relu" => act::relu_cell(p, z, 0.05),
-                    "softplus" => act::softplus_cell(p, z, net.splines, 0.5),
-                    other => panic!("unknown activation {other}"),
-                };
+                *v = act.eval(p, *v * ACT_GAIN, net.splines);
             }
         }
         h = out;
@@ -71,6 +145,7 @@ where
 {
     let n = ds.n.min(limit);
     let k = *net.sizes.last().unwrap();
+    let act = hidden_activation(net);
     // calibrate the multiplier once (operating point is a property of the
     // backend family, not of the sample)
     let cal = {
@@ -80,7 +155,7 @@ where
     let preds: Vec<usize> = pool::parallel_map(n, threads, |i| {
         let p = make_provider();
         let m = cal.clone();
-        let logits = forward(net, p.as_ref(), &m, ds.row(i));
+        let logits = forward_with(net, p.as_ref(), &m, act, ds.row(i));
         logits
             .iter()
             .enumerate()
@@ -235,6 +310,49 @@ mod tests {
         assert_eq!(c.total, 5);
         assert!(c.shifted >= 1 && c.shifted < 5);
         assert!((0.0..=1.0).contains(&c.fraction_shifted));
+    }
+
+    #[test]
+    fn activation_parse_roundtrip_and_rejection() {
+        for name in Activation::NAMES {
+            assert_eq!(Activation::parse(name).unwrap().name(), name);
+        }
+        let err = Activation::parse("gelu").unwrap_err();
+        assert!(err.to_string().contains("gelu"), "{err}");
+    }
+
+    #[test]
+    fn single_layer_net_ignores_activation_string() {
+        // no hidden layer → the activation is never evaluated; a
+        // hand-built placeholder name must not panic (load-time
+        // validation still rejects it on disk input)
+        let net = TrainedNet {
+            task: "lin".into(),
+            sizes: vec![2, 2],
+            activation: "linear".into(),
+            splines: 1,
+            c: 1.0,
+            acc_sw: 0.0,
+            acc_sac_algorithmic: 0.0,
+            weights: vec![vec![1.0, 0.0, 0.0, 1.0]],
+            biases: vec![vec![0.0, 0.0]],
+        };
+        let p = Algorithmic::relu();
+        let m = Multiplier::calibrate(&p, 1, 1.0);
+        let y = forward(&net, &p, &m, &[0.3, -0.2]);
+        assert_eq!(y.len(), 2);
+        assert!(y.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn forward_with_matches_forward() {
+        let net = toy_net();
+        let p = Algorithmic::relu();
+        let m = Multiplier::calibrate(&p, 3, 1.0);
+        let act = net.activation_kind().unwrap();
+        let a = forward(&net, &p, &m, &[0.3, -0.6]);
+        let b = forward_with(&net, &p, &m, act, &[0.3, -0.6]);
+        assert_eq!(a, b);
     }
 
     #[test]

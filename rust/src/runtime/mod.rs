@@ -23,7 +23,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{anyhow, Context, Result};
 
 pub use artifact::{EntrySpec, Manifest, ParamSpec};
-pub use native::{Graph, MlpSpec, NativeExec};
+pub use native::{ExecMode, Graph, MlpSpec, NativeExec};
 
 use crate::data::TrainedNet;
 use crate::util::json::Json;
@@ -59,15 +59,21 @@ impl Runtime {
         "native-cpu".to_string()
     }
 
-    /// Build the executor for one manifest entry.
+    /// Build the executor for one manifest entry (scalar mode).
     pub fn load(&self, entry: &str) -> Result<Executable> {
+        self.load_with_mode(entry, ExecMode::Scalar)
+    }
+
+    /// Build the executor for one manifest entry in the given execution
+    /// mode (`--engine` on the CLI).  GMP-kernel entries ignore the mode.
+    pub fn load_with_mode(&self, entry: &str, mode: ExecMode) -> Result<Executable> {
         let spec = self
             .manifest
             .entries
             .get(entry)
             .ok_or_else(|| anyhow!("no artifact entry {entry:?} in manifest"))?
             .clone();
-        let exec = exec_from_spec(entry, &spec)?;
+        let exec = exec_from_spec(entry, &spec, mode)?;
         Ok(Executable {
             name: entry.to_string(),
             spec,
@@ -81,7 +87,7 @@ impl Runtime {
 /// Cross-validates the meta `sizes` against every parameter shape so an
 /// inconsistent manifest (version skew with `aot.py`, hand edits) fails
 /// here with a clean error instead of panicking inside a worker later.
-fn exec_from_spec(name: &str, spec: &EntrySpec) -> Result<NativeExec> {
+fn exec_from_spec(name: &str, spec: &EntrySpec, mode: ExecMode) -> Result<NativeExec> {
     if let Ok(sizes_j) = spec.meta.get("sizes") {
         // S-AC MLP graph: params are w1,b1,…,wL,bL,x (see aot.py).
         let sizes: Vec<usize> = sizes_j
@@ -130,13 +136,16 @@ fn exec_from_spec(name: &str, spec: &EntrySpec) -> Result<NativeExec> {
                 sizes[0]
             ));
         }
-        NativeExec::mlp(MlpSpec {
-            sizes,
-            splines: spec.meta.get("splines")?.as_usize()?,
-            c: spec.meta.get("c")?.as_f64()?,
-            activation: spec.meta.get("activation")?.as_str()?.to_string(),
-            batch: xspec.shape[0],
-        })
+        NativeExec::mlp_with_mode(
+            MlpSpec {
+                sizes,
+                splines: spec.meta.get("splines")?.as_usize()?,
+                c: spec.meta.get("c")?.as_f64()?,
+                activation: spec.meta.get("activation")?.as_str()?.to_string(),
+                batch: xspec.shape[0],
+            },
+            mode,
+        )
     } else if spec.params.len() == 1 && spec.params[0].shape.len() == 2 {
         // Batched GMP kernel: a single [B × M] input and a `c` constant.
         let c = spec.meta.get("c")?.as_f64()?;
@@ -153,8 +162,17 @@ fn exec_from_spec(name: &str, spec: &EntrySpec) -> Result<NativeExec> {
 impl Executable {
     /// Build an MLP executable directly from trained weights, without any
     /// artifact directory — the in-memory path used by the router tests,
-    /// `bench-serve`, and synthetic workloads.
+    /// `bench-serve`, and synthetic workloads (scalar mode).
     pub fn native_mlp(net: &TrainedNet, batch: usize) -> Result<Executable> {
+        Executable::native_mlp_with_mode(net, batch, ExecMode::Scalar)
+    }
+
+    /// [`Executable::native_mlp`] in the given execution mode.
+    pub fn native_mlp_with_mode(
+        net: &TrainedNet,
+        batch: usize,
+        mode: ExecMode,
+    ) -> Result<Executable> {
         let nl = net.n_layers();
         let mut params = Vec::with_capacity(2 * nl + 1);
         for li in 0..nl {
@@ -188,13 +206,16 @@ impl Executable {
             ("c", Json::Num(net.c)),
             ("activation", Json::Str(net.activation.clone())),
         ]);
-        let exec = NativeExec::mlp(MlpSpec {
-            sizes: net.sizes.clone(),
-            splines: net.splines,
-            c: net.c,
-            activation: net.activation.clone(),
-            batch,
-        })?;
+        let exec = NativeExec::mlp_with_mode(
+            MlpSpec {
+                sizes: net.sizes.clone(),
+                splines: net.splines,
+                c: net.c,
+                activation: net.activation.clone(),
+                batch,
+            },
+            mode,
+        )?;
         Ok(Executable {
             name: format!("{}_mlp", net.task),
             spec: EntrySpec {
@@ -212,6 +233,11 @@ impl Executable {
     pub fn with_par_threads(mut self, n: usize) -> Executable {
         self.exec = self.exec.with_par_threads(n);
         self
+    }
+
+    /// Which execution strategy this executable uses.
+    pub fn mode(&self) -> ExecMode {
+        self.exec.mode()
     }
 
     /// Execute with f32 parameter buffers in manifest order.  Each buffer's
@@ -368,6 +394,18 @@ mod tests {
         let rt = Runtime::new(&dir).unwrap();
         let err = rt.load("skewed_mlp").unwrap_err();
         assert!(err.to_string().contains("w1"), "unexpected error: {err:#}");
+    }
+
+    #[test]
+    fn native_mlp_mode_is_threaded_through() {
+        let scalar = Executable::native_mlp(&toy_net(), 4).unwrap();
+        assert_eq!(scalar.mode(), ExecMode::Scalar);
+        let batched =
+            Executable::native_mlp_with_mode(&toy_net(), 4, ExecMode::Batched).unwrap();
+        assert_eq!(batched.mode(), ExecMode::Batched);
+        // same manifest-facing spec either way
+        assert_eq!(batched.spec.params.len(), scalar.spec.params.len());
+        assert_eq!(batched.output_len(), scalar.output_len());
     }
 
     #[test]

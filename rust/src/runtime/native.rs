@@ -20,14 +20,51 @@
 //! The executor is plain data (`Send + Sync`), so the serving router can run
 //! batches of the same task concurrently on many workers without locking.
 
+use std::sync::Arc;
+
 use anyhow::{anyhow, bail, Result};
 
 use crate::cells::multiplier::Multiplier;
 use crate::cells::Algorithmic;
 use crate::data::TrainedNet;
 use crate::nn;
+use crate::nn::batch::{BatchKernel, GridConfig};
+use crate::nn::Activation;
 use crate::sac::gmp::{solve_bisect, Shape, GMP_ITERS};
 use crate::util::pool;
+
+/// Which execution strategy an MLP executor uses on the serving path.
+///
+/// * `Scalar`  — the per-row golden path: `nn::forward` with exact
+///   four-proto-unit GMP solves per MAC.
+/// * `Batched` — the columnar engine (`nn::batch`): per-corner dense
+///   lookup grids evaluated over the whole batch at once, exact-cell
+///   fallback outside the grids.  ≥ 5× faster on serving batches
+///   (`benches/hotpath.rs`); equivalence is pinned in
+///   `tests/integration.rs`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    Scalar,
+    Batched,
+}
+
+impl ExecMode {
+    /// Parse a `--engine` CLI value.
+    pub fn parse(s: &str) -> Result<ExecMode> {
+        match s {
+            "scalar" => Ok(ExecMode::Scalar),
+            "batched" => Ok(ExecMode::Batched),
+            other => bail!("unknown engine mode {other:?} (expected \"scalar\" or \"batched\")"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ExecMode::Scalar => "scalar",
+            ExecMode::Batched => "batched",
+        }
+    }
+}
 
 /// Shape/metadata of an S-AC MLP inference graph (mirror of the manifest
 /// entry written by `aot.py::export_task_mlp`).
@@ -62,10 +99,18 @@ pub struct NativeExec {
     /// (a property of (S, C) only), so it is computed once at load time
     /// rather than per batch.
     mult: Option<Multiplier>,
+    /// Hidden activation, parsed (and thereby validated) once at load
+    /// time rather than per batch.
+    act: Option<Activation>,
+    /// Batched columnar kernel (grids sampled once at load time);
+    /// `None` = scalar per-row execution.  `Arc` so cloned executors
+    /// (router lanes) share the grids.
+    kernel: Option<Arc<BatchKernel>>,
     /// Row-parallelism inside one batch.  Defaults to 1: the serving
     /// router already parallelizes across batches/tasks, and nesting
     /// thread pools would oversubscribe the machine.  The single-task
-    /// CLI path raises this.
+    /// CLI path raises this.  The batched kernel ignores it (its rows
+    /// are vectorized in one pass).
     pub par_threads: usize,
 }
 
@@ -75,25 +120,52 @@ impl NativeExec {
         NativeExec {
             graph: Graph::Gmp { b, m, c },
             mult: None,
+            act: None,
+            kernel: None,
             par_threads: 1,
         }
     }
 
-    /// Executor for an S-AC MLP graph; calibrates the multiplier once.
+    /// Executor for an S-AC MLP graph; calibrates the multiplier once
+    /// (scalar mode — see [`NativeExec::mlp_with_mode`]).
     pub fn mlp(spec: MlpSpec) -> Result<NativeExec> {
+        NativeExec::mlp_with_mode(spec, ExecMode::Scalar)
+    }
+
+    /// Executor for an S-AC MLP graph in the given execution mode.
+    /// `Batched` additionally samples the per-corner lookup grids once.
+    pub fn mlp_with_mode(spec: MlpSpec, mode: ExecMode) -> Result<NativeExec> {
         if spec.sizes.len() < 2 {
             bail!("mlp needs at least [in, out] sizes, got {:?}", spec.sizes);
         }
-        match spec.activation.as_str() {
-            "phi1" | "phi2" | "relu" | "softplus" => {}
-            other => bail!("unknown activation {other:?}"),
-        }
+        let act = Activation::parse(&spec.activation)?;
         let mult = Multiplier::calibrate(&Algorithmic::relu(), spec.splines, spec.c);
+        let kernel = match mode {
+            ExecMode::Scalar => None,
+            ExecMode::Batched => Some(Arc::new(BatchKernel::new(
+                Box::new(Algorithmic::relu()),
+                act,
+                spec.splines,
+                spec.c,
+                &GridConfig::default(),
+            ))),
+        };
         Ok(NativeExec {
             graph: Graph::Mlp(spec),
             mult: Some(mult),
+            act: Some(act),
+            kernel,
             par_threads: 1,
         })
+    }
+
+    /// Which execution strategy this executor uses.
+    pub fn mode(&self) -> ExecMode {
+        if self.kernel.is_some() {
+            ExecMode::Batched
+        } else {
+            ExecMode::Scalar
+        }
     }
 
     /// Row-parallel variant (for the single-task CLI/bench path).
@@ -152,16 +224,29 @@ impl NativeExec {
 
     fn run_mlp(&self, spec: &MlpSpec, params: &[&[f32]], rows: usize) -> Result<Vec<f32>> {
         let nl = spec.sizes.len() - 1;
-        // Materialize the weights into the TrainedNet layout nn::forward
-        // expects.  Weights arrive as f32 parameter buffers per the AOT
+        // Materialize the weights into the f64 layout both engines
+        // expect.  Weights arrive as f32 parameter buffers per the AOT
         // contract (the graph treats them as inputs, not constants), so
         // this f32→f64 conversion recurs per batch by design; its cost is
-        // ~3 orders of magnitude below the GMP solves it feeds.
-        let mut weights = Vec::with_capacity(nl);
-        let mut biases = Vec::with_capacity(nl);
+        // ~3 orders of magnitude below the MAC work it feeds.
+        let mut weights: Vec<Vec<f64>> = Vec::with_capacity(nl);
+        let mut biases: Vec<Vec<f64>> = Vec::with_capacity(nl);
         for li in 0..nl {
             weights.push(params[2 * li].iter().map(|&v| v as f64).collect());
             biases.push(params[2 * li + 1].iter().map(|&v| v as f64).collect());
+        }
+        let x = params[2 * nl];
+        let din = spec.sizes[0];
+        let k = *spec.sizes.last().unwrap();
+        if x.len() != spec.batch * din {
+            bail!("mlp input length {} != {}x{din}", x.len(), spec.batch);
+        }
+        if let Some(kernel) = &self.kernel {
+            // Batched columnar path: whole-batch evaluation through the
+            // precomputed grids (rows are vectorized in one pass, so
+            // par_threads does not apply here).
+            let out = kernel.forward_batch(&spec.sizes, &weights, &biases, x, rows);
+            return Ok(out.into_iter().map(|v| v as f32).collect());
         }
         let net = TrainedNet {
             task: String::new(),
@@ -174,19 +259,16 @@ impl NativeExec {
             weights,
             biases,
         };
-        let x = params[2 * nl];
-        let din = spec.sizes[0];
-        let k = *spec.sizes.last().unwrap();
-        if x.len() != spec.batch * din {
-            bail!("mlp input length {} != {}x{din}", x.len(), spec.batch);
-        }
+        let act = self
+            .act
+            .ok_or_else(|| anyhow!("mlp executor missing activation"))?;
         let mult = self
             .mult
             .as_ref()
             .ok_or_else(|| anyhow!("mlp executor missing multiplier calibration"))?;
         let provider = Algorithmic::relu();
         let row_logits = |r: usize| -> Vec<f64> {
-            nn::forward(&net, &provider, mult, &x[r * din..(r + 1) * din])
+            nn::forward_with(&net, &provider, mult, act, &x[r * din..(r + 1) * din])
         };
         let row_results: Vec<Vec<f64>> = if self.par_threads <= 1 {
             (0..rows).map(row_logits).collect()
@@ -314,6 +396,51 @@ mod tests {
             activation: "gelu".into(),
             batch: 1,
         };
-        assert!(NativeExec::mlp(spec).is_err());
+        assert!(NativeExec::mlp(spec.clone()).is_err());
+        assert!(NativeExec::mlp_with_mode(spec, ExecMode::Batched).is_err());
+    }
+
+    #[test]
+    fn exec_mode_parse_roundtrip() {
+        assert_eq!(ExecMode::parse("scalar").unwrap(), ExecMode::Scalar);
+        assert_eq!(ExecMode::parse("batched").unwrap(), ExecMode::Batched);
+        assert!(ExecMode::parse("warp").is_err());
+        assert_eq!(ExecMode::Batched.name(), "batched");
+    }
+
+    #[test]
+    fn batched_mlp_matches_scalar_mlp() {
+        let spec = MlpSpec {
+            sizes: vec![2, 3, 2],
+            splines: 3,
+            c: 1.0,
+            activation: "phi1".into(),
+            batch: 4,
+        };
+        let scalar = NativeExec::mlp_with_mode(spec.clone(), ExecMode::Scalar).unwrap();
+        let batched = NativeExec::mlp_with_mode(spec, ExecMode::Batched).unwrap();
+        assert_eq!(scalar.mode(), ExecMode::Scalar);
+        assert_eq!(batched.mode(), ExecMode::Batched);
+        let w1: Vec<f32> = vec![0.5, -0.25, 0.75, -0.5, 0.25, 0.5];
+        let b1: Vec<f32> = vec![-0.125, 0.0, 0.25];
+        let w2: Vec<f32> = vec![0.5, -0.5, 0.25, -0.25, -0.75, 0.75];
+        let b2: Vec<f32> = vec![0.0, 0.125];
+        let x: Vec<f32> = vec![0.5, -0.5, -0.25, 0.75, 0.1, 0.9, -0.8, -0.3];
+        let bufs: Vec<&[f32]> = vec![&w1, &b1, &w2, &b2, &x];
+        let a = scalar.run(&bufs).unwrap();
+        let b = batched.run(&bufs).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (j, (&sv, &bv)) in a.iter().zip(&b).enumerate() {
+            assert!(
+                (sv - bv).abs() < 1e-2,
+                "logit {j}: scalar {sv} vs batched {bv}"
+            );
+        }
+        // live-row restriction behaves identically in both modes
+        let a2 = scalar.run_rows(&bufs, 2).unwrap();
+        let b2m = batched.run_rows(&bufs, 2).unwrap();
+        assert_eq!(a2.len(), 4);
+        assert_eq!(b2m.len(), 4);
+        assert_eq!(&b[..4], &b2m[..]);
     }
 }

@@ -300,6 +300,109 @@ mod tests {
     }
 
     #[test]
+    fn sac_h_monotone_in_each_input_any_shape() {
+        // raising any one input must never lower the unit output,
+        // whichever shape the device presents
+        check(9, 200, |g| -> Result<(), String> {
+            let m = g.usize_in(2, 10);
+            let mut x = g.vec_f64(m, -2.0, 2.0);
+            let c = g.f64_in(0.1, 4.0);
+            let shape = if g.bool() {
+                Shape::Relu
+            } else {
+                Shape::Softplus {
+                    width: g.f64_in(0.02, 0.5),
+                }
+            };
+            let j = g.usize_in(0, m - 1);
+            let h0 = sac_h(&x, c, shape);
+            x[j] += g.f64_in(0.05, 1.0);
+            let h1 = sac_h(&x, c, shape);
+            prop_assert!(h1 >= h0 - 1e-6, "h0={h0} h1={h1} shape={shape:?}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn scale_invariance_both_shapes() {
+        // the constraint Σ g(x−h)=C is 1-homogeneous: h(λx; λC) = λ·h(x; C)
+        // (for softplus the knee width scales with λ too:
+        //  λ·g_w(z) = g_{λw}(λz))
+        check(10, 200, |g| -> Result<(), String> {
+            let m = g.usize_in(1, 10);
+            let x = g.vec_f64(m, -2.0, 2.0);
+            let c = g.f64_in(0.2, 3.0);
+            let lam = g.f64_in(0.25, 4.0);
+            let xs: Vec<f64> = x.iter().map(|v| v * lam).collect();
+            let h0 = solve_exact(&x, c);
+            let h1 = solve_exact(&xs, c * lam);
+            prop_assert!(
+                (h1 - lam * h0).abs() < 1e-9 * lam.max(1.0),
+                "relu: h0={h0} h1={h1} lam={lam}"
+            );
+            let w = g.f64_in(0.02, 0.4);
+            let s0 = solve_soft_newton(&x, c, w);
+            let s1 = solve_soft_newton(&xs, c * lam, w * lam);
+            prop_assert!(
+                (s1 - lam * s0).abs() < 1e-6 * lam.max(1.0),
+                "softplus: s0={s0} s1={s1} lam={lam} w={w}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn translation_invariance_soft_newton() {
+        // shift invariance for the soft shape's production solver
+        check(13, 150, |g| -> Result<(), String> {
+            let m = g.usize_in(1, 10);
+            let x = g.vec_f64(m, -2.0, 2.0);
+            let c = g.f64_in(0.2, 3.0);
+            let w = g.f64_in(0.02, 0.4);
+            let d = g.f64_in(-2.0, 2.0);
+            let h0 = solve_soft_newton(&x, c, w);
+            let xs: Vec<f64> = x.iter().map(|v| v + d).collect();
+            let h1 = solve_soft_newton(&xs, c, w);
+            prop_assert!((h1 - h0 - d).abs() < 1e-6, "h0={h0} h1={h1} d={d}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn spline_expanded_solvers_agree_across_s() {
+        // randomized spline counts: the Appendix-A expanded proto problem
+        // must solve identically under the exact and bisection solvers,
+        // and its output must stay monotone in z
+        check(12, 150, |g| -> Result<(), String> {
+            let s = g.usize_in(1, 5);
+            let c = g.f64_in(0.3, 2.0);
+            let z = g.f64_in(-2.5, 2.5);
+            let (offs, cp) = crate::sac::splines::schedule(s, c);
+            let expand = |z: f64| -> Vec<f64> {
+                let mut x = Vec::with_capacity(2 * s);
+                for &o in &offs {
+                    x.push(z + o);
+                }
+                for &o in &offs {
+                    x.push(o);
+                }
+                x
+            };
+            let x = expand(z);
+            let he = solve_exact(&x, cp);
+            let hb = solve_bisect(&x, cp, Shape::Relu, GMP_ITERS);
+            prop_assert!((he - hb).abs() < 1e-9, "s={s} he={he} hb={hb}");
+            let dz = g.f64_in(0.01, 0.5);
+            let x2 = expand(z + dz);
+            prop_assert!(
+                sac_h(&x2, cp, Shape::Relu) >= sac_h(&x, cp, Shape::Relu) - 1e-12,
+                "s={s} z={z} dz={dz}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
     fn softplus_approaches_relu_as_width_shrinks() {
         let x = [0.3, -0.7, 1.4, 0.0];
         let c = 1.0;

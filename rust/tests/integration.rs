@@ -13,10 +13,16 @@ use std::time::Duration;
 
 use sac::cells::multiplier::Multiplier;
 use sac::cells::{Algorithmic, HProvider};
-use sac::coordinator::{Engine, InferenceServer, RequestId, Router, RouterConfig};
+use sac::coordinator::{
+    synthetic_engine, Engine, InferenceServer, RequestId, Router, RouterConfig,
+};
 use sac::data::{Dataset, TrainedNet};
-use sac::runtime::{Executable, Runtime};
+use sac::nn::batch::{BatchKernel, GridConfig};
+use sac::pdk::regime::Regime;
+use sac::pdk::{CMOS180, FINFET7};
+use sac::runtime::{Executable, ExecMode, Runtime};
 use sac::sac::gmp::{solve_bisect, Shape, GMP_ITERS};
+use sac::sac::TableModel;
 use sac::util::json;
 
 /// Artifact directory, or `None` (with an explanatory message) when the
@@ -193,6 +199,11 @@ fn provider_backends_share_label_contract() {
 /// A hand-built net with f32-exact weights so the engine's f32 weight
 /// buffers and the f64 golden path compute identical numbers.
 fn toy_net(task: &str, seed: u64, sizes: &[usize]) -> TrainedNet {
+    toy_net_act(task, seed, sizes, "phi1")
+}
+
+/// [`toy_net`] with an explicit hidden activation.
+fn toy_net_act(task: &str, seed: u64, sizes: &[usize], activation: &str) -> TrainedNet {
     let mut rng = sac::util::rng::Rng::new(seed);
     let nl = sizes.len() - 1;
     let mut weights = Vec::with_capacity(nl);
@@ -206,7 +217,7 @@ fn toy_net(task: &str, seed: u64, sizes: &[usize]) -> TrainedNet {
     TrainedNet {
         task: task.to_string(),
         sizes: sizes.to_vec(),
-        activation: "phi1".into(),
+        activation: activation.to_string(),
         splines: 3,
         c: 1.0,
         acc_sw: 0.0,
@@ -346,4 +357,308 @@ fn router_deadline_flush_answers_tail_requests() {
         .expect("deadline flush delivered the tail request");
     assert_eq!(r.id, req.id);
     assert_eq!(r.logits.len(), 2);
+}
+
+// ---------------------------------------------------------------------------
+// Batched columnar engine: equivalence with the scalar path
+// (artifact-free — always runs)
+// ---------------------------------------------------------------------------
+
+/// Stated logit tolerance of the batched columnar engine against the
+/// scalar per-row path at default grid resolution (DESIGN.md §7 error
+/// budget: interpolation is exact on the piecewise-linear ReLU-shape
+/// tier away from kink cells, so observed deviations sit well below
+/// this bound).
+const BATCH_TOL: f64 = 1e-2;
+
+/// The (node, regime, temperature) corners the table tier exercises.
+fn table_corners() -> Vec<TableModel> {
+    [
+        (&CMOS180, Regime::WeakInversion, 27.0),
+        (&CMOS180, Regime::ModerateInversion, 27.0),
+        (&FINFET7, Regime::WeakInversion, 27.0),
+        (&FINFET7, Regime::ModerateInversion, 27.0),
+        (&CMOS180, Regime::WeakInversion, 85.0),
+    ]
+    .into_iter()
+    .map(|(node, regime, t_c)| TableModel::calibrate(node, regime, t_c))
+    .collect()
+}
+
+/// For random toy nets across every (node, regime, temperature) corner,
+/// the batched engine's logits must match the scalar `nn::forward` path
+/// within `BATCH_TOL` — the ISSUE-2 equivalence acceptance.
+#[test]
+fn batched_engine_matches_scalar_forward_across_corners() {
+    let nets = [
+        toy_net_act("eqa", 41, &[3, 5, 2], "phi1"),
+        toy_net_act("eqb", 42, &[2, 4, 3], "softplus"),
+        toy_net_act("eqc", 43, &[4, 6, 2], "relu"),
+    ];
+    let tables = table_corners();
+    let rows = 12;
+    for ci in 0..=tables.len() {
+        for net in &nets {
+            let provider: Box<dyn HProvider + Send + Sync> = if ci == 0 {
+                Box::new(Algorithmic::relu())
+            } else {
+                Box::new(tables[ci - 1].clone())
+            };
+            let label = provider.label();
+            let kernel = BatchKernel::for_net(provider, net, &GridConfig::default()).unwrap();
+            // golden scalar path with the *same* backend + calibration
+            let scalar_p: Box<dyn HProvider> = if ci == 0 {
+                Box::new(Algorithmic::relu())
+            } else {
+                Box::new(tables[ci - 1].clone())
+            };
+            let mult = Multiplier::calibrate(scalar_p.as_ref(), net.splines, net.c);
+            let din = net.sizes[0];
+            let k = *net.sizes.last().unwrap();
+            let x: Vec<f32> = (0..rows)
+                .flat_map(|r| toy_features(din, ci, r))
+                .collect();
+            let batched = kernel.forward_net(net, &x, rows);
+            assert_eq!(batched.len(), rows * k);
+            for r in 0..rows {
+                let golden =
+                    sac::nn::forward(net, scalar_p.as_ref(), &mult, &x[r * din..(r + 1) * din]);
+                for (j, &want) in golden.iter().enumerate() {
+                    let got = batched[r * k + j];
+                    assert!(
+                        (got - want).abs() < BATCH_TOL,
+                        "corner {label} net {} row {r} logit {j}: \
+                         batched {got} vs scalar {want}",
+                        net.task
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The golden serving test on the batched engine: the full concurrent
+/// router path with batched executables must reproduce the scalar golden
+/// forward's logits within `BATCH_TOL` and its predicted labels exactly
+/// (rows whose golden top-2 margin is inside the stated tolerance band
+/// cannot meaningfully pin an argmax and are excluded; they must stay a
+/// small minority).
+#[test]
+fn batched_router_serving_matches_scalar_golden() {
+    let nets = [
+        toy_net("balpha", 21, &[3, 5, 2]),
+        toy_net("bbeta", 22, &[2, 4, 3]),
+    ];
+    let mk_engine = |net: &TrainedNet, batch: usize| -> Engine {
+        let exe = Executable::native_mlp_with_mode(net, batch, ExecMode::Batched).unwrap();
+        Engine::from_parts(net.clone(), exe).unwrap()
+    };
+    let router = Router::new(
+        RouterConfig {
+            workers: 4,
+            max_wait: Duration::from_millis(2),
+            flush_tick: Duration::from_micros(200),
+        },
+        vec![
+            ("balpha".into(), mk_engine(&nets[0], 4)),
+            ("bbeta".into(), mk_engine(&nets[1], 3)),
+        ],
+    );
+
+    let n_submitters = 4;
+    let per_submitter = 20;
+    let submitted: Vec<Vec<(RequestId, usize, Vec<f32>)>> =
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..n_submitters)
+                .map(|s| {
+                    let router = &router;
+                    scope.spawn(move || {
+                        (0..per_submitter)
+                            .map(|k| {
+                                let task = (s + k) % 2;
+                                let dim = if task == 0 { 3 } else { 2 };
+                                let feats = toy_features(dim, s, k);
+                                let req = router.submit(task, feats.clone()).unwrap();
+                                (req, task, feats)
+                            })
+                            .collect::<Vec<_>>()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+
+    router
+        .drain(Duration::from_secs(30))
+        .expect("router drained cleanly");
+
+    let provider = Algorithmic::relu();
+    let mults: Vec<Multiplier> = nets
+        .iter()
+        .map(|n| Multiplier::calibrate(&provider, n.splines, n.c))
+        .collect();
+
+    let total = n_submitters * per_submitter;
+    let mut checked = 0usize;
+    let mut margin_skipped = 0usize;
+    for (req, task, feats) in submitted.into_iter().flatten() {
+        let r = router
+            .try_take(req)
+            .expect("no engine failure")
+            .unwrap_or_else(|| panic!("request {req:?} never answered"));
+        let golden = sac::nn::forward(&nets[task], &provider, &mults[task], &feats);
+        assert_eq!(r.logits.len(), golden.len());
+        for (j, (&got, &want)) in r.logits.iter().zip(&golden).enumerate() {
+            assert!(
+                (got as f64 - want).abs() < BATCH_TOL,
+                "{req:?} logit {j}: batched {got} vs golden {want}"
+            );
+        }
+        // label check: argmax is only well-defined outside the tolerance
+        // band around a tie
+        let mut sorted = golden.clone();
+        sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let margin = sorted[0] - sorted[1];
+        if margin > 2.0 * BATCH_TOL {
+            let golden_pred = golden
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(j, _)| j)
+                .unwrap();
+            assert_eq!(
+                r.pred, golden_pred,
+                "{req:?}: batched label diverged from scalar golden"
+            );
+            checked += 1;
+        } else {
+            margin_skipped += 1;
+        }
+    }
+    assert_eq!(checked + margin_skipped, total);
+    assert!(
+        margin_skipped * 5 <= total,
+        "too many near-tie rows ({margin_skipped}/{total}) for the label \
+         check to be meaningful"
+    );
+    assert!(router.failures().is_empty(), "{:?}", router.failures());
+}
+
+// ---------------------------------------------------------------------------
+// Router edge cases (artifact-free — always runs)
+// ---------------------------------------------------------------------------
+
+/// Submitting after shutdown is a clean error; work accepted before
+/// shutdown still completes and remains takeable.
+#[test]
+fn router_submit_after_shutdown_is_rejected() {
+    let net = toy_net("shut", 51, &[2, 3, 2]);
+    let router = Router::new(
+        RouterConfig {
+            workers: 2,
+            max_wait: Duration::from_millis(2),
+            flush_tick: Duration::from_micros(200),
+        },
+        vec![("shut".into(), toy_engine(&net, 8))],
+    );
+    let req = router.submit(0, vec![0.5, -0.25]).unwrap();
+    router.shutdown();
+    assert!(router.is_shut_down());
+    let err = router.submit(0, vec![0.1, 0.1]).unwrap_err();
+    assert!(err.to_string().contains("shut down"), "{err}");
+    // the accepted request is still served (manual flush substitutes for
+    // the exited deadline flusher)
+    router.flush();
+    router.drain(Duration::from_secs(10)).unwrap();
+    let r = router.try_take(req).unwrap().expect("accepted work answered");
+    assert_eq!(r.id, req.id);
+    assert_eq!(router.aggregate_metrics().total_requests(), 1);
+}
+
+/// Flush / drain with nothing pending are clean no-ops, and flush is
+/// idempotent around real work.
+#[test]
+fn router_zero_pending_flush_is_noop() {
+    let net = toy_net("idle", 52, &[2, 3, 2]);
+    let router = Router::new(
+        RouterConfig {
+            workers: 1,
+            max_wait: Duration::from_millis(2),
+            flush_tick: Duration::from_micros(200),
+        },
+        vec![("idle".into(), toy_engine(&net, 4))],
+    );
+    router.flush();
+    router.flush();
+    router.drain(Duration::from_secs(2)).unwrap();
+    assert_eq!(router.pending(), 0);
+    assert_eq!(router.ready(), 0);
+    assert_eq!(router.aggregate_metrics().total_requests(), 0);
+    assert_eq!(router.aggregate_metrics().total_batches, 0);
+    // and a double flush around a real request changes nothing
+    let req = router.submit(0, vec![0.2, 0.4]).unwrap();
+    router.flush();
+    router.flush();
+    router.drain(Duration::from_secs(5)).unwrap();
+    assert!(router.try_take(req).unwrap().is_some());
+    assert_eq!(router.aggregate_metrics().total_requests(), 1);
+}
+
+/// Per-task metrics must aggregate exactly under concurrent submitters:
+/// each lane counts precisely its own requests, the aggregate is their
+/// sum, and batch counts are consistent.
+#[test]
+fn router_per_task_metrics_aggregate_under_concurrency() {
+    let dims = [2usize, 3, 4];
+    let engines: Vec<(String, Engine)> = dims
+        .iter()
+        .enumerate()
+        .map(|(t, &d)| {
+            (
+                format!("m{t}"),
+                synthetic_engine(70 + t as u64, &[d, 4, 2], 4).unwrap(),
+            )
+        })
+        .collect();
+    let router = Router::new(
+        RouterConfig {
+            workers: 4,
+            max_wait: Duration::from_millis(2),
+            flush_tick: Duration::from_micros(200),
+        },
+        engines,
+    );
+    let n_threads = 6;
+    let per_thread = 30;
+    std::thread::scope(|scope| {
+        for t in 0..n_threads {
+            let router = &router;
+            let dims = &dims;
+            scope.spawn(move || {
+                let task = t % dims.len();
+                for k in 0..per_thread {
+                    let feats = toy_features(dims[task], t, k);
+                    router.submit(task, feats).unwrap();
+                }
+            });
+        }
+    });
+    router.drain(Duration::from_secs(20)).unwrap();
+    // 6 threads over 3 tasks → exactly 2 threads (60 requests) per task
+    let per_task = 2 * per_thread;
+    let mut batch_sum = 0;
+    for t in 0..dims.len() {
+        let m = router.metrics(t);
+        assert_eq!(m.total_requests(), per_task, "task {t}");
+        assert!(
+            m.total_batches >= per_task / 4,
+            "task {t}: {} batches for {per_task} requests of batch size 4",
+            m.total_batches
+        );
+        batch_sum += m.total_batches;
+    }
+    let agg = router.aggregate_metrics();
+    assert_eq!(agg.total_requests(), n_threads * per_thread);
+    assert_eq!(agg.total_batches, batch_sum);
+    assert!(router.failures().is_empty());
 }
