@@ -148,6 +148,35 @@ fn main() {
         reports.push(rb);
     }
 
+    // --- hot spot 8: FaultyExec passthrough overhead ---------------------
+    // The chaos harness wraps engines in a fault gate on every run; a
+    // default (no-fault) gate must cost one atomic increment, not a
+    // measurable fraction of the batch. No speedup assert — the numbers
+    // are reported for eyeballing regressions.
+    {
+        use sac::coordinator::{synthetic_engine, DynamicBatcher};
+        use sac::runtime::FaultyExec;
+        use std::sync::Arc;
+        let sizes = [16usize, 12, 4];
+        let plain = synthetic_engine(43, &sizes, 64).unwrap();
+        let gated = synthetic_engine(43, &sizes, 64)
+            .unwrap()
+            .with_faults(Arc::new(FaultyExec::default()));
+        let mut b64 = DynamicBatcher::new(64, 16);
+        let mut rng = Rng::new(10);
+        for _ in 0..64 {
+            b64.submit((0..16).map(|_| rng.uniform_in(-1.0, 1.0) as f32).collect());
+        }
+        let batch = b64.flush().remove(0);
+        let quick = Bench::quick();
+        reports.push(quick.run("engine/ungated 64×[16,12,4] batch", || {
+            black_box(plain.run_batch(&batch).unwrap())
+        }));
+        reports.push(quick.run("engine/fault-gated(no-op) 64×[16,12,4] batch", || {
+            black_box(gated.run_batch(&batch).unwrap())
+        }));
+    }
+
     println!("\n=== hotpath benchmarks ===");
     for r in &reports {
         println!("{}", r.report());

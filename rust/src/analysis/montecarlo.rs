@@ -32,6 +32,31 @@ impl Default for McConfig {
     }
 }
 
+impl McConfig {
+    /// [`McConfig::default`] with `SAC_MC_TRIALS` / `SAC_MC_SEED`
+    /// environment overrides — CI shrinks the campaign without patching
+    /// call sites; explicit CLI flags still take precedence over both.
+    /// Unparsable values fall back to the default (env misconfiguration
+    /// must not silently change what a figure means).
+    pub fn from_env() -> McConfig {
+        McConfig::from_env_with(|k| std::env::var(k).ok())
+    }
+
+    /// [`McConfig::from_env`] with an injectable lookup (test seam).
+    pub fn from_env_with(lookup: impl Fn(&str) -> Option<String>) -> McConfig {
+        let mut cfg = McConfig::default();
+        if let Some(t) = lookup("SAC_MC_TRIALS").and_then(|v| v.trim().parse::<usize>().ok()) {
+            if t > 0 {
+                cfg.trials = t;
+            }
+        }
+        if let Some(s) = lookup("SAC_MC_SEED").and_then(|v| v.trim().parse::<u64>().ok()) {
+            cfg.seed = s;
+        }
+        cfg
+    }
+}
+
 /// Result of one cell's MC campaign.
 #[derive(Clone, Debug)]
 pub struct McResult {
@@ -158,6 +183,41 @@ mod tests {
             threads: 2,
             zs: super::super::dc::grid(-1.5, 1.5, 7),
         }
+    }
+
+    #[test]
+    fn from_env_overrides_trials_and_seed() {
+        let cfg = McConfig::from_env_with(|k| match k {
+            "SAC_MC_TRIALS" => Some("16".into()),
+            "SAC_MC_SEED" => Some("99".into()),
+            _ => None,
+        });
+        assert_eq!(cfg.trials, 16);
+        assert_eq!(cfg.seed, 99);
+        // non-overridden fields keep the defaults
+        let d = McConfig::default();
+        assert_eq!(cfg.threads, d.threads);
+        assert_eq!(cfg.zs, d.zs);
+    }
+
+    #[test]
+    fn from_env_ignores_missing_and_bad_values() {
+        let cfg = McConfig::from_env_with(|_| None);
+        assert_eq!(cfg.trials, McConfig::default().trials);
+        assert_eq!(cfg.seed, McConfig::default().seed);
+        let cfg = McConfig::from_env_with(|k| match k {
+            "SAC_MC_TRIALS" => Some("zero?".into()),
+            "SAC_MC_SEED" => Some("-5".into()),
+            _ => None,
+        });
+        assert_eq!(cfg.trials, McConfig::default().trials);
+        assert_eq!(cfg.seed, McConfig::default().seed);
+        // zero trials would be a degenerate campaign — rejected too
+        let cfg = McConfig::from_env_with(|k| match k {
+            "SAC_MC_TRIALS" => Some("0".into()),
+            _ => None,
+        });
+        assert_eq!(cfg.trials, McConfig::default().trials);
     }
 
     #[test]

@@ -77,6 +77,13 @@ impl Engine {
         self.exe.mode()
     }
 
+    /// Attach an infrastructure fault gate to the underlying executable
+    /// (see [`crate::runtime::FaultyExec`]) — chaos-suite surface.
+    pub fn with_faults(mut self, faults: std::sync::Arc<crate::runtime::FaultyExec>) -> Engine {
+        self.exe = self.exe.with_faults(faults);
+        self
+    }
+
     /// Build from in-memory parts (artifact-free: see
     /// [`Executable::native_mlp`]).
     pub fn from_parts(net: TrainedNet, exe: Executable) -> Result<Engine> {

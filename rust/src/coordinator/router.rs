@@ -772,6 +772,76 @@ mod tests {
     }
 
     #[test]
+    fn wait_timeout_leaves_request_claimable_exactly_once() {
+        use crate::runtime::FaultyExec;
+        use std::sync::Arc;
+        // a latency-injected engine guarantees wait() times out before the
+        // batch lands, so the timeout path itself is what's under test
+        let engine = synthetic_engine(21, &[3, 4, 2], 4)
+            .unwrap()
+            .with_faults(Arc::new(FaultyExec::slow(Duration::from_millis(80))));
+        let router = Router::new(quick_cfg(2), vec![("slow".into(), engine)]);
+        let req = router.submit(0, vec![0.2, -0.1, 0.4]).unwrap();
+        let err = router.wait(req, Duration::from_millis(1)).unwrap_err();
+        assert!(err.to_string().contains("timed out"), "{err}");
+        // the timed-out request is still delivered — and exactly once
+        let t0 = Instant::now();
+        let r = loop {
+            if let Some(r) = router.try_take(req).unwrap() {
+                break r;
+            }
+            assert!(
+                t0.elapsed() < Duration::from_secs(10),
+                "timed-out request never became claimable"
+            );
+            thread::sleep(Duration::from_millis(2));
+        };
+        assert_eq!(r.id, req.id);
+        assert!(
+            router.try_take(req).unwrap().is_none(),
+            "ready slot leaked: delivered twice after a wait() timeout"
+        );
+        assert_eq!(router.ready(), 0);
+    }
+
+    #[test]
+    fn drain_races_concurrent_submits_without_losing_requests() {
+        let router = toy_router(3);
+        let n = 40usize;
+        let reqs: Vec<RequestId> = thread::scope(|scope| {
+            let submitter = {
+                let router = &router;
+                scope.spawn(move || {
+                    (0..n)
+                        .map(|k| {
+                            let req = router.submit(0, vec![0.02 * k as f32; 3]).unwrap();
+                            if k % 8 == 0 {
+                                thread::sleep(Duration::from_micros(300));
+                            }
+                            req
+                        })
+                        .collect::<Vec<_>>()
+                })
+            };
+            // drain while the submitter is still pushing: each drain only
+            // covers batches in flight at its own flush, but must never
+            // corrupt bookkeeping for requests racing in behind it
+            for _ in 0..6 {
+                router.drain(Duration::from_secs(10)).unwrap();
+            }
+            submitter.join().unwrap()
+        });
+        // the final drain (no concurrent submits left) covers the tail
+        router.drain(Duration::from_secs(10)).unwrap();
+        for &req in &reqs {
+            assert!(router.try_take(req).unwrap().is_some(), "lost {req:?}");
+            assert!(router.try_take(req).unwrap().is_none(), "duplicate {req:?}");
+        }
+        assert_eq!(reqs.len(), n);
+        assert!(router.failures().is_empty());
+    }
+
+    #[test]
     fn names_resolve() {
         let router = toy_router(1);
         assert_eq!(router.n_tasks(), 2);

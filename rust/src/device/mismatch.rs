@@ -10,7 +10,7 @@
 #![allow(rustdoc::broken_intra_doc_links)]
 
 use super::ekv::Mosfet;
-use crate::pdk::ProcessNode;
+use crate::pdk::{regime::Regime, Polarity, ProcessNode};
 use crate::util::rng::Rng;
 
 /// Mismatch sampler for one process node.
@@ -40,6 +40,52 @@ impl MismatchModel {
         d.dvt = rng.gauss_ms(0.0, self.sigma_vt(dev.w_um, dev.l_um));
         d.dbeta = rng.gauss_ms(0.0, self.sigma_beta(dev.w_um, dev.l_um));
         d
+    }
+
+    /// Current-mirror gain error of an input matched pair at the node's
+    /// analog sizing: the mismatched device's drain current over the nominal
+    /// one's, both at the regime bias point `V_bias(regime, t_c)`.
+    ///
+    /// This is the same matched-pair math `cells::CircuitCorner` applies to
+    /// its inputs; exposed here so the fault-injection harness can derive
+    /// physically calibrated per-branch gains without paying a full nested
+    /// bisection circuit solve per evaluation.
+    pub fn mirror_gain(&self, regime: Regime, t_c: f64, dvt: f64, dbeta: f64) -> f64 {
+        let mut nom = Mosfet::square(self.node, Polarity::N);
+        nom.w_um = self.node.analog_w_um;
+        nom.l_um = self.node.analog_l_um;
+        nom.t_c = t_c;
+        let mut mm = nom.clone();
+        mm.dvt = dvt;
+        mm.dbeta = dbeta;
+        let vg = self.node.bias_for(regime, t_c);
+        mm.forward(vg, 0.0) / nom.forward(vg, 0.0)
+    }
+
+    /// Sample `n` independent mirror gains at the analog sizing, with the
+    /// Pelgrom sigmas scaled by `sigma_scale` (1.0 = paper-calibrated).
+    /// Deterministic given `rng`'s state; `sigma_scale == 0.0` yields exact
+    /// unit gains without consuming random draws.
+    pub fn sample_mirror_gains(
+        &self,
+        regime: Regime,
+        t_c: f64,
+        n: usize,
+        sigma_scale: f64,
+        rng: &mut Rng,
+    ) -> Vec<f64> {
+        if sigma_scale == 0.0 {
+            return vec![1.0; n];
+        }
+        let s_vt = sigma_scale * self.sigma_vt(self.node.analog_w_um, self.node.analog_l_um);
+        let s_b = sigma_scale * self.sigma_beta(self.node.analog_w_um, self.node.analog_l_um);
+        (0..n)
+            .map(|_| {
+                let dvt = rng.gauss_ms(0.0, s_vt);
+                let dbeta = rng.gauss_ms(0.0, s_b);
+                self.mirror_gain(regime, t_c, dvt, dbeta)
+            })
+            .collect()
     }
 }
 
@@ -80,5 +126,79 @@ mod tests {
         let s7 = m7.sigma_vt(FINFET7.wmin_um, FINFET7.lmin_um);
         let s180 = m180.sigma_vt(2.0, 0.5);
         assert!(s7 > s180, "s7={s7} s180={s180}");
+    }
+
+    #[test]
+    fn mirror_gain_is_unity_without_mismatch() {
+        for node in crate::pdk::ProcessNode::all() {
+            let m = MismatchModel::new(node);
+            let g = m.mirror_gain(Regime::WeakInversion, 27.0, 0.0, 0.0);
+            assert_eq!(g, 1.0, "node {}", node.name);
+        }
+    }
+
+    #[test]
+    fn mirror_gain_suppressed_in_strong_inversion() {
+        // WI is exponentially sensitive to dVt; SI only quadratically — the
+        // same threshold shift must perturb the SI mirror far less.
+        let m = MismatchModel::new(&CMOS180);
+        let dvt = 3e-3;
+        let g_wi = m.mirror_gain(Regime::WeakInversion, 27.0, dvt, 0.0);
+        let g_si = m.mirror_gain(Regime::StrongInversion, 27.0, dvt, 0.0);
+        assert!(
+            (g_si - 1.0).abs() < (g_wi - 1.0).abs(),
+            "g_wi={g_wi} g_si={g_si}"
+        );
+        assert!((g_wi - 1.0).abs() > 1e-3, "WI gain should visibly move");
+    }
+
+    #[test]
+    fn mirror_gain_symmetric_in_wi() {
+        // WI mirror gain ~ exp(±dVt/(n·UT)): opposite shifts should be
+        // (approximately) reciprocal.
+        let m = MismatchModel::new(&CMOS180);
+        let dvt = 2e-3;
+        let gp = m.mirror_gain(Regime::WeakInversion, 27.0, dvt, 0.0);
+        let gm = m.mirror_gain(Regime::WeakInversion, 27.0, -dvt, 0.0);
+        assert!((gp * gm - 1.0).abs() < 0.01, "gp={gp} gm={gm}");
+    }
+
+    #[test]
+    fn sampled_gains_scale_with_sigma() {
+        let m = MismatchModel::new(&FINFET7);
+        let exact = m.sample_mirror_gains(Regime::WeakInversion, 27.0, 16, 0.0, &mut Rng::new(1));
+        assert!(exact.iter().all(|&g| g == 1.0));
+        let mild: Vec<f64> =
+            m.sample_mirror_gains(Regime::WeakInversion, 27.0, 200, 0.5, &mut Rng::new(1));
+        let full: Vec<f64> =
+            m.sample_mirror_gains(Regime::WeakInversion, 27.0, 200, 1.0, &mut Rng::new(1));
+        let spread = |gs: &[f64]| summarize(gs).std;
+        assert!(
+            spread(&full) > 1.5 * spread(&mild),
+            "full={} mild={}",
+            spread(&full),
+            spread(&mild)
+        );
+        // paper-calibrated gains stay within a few percent of unity
+        assert!(full.iter().all(|&g| (0.8..1.2).contains(&g)));
+    }
+
+    #[test]
+    fn adjacent_trial_forks_give_uncorrelated_pelgrom_draws() {
+        // One deterministic stream per trial: fork(t) and fork(t+1) must be
+        // statistically independent, or per-trial mismatch samples would
+        // alias across trials.
+        let m = MismatchModel::new(&CMOS180);
+        let dev = Mosfet::square(&CMOS180, Polarity::N);
+        for base in [1u64, 77, 4096] {
+            let root = Rng::new(base);
+            let mut a = root.fork(10);
+            let mut b = root.fork(11);
+            let n = 2000;
+            let da: Vec<f64> = (0..n).map(|_| m.sample(&dev, &mut a).dvt).collect();
+            let db: Vec<f64> = (0..n).map(|_| m.sample(&dev, &mut b).dvt).collect();
+            let r = crate::util::stats::pearson(&da, &db);
+            assert!(r.abs() < 0.1, "base={base} pearson={r}");
+        }
     }
 }

@@ -1,0 +1,715 @@
+//! The chaos campaign runner: replay a [`FaultPlan`] against the serving
+//! stack and report accuracy degradation + router liveness invariants.
+//!
+//! Two campaigns compose into one [`ChaosReport`]:
+//!
+//! * **Analog** ([`run_corner`], once per paper corner): a fixed
+//!   high-margin prototype-detector net is served through a [`Router`]
+//!   with one *nominal* lane and `trials` *faulted* lanes.  Each trial
+//!   lane's [`BatchKernel`] is rebuilt from the plan's analog faults —
+//!   Pelgrom mirror-gain mismatch sampled through
+//!   [`MismatchModel`], the temperature-drift schedule stage the trial
+//!   falls in, and stuck multiplier-grid cells — while reusing the one
+//!   nominal multiplier calibration (chip-calibration-then-drift).  The
+//!   report is per-trial label agreement against the nominal lane.
+//! * **Infrastructure** ([`run_infra`]): three synthetic-engine lanes —
+//!   healthy, latency-injected, panic-injected — under a multi-threaded
+//!   submit storm.  The report is the router's liveness invariants:
+//!   every request resolved exactly once (answered or failed, never
+//!   stranded, never delivered twice) and a bounded drain.
+//!
+//! Determinism contract: every field serialized by
+//! [`ChaosReport::canonical_json`] is a pure function of the plan — per-row
+//! analog results do not depend on worker scheduling (each row is computed
+//! independently and matched back by request id), and the infra fields are
+//! scheduling-independent booleans/counts.  Wall-clock timings and the
+//! answered/failed split (which *does* depend on batch ordinal timing) are
+//! reported on the struct but excluded from the canonical serialization, so
+//! identical-seed replays are bit-identical.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::cells::multiplier::Multiplier;
+use crate::cells::HProvider;
+use crate::coordinator::{synthetic_engine, Engine, Response, Router, RouterConfig};
+use crate::data::TrainedNet;
+use crate::device::MismatchModel;
+use crate::nn::batch::{BatchKernel, GridConfig};
+use crate::pdk::regime::Regime;
+use crate::pdk::{ProcessNode, CMOS180, FINFET7};
+use crate::runtime::{Executable, FaultyExec};
+use crate::sac::TableModel;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+use super::drift::{stage_for_progress, temperature_schedule};
+use super::drift::MismatchedProvider;
+use super::plan::{DriftKind, FaultPlan};
+
+/// Acceptance envelope on the *campaign mean*: mean label agreement with
+/// the nominal lane must stay ≥ `1 − MEAN_DEGRADATION_ENVELOPE`.  The
+/// paper's Fig. 8 shows ≤ ~10% full-scale output deviation under combined
+/// PVT + mismatch; 15% on label agreement adds margin for the stuck-cell
+/// fault class the paper does not model.
+pub const MEAN_DEGRADATION_ENVELOPE: f64 = 0.15;
+
+/// Collapse guard on the *worst single trial*: no trial may fall below
+/// `1 − WORST_DEGRADATION_ENVELOPE` agreement.  A single unlucky stuck
+/// cell in a high-traffic grid region can systematically skew one class,
+/// so this floor is intentionally loose — it catches collapse (outputs
+/// decorrelated from the nominal), not ordinary degradation.
+pub const WORST_DEGRADATION_ENVELOPE: f64 = 0.40;
+
+/// Drain bound for the infrastructure campaign [s] — generous versus the
+/// ~ms of injected latency, so only a genuine liveness bug trips it.
+pub const DRAIN_BOUND_SECS: u64 = 30;
+
+/// Drain bound for the analog campaign [s] (many lanes, table-backed).
+const ANALOG_DRAIN_SECS: u64 = 120;
+
+/// Compiled batch dimension of the chaos net's engines.
+const CHAOS_BATCH: usize = 8;
+
+/// Distinct mirror-gain branches sampled per trial (cycled across the
+/// solver's inputs by [`MismatchedProvider`]).
+const GAIN_BRANCHES: usize = 16;
+
+/// Junction temperature when the plan carries no drift fault [°C].
+const NOMINAL_T_C: f64 = 27.0;
+
+/// Campaign knobs not carried by the plan (the plan is *what* to inject;
+/// this is *how hard* to sample it).
+#[derive(Clone, Debug)]
+pub struct ChaosConfig {
+    /// faulted lanes per corner
+    pub trials: usize,
+    /// router worker threads
+    pub workers: usize,
+    /// evaluation rows per lane (kept a multiple of the batch size so the
+    /// analog campaign never depends on the deadline flusher)
+    pub eval_rows: usize,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> Self {
+        ChaosConfig {
+            trials: 12,
+            workers: 4,
+            eval_rows: 32,
+        }
+    }
+}
+
+/// The paper's evaluation corners, at the regime each node's story
+/// centers on (Fig. 1: weak inversion at 180 nm, moderate at 7 nm).
+pub fn chaos_corners() -> [(&'static ProcessNode, Regime); 2] {
+    [
+        (&CMOS180, Regime::WeakInversion),
+        (&FINFET7, Regime::ModerateInversion),
+    ]
+}
+
+/// Grid sizing for the chaos kernels: coarse enough that a stuck cell is
+/// a meaningful fraction of the table, fine enough to stay within
+/// `BATCH_TOL` of the scalar path on the nominal lane.
+pub fn chaos_grid() -> GridConfig {
+    GridConfig {
+        proto_range: 6.0,
+        proto_density: 96,
+        act_range: 8.0,
+        act_density: 64,
+    }
+}
+
+/// Orthogonal ±1 prototypes (Hadamard rows), one per class.
+const PROTOS: [[f64; 8]; 3] = [
+    [1.0, -1.0, 1.0, -1.0, 1.0, -1.0, 1.0, -1.0],
+    [1.0, 1.0, -1.0, -1.0, 1.0, 1.0, -1.0, -1.0],
+    [1.0, 1.0, 1.0, 1.0, -1.0, -1.0, -1.0, -1.0],
+];
+
+/// The fixed chaos net: a hand-constructed prototype detector
+/// `[8, 6, 3]` whose nominal logit margins are far larger than any
+/// in-envelope analog perturbation, so agreement loss measures fault
+/// severity rather than razor-edge class boundaries.
+///
+/// Hidden unit `k < 3` detects prototype `k` (weights `0.22·p_k`, bias
+/// −0.5 so non-matching rows stay below the ReLU knee); hidden units
+/// 3..6 are low-gain spares for the same prototypes.  The output layer
+/// routes each detector to its class.
+pub fn chaos_net() -> TrainedNet {
+    let (din, hid, kout) = (8usize, 6usize, 3usize);
+    let mut w1 = vec![0.0; din * hid];
+    for i in 0..din {
+        for k in 0..hid {
+            w1[i * hid + k] = if k < 3 {
+                0.22 * PROTOS[k][i]
+            } else {
+                0.06 * PROTOS[k - 3][i]
+            };
+        }
+    }
+    let b1 = vec![-0.5, -0.5, -0.5, -0.15, -0.15, -0.15];
+    let mut w2 = vec![0.0; hid * kout];
+    for j in 0..kout {
+        w2[j * kout + j] = 0.3;
+        w2[(3 + j) * kout + j] = 0.1;
+    }
+    let b2 = vec![0.0; kout];
+    TrainedNet {
+        task: "chaos".into(),
+        sizes: vec![din, hid, kout],
+        activation: "relu".into(),
+        splines: 1,
+        c: 1.0,
+        acc_sw: 0.0,
+        acc_sac_algorithmic: 0.0,
+        weights: vec![w1, w2],
+        biases: vec![b1, b2],
+    }
+}
+
+/// Evaluation rows: noisy prototypes, class `r % 3`, seeded off the plan.
+pub fn eval_features(seed: u64, rows: usize) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed).fork(0xFEA7);
+    (0..rows)
+        .map(|r| {
+            let p = &PROTOS[r % PROTOS.len()];
+            p.iter()
+                .map(|&pi| (0.75 * pi + rng.uniform_in(-0.15, 0.15)) as f32)
+                .collect()
+        })
+        .collect()
+}
+
+/// One corner's analog campaign result.
+#[derive(Clone, Debug)]
+pub struct CornerReport {
+    pub node: String,
+    pub regime: String,
+    /// junction temperature each trial was served at [°C]
+    pub trial_temp_c: Vec<f64>,
+    /// per-trial label agreement with the nominal lane ∈ [0, 1]
+    pub trial_agreement: Vec<f64>,
+    /// per-trial mean |logit − nominal logit|
+    pub trial_logit_dev: Vec<f64>,
+    /// stuck multiplier-grid cells injected per trial
+    pub stuck_cells: Vec<usize>,
+    pub mean_agreement: f64,
+    pub worst_agreement: f64,
+}
+
+impl CornerReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("node", Json::Str(self.node.clone())),
+            ("regime", Json::Str(self.regime.clone())),
+            ("trial_temp_c", Json::from_f64_slice(&self.trial_temp_c)),
+            ("trial_agreement", Json::from_f64_slice(&self.trial_agreement)),
+            ("trial_logit_dev", Json::from_f64_slice(&self.trial_logit_dev)),
+            (
+                "stuck_cells",
+                Json::Arr(self.stuck_cells.iter().map(|&n| Json::Num(n as f64)).collect()),
+            ),
+            ("mean_agreement", Json::Num(self.mean_agreement)),
+            ("worst_agreement", Json::Num(self.worst_agreement)),
+        ])
+    }
+}
+
+/// The infrastructure campaign result.  `answered`/`failed`/`drain_ms`
+/// depend on worker scheduling (which batch ordinal trips the panic gate)
+/// and are excluded from the canonical serialization; the invariant
+/// fields are deterministic.
+#[derive(Clone, Debug)]
+pub struct InfraReport {
+    pub submitted: usize,
+    pub answered: usize,
+    pub failed: usize,
+    /// requests neither answered nor failed after a full drain
+    pub stranded: usize,
+    /// requests delivered more than once by `try_take`
+    pub double_delivery: usize,
+    /// `answered + failed == submitted` with no strands or doubles
+    pub resolved_exactly_once: bool,
+    /// drain returned (successfully or with collected worker failures)
+    /// before [`DRAIN_BOUND_SECS`]
+    pub drained_in_bound: bool,
+    /// at least one engine panic was contained and surfaced
+    pub panic_observed: bool,
+    pub drain_ms: f64,
+}
+
+impl InfraReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("submitted", Json::Num(self.submitted as f64)),
+            ("stranded", Json::Num(self.stranded as f64)),
+            ("double_delivery", Json::Num(self.double_delivery as f64)),
+            ("resolved_exactly_once", Json::Bool(self.resolved_exactly_once)),
+            ("drained_in_bound", Json::Bool(self.drained_in_bound)),
+            ("panic_observed", Json::Bool(self.panic_observed)),
+        ])
+    }
+}
+
+/// The full campaign report for one plan.
+#[derive(Clone, Debug)]
+pub struct ChaosReport {
+    pub plan: FaultPlan,
+    pub corners: Vec<CornerReport>,
+    pub infra: InfraReport,
+}
+
+impl ChaosReport {
+    /// Envelope / invariant breaches (empty = pass).
+    pub fn violations(&self) -> Vec<String> {
+        let mut v = Vec::new();
+        let mean_floor = 1.0 - MEAN_DEGRADATION_ENVELOPE;
+        let worst_floor = 1.0 - WORST_DEGRADATION_ENVELOPE;
+        for c in &self.corners {
+            if c.mean_agreement < mean_floor {
+                v.push(format!(
+                    "corner {}/{}: mean agreement {:.4} below envelope floor {:.2}",
+                    c.node, c.regime, c.mean_agreement, mean_floor
+                ));
+            }
+            if c.worst_agreement < worst_floor {
+                v.push(format!(
+                    "corner {}/{}: worst trial agreement {:.4} below collapse floor {:.2}",
+                    c.node, c.regime, c.worst_agreement, worst_floor
+                ));
+            }
+        }
+        let i = &self.infra;
+        if !i.resolved_exactly_once {
+            v.push(format!(
+                "infra: {} submitted but {} answered + {} failed, {} stranded, {} double-delivered",
+                i.submitted, i.answered, i.failed, i.stranded, i.double_delivery
+            ));
+        }
+        if !i.drained_in_bound {
+            v.push(format!("infra: drain exceeded the {DRAIN_BOUND_SECS}s bound"));
+        }
+        if self.plan.panic_after().is_some() && !i.panic_observed {
+            v.push("infra: planned engine panic was never observed".into());
+        }
+        v
+    }
+
+    pub fn pass(&self) -> bool {
+        self.violations().is_empty()
+    }
+
+    /// Deterministic serialization: a pure function of the plan (see the
+    /// module docs for the replay contract).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("plan", self.plan.to_json()),
+            ("mean_envelope", Json::Num(MEAN_DEGRADATION_ENVELOPE)),
+            ("worst_envelope", Json::Num(WORST_DEGRADATION_ENVELOPE)),
+            (
+                "corners",
+                Json::Arr(self.corners.iter().map(|c| c.to_json()).collect()),
+            ),
+            ("infra", self.infra.to_json()),
+            (
+                "violations",
+                Json::Arr(
+                    self.violations().into_iter().map(Json::Str).collect(),
+                ),
+            ),
+            ("pass", Json::Bool(self.pass())),
+        ])
+    }
+
+    pub fn canonical_json(&self) -> String {
+        self.to_json().to_string()
+    }
+}
+
+fn engine_with_kernel(net: &TrainedNet, kernel: BatchKernel) -> Result<Engine> {
+    let exe = Executable::native_mlp_with_kernel(net, CHAOS_BATCH, Arc::new(kernel))?;
+    Engine::from_parts(net.clone(), exe)
+}
+
+/// Run the analog campaign at one corner: a nominal lane plus
+/// `cfg.trials` faulted lanes served through one router, reported as
+/// per-trial agreement against the nominal lane.
+pub fn run_corner(
+    node: &'static ProcessNode,
+    regime: Regime,
+    net: &TrainedNet,
+    plan: &FaultPlan,
+    cfg: &ChaosConfig,
+) -> Result<CornerReport> {
+    let grid = chaos_grid();
+    let act = net.activation_kind()?;
+    let (dkind, from_c, to_c, steps) = plan
+        .drift()
+        .unwrap_or((DriftKind::Ramp, NOMINAL_T_C, NOMINAL_T_C, 1));
+    let temps = temperature_schedule(dkind, from_c, to_c, steps);
+
+    // Chip-calibration-then-drift: one surrogate per schedule stage, one
+    // multiplier calibration on the nominal (first-stage) corner, reused
+    // by every trial kernel.
+    let stage_tables: Vec<TableModel> = temps
+        .iter()
+        .map(|&t| TableModel::calibrate(node, regime, t))
+        .collect();
+    let mult = Multiplier::calibrate(&stage_tables[0], net.splines, net.c);
+    let mm = MismatchModel::new(node);
+    let sigma_scale = plan.sigma_scale();
+
+    let mut lanes: Vec<(String, Engine)> = Vec::with_capacity(cfg.trials + 1);
+    let nominal_provider: Box<dyn HProvider + Send + Sync> =
+        Box::new(stage_tables[0].clone());
+    let nominal_kernel = BatchKernel::with_multiplier(
+        nominal_provider,
+        mult.clone(),
+        act,
+        net.splines,
+        net.c,
+        &grid,
+    );
+    lanes.push(("nominal".into(), engine_with_kernel(net, nominal_kernel)?));
+
+    let mut trial_temp_c = Vec::with_capacity(cfg.trials);
+    let mut stuck_cells = Vec::with_capacity(cfg.trials);
+    for t in 0..cfg.trials {
+        let mut rng = Rng::new(plan.seed).fork(0x5AC0_0000 + t as u64);
+        let progress = if cfg.trials <= 1 {
+            0.0
+        } else {
+            t as f64 / (cfg.trials - 1) as f64
+        };
+        let stage = stage_for_progress(progress, temps.len());
+        let t_c = temps[stage];
+        let gains = mm.sample_mirror_gains(regime, t_c, GAIN_BRANCHES, sigma_scale, &mut rng);
+        let provider: Box<dyn HProvider + Send + Sync> = Box::new(MismatchedProvider::new(
+            Box::new(stage_tables[stage].clone()),
+            gains,
+        ));
+        let mut kernel = BatchKernel::with_multiplier(
+            provider,
+            mult.clone(),
+            act,
+            net.splines,
+            net.c,
+            &grid,
+        );
+        let stuck = match plan.stuck() {
+            Some((fraction, value)) => kernel.inject_stuck_cells(&mut rng, fraction, value),
+            None => 0,
+        };
+        trial_temp_c.push(t_c);
+        stuck_cells.push(stuck);
+        lanes.push((format!("trial{t}"), engine_with_kernel(net, kernel)?));
+    }
+
+    let n_lanes = lanes.len();
+    let router = Router::new(
+        RouterConfig {
+            workers: cfg.workers.max(1),
+            ..Default::default()
+        },
+        lanes,
+    );
+    let feats = eval_features(plan.seed, cfg.eval_rows);
+    let mut reqs = Vec::with_capacity(n_lanes);
+    for lane in 0..n_lanes {
+        let mut ids = Vec::with_capacity(feats.len());
+        for f in &feats {
+            ids.push(router.submit(lane, f.clone())?);
+        }
+        reqs.push(ids);
+    }
+    router.drain(Duration::from_secs(ANALOG_DRAIN_SECS))?;
+    let mut lane_answers: Vec<Vec<Response>> = Vec::with_capacity(n_lanes);
+    for ids in &reqs {
+        let mut rows = Vec::with_capacity(ids.len());
+        for &id in ids {
+            rows.push(
+                router
+                    .try_take(id)?
+                    .ok_or_else(|| anyhow!("analog request stranded after drain"))?,
+            );
+        }
+        lane_answers.push(rows);
+    }
+    router.shutdown();
+
+    let nominal = &lane_answers[0];
+    let mut trial_agreement = Vec::with_capacity(cfg.trials);
+    let mut trial_logit_dev = Vec::with_capacity(cfg.trials);
+    for rows in lane_answers.iter().skip(1) {
+        let mut agree = 0usize;
+        let mut dev = 0.0f64;
+        let mut dev_n = 0usize;
+        for (nom, got) in nominal.iter().zip(rows) {
+            if nom.pred == got.pred {
+                agree += 1;
+            }
+            for (&a, &b) in nom.logits.iter().zip(&got.logits) {
+                dev += (a as f64 - b as f64).abs();
+                dev_n += 1;
+            }
+        }
+        trial_agreement.push(agree as f64 / nominal.len().max(1) as f64);
+        trial_logit_dev.push(dev / dev_n.max(1) as f64);
+    }
+    let mean_agreement = if trial_agreement.is_empty() {
+        1.0
+    } else {
+        trial_agreement.iter().sum::<f64>() / trial_agreement.len() as f64
+    };
+    let worst_agreement = trial_agreement
+        .iter()
+        .cloned()
+        .fold(1.0f64, f64::min);
+
+    Ok(CornerReport {
+        node: node.name.to_string(),
+        regime: regime.short().to_string(),
+        trial_temp_c,
+        trial_agreement,
+        trial_logit_dev,
+        stuck_cells,
+        mean_agreement,
+        worst_agreement,
+    })
+}
+
+/// Run the infrastructure campaign: three synthetic lanes (healthy /
+/// latency-injected / panic-injected) under a multi-threaded submit
+/// storm, then assert the router's liveness invariants.
+pub fn run_infra(plan: &FaultPlan, cfg: &ChaosConfig) -> Result<InfraReport> {
+    let (submitters, requests) = plan.storm().unwrap_or((2, 48));
+    let sizes = [4usize, 6, 3];
+    let healthy = synthetic_engine(plan.seed.wrapping_add(101), &sizes, 4)?;
+    let mut slow = synthetic_engine(plan.seed.wrapping_add(102), &sizes, 4)?;
+    if let Some(d) = plan.slow_delay() {
+        slow = slow.with_faults(Arc::new(FaultyExec::slow(d)));
+    }
+    let mut panicky = synthetic_engine(plan.seed.wrapping_add(103), &sizes, 4)?;
+    if let Some(k) = plan.panic_after() {
+        panicky = panicky.with_faults(Arc::new(FaultyExec::panicking(k)));
+    }
+    let router = Router::new(
+        RouterConfig {
+            workers: cfg.workers.max(2),
+            ..Default::default()
+        },
+        vec![
+            ("storm".into(), healthy),
+            ("slow".into(), slow),
+            ("panicky".into(), panicky),
+        ],
+    );
+
+    let n_lanes = 3usize;
+    let reqs: Vec<crate::coordinator::RequestId> = std::thread::scope(|s| {
+        let router = &router;
+        let mut handles = Vec::with_capacity(submitters);
+        for t in 0..submitters {
+            let quota = requests / submitters + usize::from(t < requests % submitters);
+            handles.push(s.spawn(move || {
+                let mut mine = Vec::with_capacity(quota);
+                for i in 0..quota {
+                    let lane = (t + i) % n_lanes;
+                    let bump = 0.0625 * ((t + i) % 7) as f32;
+                    let features = vec![0.25 + bump, -0.5, 0.125, 0.75 - bump];
+                    if let Ok(id) = router.submit(lane, features) {
+                        mine.push(id);
+                    }
+                }
+                mine
+            }));
+        }
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("submitter thread panicked"))
+            .collect()
+    });
+    let submitted = reqs.len();
+
+    let t0 = Instant::now();
+    let drain_res = router.drain(Duration::from_secs(DRAIN_BOUND_SECS));
+    let drain_ms = t0.elapsed().as_secs_f64() * 1e3;
+    // Worker failures surface through drain() as an error too — only the
+    // timeout variant is a liveness breach.
+    let drained_in_bound = match &drain_res {
+        Ok(()) => true,
+        Err(e) => !e.to_string().contains("drain timed out"),
+    };
+
+    let (mut answered, mut failed, mut stranded, mut double_delivery) = (0, 0, 0, 0);
+    for &req in &reqs {
+        match router.try_take(req) {
+            Ok(Some(_)) => answered += 1,
+            Ok(None) => stranded += 1,
+            Err(_) => failed += 1,
+        }
+        // the same request must never be delivered a second time
+        if let Ok(Some(_)) = router.try_take(req) {
+            double_delivery += 1;
+        }
+    }
+    let panic_observed = router
+        .failures()
+        .iter()
+        .any(|m| m.contains("panicked"));
+    router.shutdown();
+
+    Ok(InfraReport {
+        submitted,
+        answered,
+        failed,
+        stranded,
+        double_delivery,
+        resolved_exactly_once: stranded == 0
+            && double_delivery == 0
+            && answered + failed == submitted,
+        drained_in_bound,
+        panic_observed,
+        drain_ms,
+    })
+}
+
+/// Replay a plan end to end: both paper corners plus the infrastructure
+/// campaign, composed into one report.
+pub fn run_chaos(plan: &FaultPlan, cfg: &ChaosConfig) -> Result<ChaosReport> {
+    let net = chaos_net();
+    let mut corners = Vec::with_capacity(2);
+    for (node, regime) in chaos_corners() {
+        corners.push(run_corner(node, regime, &net, plan, cfg)?);
+    }
+    let infra = run_infra(plan, cfg)?;
+    Ok(ChaosReport {
+        plan: plan.clone(),
+        corners,
+        infra,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chaos_net_is_a_margin_heavy_prototype_detector() {
+        let net = chaos_net();
+        assert_eq!(net.sizes, vec![8, 6, 3]);
+        assert_eq!(net.weights[0].len(), 48);
+        assert_eq!(net.weights[1].len(), 18);
+        assert_eq!(net.activation, "relu");
+        // detector k responds to prototype k with a positive pre-activation
+        // and to the other prototypes with a negative one (software math)
+        for (k, b) in [(0usize, -0.5f64), (1, -0.5), (2, -0.5)] {
+            for (j, p) in PROTOS.iter().enumerate() {
+                let pre: f64 = (0..8)
+                    .map(|i| net.weights[0][i * 6 + k] * 0.75 * p[i])
+                    .sum::<f64>()
+                    + b;
+                if j == k {
+                    assert!(pre > 0.5, "detector {k} should fire on prototype {j}");
+                } else {
+                    assert!(pre < -0.2, "detector {k} should stay off prototype {j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn eval_features_are_seeded_and_classed() {
+        let a = eval_features(7, 12);
+        let b = eval_features(7, 12);
+        let c = eval_features(8, 12);
+        assert_eq!(a.len(), 12);
+        assert!(a.iter().all(|row| row.len() == 8));
+        assert_eq!(a, b, "same seed must replay identical rows");
+        assert_ne!(a, c, "different seeds must differ");
+        // rows stay near their prototype: sign pattern matches class r % 3
+        for (r, row) in a.iter().enumerate() {
+            let p = &PROTOS[r % 3];
+            for (i, &v) in row.iter().enumerate() {
+                assert_eq!(v.signum() as f64, p[i], "row {r} feature {i}");
+                assert!(v.abs() > 0.5 && v.abs() < 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn infra_report_serializes_only_deterministic_fields() {
+        let r = InfraReport {
+            submitted: 96,
+            answered: 60,
+            failed: 36,
+            stranded: 0,
+            double_delivery: 0,
+            resolved_exactly_once: true,
+            drained_in_bound: true,
+            panic_observed: true,
+            drain_ms: 12.5,
+        };
+        let s = r.to_json().to_string();
+        assert!(s.contains("\"submitted\":96"));
+        assert!(s.contains("\"resolved_exactly_once\":true"));
+        assert!(!s.contains("answered"), "scheduling-dependent field leaked: {s}");
+        assert!(!s.contains("drain_ms"), "timing field leaked: {s}");
+    }
+
+    #[test]
+    fn violations_flag_envelope_and_invariant_breaches() {
+        let plan = FaultPlan::new(1);
+        let good = CornerReport {
+            node: "cmos180".into(),
+            regime: "WI".into(),
+            trial_temp_c: vec![27.0],
+            trial_agreement: vec![1.0],
+            trial_logit_dev: vec![0.0],
+            stuck_cells: vec![0],
+            mean_agreement: 1.0,
+            worst_agreement: 1.0,
+        };
+        let infra = InfraReport {
+            submitted: 10,
+            answered: 10,
+            failed: 0,
+            stranded: 0,
+            double_delivery: 0,
+            resolved_exactly_once: true,
+            drained_in_bound: true,
+            panic_observed: false,
+            drain_ms: 1.0,
+        };
+        let report = ChaosReport {
+            plan: plan.clone(),
+            corners: vec![good.clone()],
+            infra: infra.clone(),
+        };
+        assert!(report.pass(), "clean report must pass: {:?}", report.violations());
+
+        let mut bad_corner = good.clone();
+        bad_corner.mean_agreement = 0.5;
+        bad_corner.worst_agreement = 0.2;
+        let mut bad_infra = infra.clone();
+        bad_infra.stranded = 1;
+        bad_infra.resolved_exactly_once = false;
+        bad_infra.drained_in_bound = false;
+        let report = ChaosReport {
+            plan,
+            corners: vec![bad_corner],
+            infra: bad_infra,
+        };
+        let v = report.violations();
+        assert_eq!(v.len(), 4, "expected 4 violations, got {v:?}");
+        assert!(!report.pass());
+        let s = report.canonical_json();
+        assert!(s.contains("\"pass\":false"));
+        assert!(s.contains("\"violations\":["));
+    }
+}

@@ -1,0 +1,239 @@
+//! Fault-injecting [`HProvider`] wrappers.
+//!
+//! Analog faults enter the serving stack *through the backend*, not by
+//! perturbing logits after the fact:
+//!
+//! * [`MismatchedProvider`] applies per-branch input-mirror gains —
+//!   sampled from the Pelgrom model via
+//!   [`crate::device::MismatchModel::mirror_gain`] — before delegating to
+//!   the wrapped backend, the same input-current scaling
+//!   `cells::CircuitCorner` applies for its device-exact mismatch tier.
+//! * [`DriftingHProvider`] swaps between per-temperature backends as the
+//!   run progresses, modeling a junction-temperature ramp or step *during*
+//!   serving.  Its live mode advances an atomic call counter; the chaos
+//!   harness instead pins each trial to a schedule stage via
+//!   [`temperature_schedule`] so concurrent scheduling cannot perturb the
+//!   replayed report.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::cells::HProvider;
+
+use super::plan::DriftKind;
+
+/// The junction-temperature value at each schedule stage.
+///
+/// `Ramp` interpolates `from_c → to_c` linearly over `steps` stages;
+/// `Step` holds `from_c` for the first half and `to_c` for the second.
+pub fn temperature_schedule(kind: DriftKind, from_c: f64, to_c: f64, steps: usize) -> Vec<f64> {
+    let steps = steps.max(1);
+    match kind {
+        DriftKind::Ramp => (0..steps)
+            .map(|i| {
+                if steps == 1 {
+                    from_c
+                } else {
+                    from_c + (to_c - from_c) * i as f64 / (steps - 1) as f64
+                }
+            })
+            .collect(),
+        DriftKind::Step => (0..steps)
+            .map(|i| if i < steps.div_ceil(2) { from_c } else { to_c })
+            .collect(),
+    }
+}
+
+/// Schedule stage for a trial at `progress ∈ [0, 1]` (deterministic — the
+/// replay-safe alternative to the live call counter).
+pub fn stage_for_progress(progress: f64, steps: usize) -> usize {
+    let steps = steps.max(1);
+    ((progress.clamp(0.0, 1.0) * steps as f64) as usize).min(steps - 1)
+}
+
+/// Input-mirror mismatch wrapper: input `i` is scaled by
+/// `gains[i % gains.len()]` before the wrapped backend solves.  Empty
+/// `gains` is an exact passthrough.
+pub struct MismatchedProvider {
+    inner: Box<dyn HProvider + Send + Sync>,
+    gains: Vec<f64>,
+}
+
+impl MismatchedProvider {
+    pub fn new(inner: Box<dyn HProvider + Send + Sync>, gains: Vec<f64>) -> MismatchedProvider {
+        MismatchedProvider { inner, gains }
+    }
+
+    pub fn gains(&self) -> &[f64] {
+        &self.gains
+    }
+}
+
+impl HProvider for MismatchedProvider {
+    fn h(&self, x: &[f64], c: f64) -> f64 {
+        if self.gains.is_empty() {
+            return self.inner.h(x, c);
+        }
+        let xg: Vec<f64> = x
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| v * self.gains[i % self.gains.len()])
+            .collect();
+        self.inner.h(&xg, c)
+    }
+
+    fn label(&self) -> String {
+        format!("mismatched({})", self.inner.label())
+    }
+}
+
+/// Mid-run temperature drift: a sequence of per-temperature backends, the
+/// active one advancing every `calls_per_stage` solver calls.
+pub struct DriftingHProvider {
+    stages: Vec<(f64, Box<dyn HProvider + Send + Sync>)>,
+    calls_per_stage: u64,
+    calls: AtomicU64,
+}
+
+impl DriftingHProvider {
+    /// `stages` pairs each junction temperature with the backend solved at
+    /// that temperature; the last stage holds once reached.
+    pub fn new(
+        stages: Vec<(f64, Box<dyn HProvider + Send + Sync>)>,
+        calls_per_stage: u64,
+    ) -> DriftingHProvider {
+        assert!(!stages.is_empty(), "drift needs at least one stage");
+        DriftingHProvider {
+            stages,
+            calls_per_stage: calls_per_stage.max(1),
+            calls: AtomicU64::new(0),
+        }
+    }
+
+    /// Temperatures in stage order.
+    pub fn temperatures(&self) -> Vec<f64> {
+        self.stages.iter().map(|(t, _)| *t).collect()
+    }
+
+    /// Solver calls observed so far.
+    pub fn calls(&self) -> u64 {
+        self.calls.load(Ordering::SeqCst)
+    }
+
+    fn stage_at(&self, call: u64) -> usize {
+        ((call / self.calls_per_stage) as usize).min(self.stages.len() - 1)
+    }
+
+    /// Stage index the *next* call will solve in.
+    pub fn current_stage(&self) -> usize {
+        self.stage_at(self.calls())
+    }
+}
+
+impl HProvider for DriftingHProvider {
+    fn h(&self, x: &[f64], c: f64) -> f64 {
+        let n = self.calls.fetch_add(1, Ordering::SeqCst);
+        let (_, backend) = &self.stages[self.stage_at(n)];
+        backend.h(x, c)
+    }
+
+    fn label(&self) -> String {
+        let temps: Vec<String> = self.stages.iter().map(|(t, _)| format!("{t}")).collect();
+        format!("drifting[{}]", temps.join("→"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cells::Algorithmic;
+
+    /// Trivial backend returning a constant (stage identification).
+    struct Const(f64);
+
+    impl HProvider for Const {
+        fn h(&self, _x: &[f64], _c: f64) -> f64 {
+            self.0
+        }
+
+        fn label(&self) -> String {
+            format!("const{}", self.0)
+        }
+    }
+
+    #[test]
+    fn ramp_schedule_hits_endpoints_linearly() {
+        let t = temperature_schedule(DriftKind::Ramp, 27.0, 60.0, 4);
+        assert_eq!(t.len(), 4);
+        assert_eq!(t[0], 27.0);
+        assert_eq!(t[3], 60.0);
+        assert!(t.windows(2).all(|w| w[1] > w[0]));
+        assert_eq!(temperature_schedule(DriftKind::Ramp, 27.0, 60.0, 1), vec![27.0]);
+        // degenerate steps=0 clamps to one stage
+        assert_eq!(temperature_schedule(DriftKind::Ramp, 27.0, 60.0, 0), vec![27.0]);
+    }
+
+    #[test]
+    fn step_schedule_splits_halves() {
+        let t = temperature_schedule(DriftKind::Step, 27.0, 100.0, 4);
+        assert_eq!(t, vec![27.0, 27.0, 100.0, 100.0]);
+        let t5 = temperature_schedule(DriftKind::Step, 27.0, 100.0, 5);
+        assert_eq!(t5, vec![27.0, 27.0, 27.0, 100.0, 100.0]);
+    }
+
+    #[test]
+    fn stage_for_progress_covers_range() {
+        assert_eq!(stage_for_progress(0.0, 4), 0);
+        assert_eq!(stage_for_progress(0.49, 4), 1);
+        assert_eq!(stage_for_progress(1.0, 4), 3);
+        assert_eq!(stage_for_progress(2.0, 4), 3); // clamped
+        assert_eq!(stage_for_progress(0.5, 1), 0);
+    }
+
+    #[test]
+    fn unit_gains_are_exact_passthrough() {
+        let inner = Algorithmic::relu();
+        let wrapped = MismatchedProvider::new(Box::new(Algorithmic::relu()), vec![]);
+        let unit = MismatchedProvider::new(Box::new(Algorithmic::relu()), vec![1.0; 4]);
+        let x = [0.7, -0.3, 1.1];
+        assert_eq!(wrapped.h(&x, 1.0), inner.h(&x, 1.0));
+        assert_eq!(unit.h(&x, 1.0), inner.h(&x, 1.0));
+        assert!(wrapped.label().contains("mismatched"));
+    }
+
+    #[test]
+    fn nonunit_gains_perturb_the_solve() {
+        let inner = Algorithmic::relu();
+        let skew = MismatchedProvider::new(Box::new(Algorithmic::relu()), vec![1.05, 0.95]);
+        assert_eq!(skew.gains().len(), 2);
+        let x = [0.7, -0.3, 1.1];
+        let nominal = inner.h(&x, 1.0);
+        let shifted = skew.h(&x, 1.0);
+        assert_ne!(shifted, nominal);
+        // a 5% input skew moves the solution by O(percent), not wildly
+        assert!((shifted - nominal).abs() < 0.2 * nominal.abs().max(1.0));
+    }
+
+    #[test]
+    fn drifting_provider_switches_stage_mid_run() {
+        let p = DriftingHProvider::new(
+            vec![
+                (27.0, Box::new(Const(1.0))),
+                (60.0, Box::new(Const(2.0))),
+                (100.0, Box::new(Const(3.0))),
+            ],
+            5,
+        );
+        assert_eq!(p.temperatures(), vec![27.0, 60.0, 100.0]);
+        let mut seen = Vec::new();
+        for _ in 0..17 {
+            seen.push(p.h(&[0.0], 1.0));
+        }
+        assert_eq!(&seen[..5], &[1.0; 5]);
+        assert_eq!(&seen[5..10], &[2.0; 5]);
+        // last stage holds past the end of the schedule
+        assert_eq!(&seen[10..], &[3.0; 7]);
+        assert_eq!(p.calls(), 17);
+        assert_eq!(p.current_stage(), 2);
+        assert!(p.label().contains("27") && p.label().contains("100"));
+    }
+}

@@ -1,0 +1,29 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! A [`FaultPlan`] is a seeded, JSON-serializable composition of
+//! **analog** faults (Pelgrom mirror-gain mismatch, junction-temperature
+//! drift, stuck multiplier-grid cells) and **infrastructure** faults
+//! (engine panics, injected latency, submit storms).  The [`chaos`]
+//! campaign runner replays a plan end to end — faulted [`crate::nn::batch::BatchKernel`]s
+//! served through a [`crate::coordinator::Router`] at both paper corners,
+//! plus a storm against fault-gated synthetic engines — and emits a
+//! [`ChaosReport`] whose canonical serialization is a pure function of
+//! the plan: identical seeds replay bit-identically.
+//!
+//! Layering: `faults` sits on top of `device`, `sac`, `nn`, `runtime`
+//! and `coordinator`; nothing below depends on it.  The CLI `chaos`
+//! subcommand and `tests/chaos.rs` are the consumers.
+
+pub mod chaos;
+pub mod drift;
+pub mod plan;
+
+pub use chaos::{
+    chaos_corners, chaos_grid, chaos_net, eval_features, run_chaos, run_corner, run_infra,
+    ChaosConfig, ChaosReport, CornerReport, InfraReport, DRAIN_BOUND_SECS,
+    MEAN_DEGRADATION_ENVELOPE, WORST_DEGRADATION_ENVELOPE,
+};
+pub use drift::{
+    stage_for_progress, temperature_schedule, DriftingHProvider, MismatchedProvider,
+};
+pub use plan::{AnalogFault, DriftKind, FaultPlan, InfraFault};

@@ -1,0 +1,376 @@
+//! Seeded, serializable fault plans.
+//!
+//! A [`FaultPlan`] is the unit of chaos replay: one seed plus a list of
+//! analog faults (Pelgrom mismatch, temperature drift, stuck lookup cells)
+//! and infrastructure faults (engine panics, latency injection, submit
+//! storms).  Plans round-trip through `util::json` so a failing CI run can
+//! upload its plan and any machine can replay it bit-identically
+//! (`sac chaos --plan plan.json`).  DESIGN.md §8 documents the schema.
+//!
+//! The seed is stored as a JSON number; keep seeds below 2^53 so the f64
+//! round-trip is lossless (the harness's defaults are small integers).
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::json::{self, Json};
+
+/// Temperature drift trajectory shape (Sec. VI's temperature sweeps).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DriftKind {
+    /// linear ramp `from_c → to_c` over the run
+    Ramp,
+    /// abrupt step: first half at `from_c`, second half at `to_c`
+    Step,
+}
+
+impl DriftKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            DriftKind::Ramp => "ramp",
+            DriftKind::Step => "step",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<DriftKind> {
+        match s {
+            "ramp" => Ok(DriftKind::Ramp),
+            "step" => Ok(DriftKind::Step),
+            other => bail!("unknown drift kind {other:?} (expected \"ramp\" or \"step\")"),
+        }
+    }
+}
+
+/// Faults acting on the analog substrate an engine computes with.
+#[derive(Clone, Debug, PartialEq)]
+pub enum AnalogFault {
+    /// Pelgrom mismatch on the input mirrors, sigmas scaled by
+    /// `sigma_scale` (1.0 = paper-calibrated A_VT / A_β).
+    Mismatch { sigma_scale: f64 },
+    /// Temperature drift applied over the run, quantized to `steps`
+    /// stages (each stage re-solves the corner's cell tables).
+    TempDrift {
+        kind: DriftKind,
+        from_c: f64,
+        to_c: f64,
+        steps: usize,
+    },
+    /// Stuck-at storage cells in the multiplier lookup grid: a `fraction`
+    /// of samples forced to `value` (0.0 = dead cell).
+    StuckCells { fraction: f64, value: f64 },
+}
+
+/// Faults acting on the serving infrastructure around the engines.
+#[derive(Clone, Debug, PartialEq)]
+pub enum InfraFault {
+    /// One router lane's engine panics on every batch past `after_batches`.
+    EnginePanic { after_batches: u64 },
+    /// One router lane's engine sleeps `delay_us` before every batch.
+    SlowEngine { delay_us: u64 },
+    /// Concurrent submit storm: `submitters` threads pushing `requests`
+    /// requests total, round-robin across all lanes.
+    SubmitStorm { submitters: usize, requests: usize },
+}
+
+/// One replayable chaos scenario (see module docs).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultPlan {
+    pub seed: u64,
+    pub analog: Vec<AnalogFault>,
+    pub infra: Vec<InfraFault>,
+}
+
+impl AnalogFault {
+    fn to_json(&self) -> Json {
+        match self {
+            AnalogFault::Mismatch { sigma_scale } => Json::obj(vec![
+                ("kind", Json::Str("mismatch".into())),
+                ("sigma_scale", Json::Num(*sigma_scale)),
+            ]),
+            AnalogFault::TempDrift {
+                kind,
+                from_c,
+                to_c,
+                steps,
+            } => Json::obj(vec![
+                ("kind", Json::Str("temp_drift".into())),
+                ("drift", Json::Str(kind.name().into())),
+                ("from_c", Json::Num(*from_c)),
+                ("to_c", Json::Num(*to_c)),
+                ("steps", Json::Num(*steps as f64)),
+            ]),
+            AnalogFault::StuckCells { fraction, value } => Json::obj(vec![
+                ("kind", Json::Str("stuck_cells".into())),
+                ("fraction", Json::Num(*fraction)),
+                ("value", Json::Num(*value)),
+            ]),
+        }
+    }
+
+    fn from_json(j: &Json) -> Result<AnalogFault> {
+        match j.get("kind")?.as_str()? {
+            "mismatch" => Ok(AnalogFault::Mismatch {
+                sigma_scale: j.get("sigma_scale")?.as_f64()?,
+            }),
+            "temp_drift" => Ok(AnalogFault::TempDrift {
+                kind: DriftKind::parse(j.get("drift")?.as_str()?)?,
+                from_c: j.get("from_c")?.as_f64()?,
+                to_c: j.get("to_c")?.as_f64()?,
+                steps: j.get("steps")?.as_usize()?,
+            }),
+            "stuck_cells" => Ok(AnalogFault::StuckCells {
+                fraction: j.get("fraction")?.as_f64()?,
+                value: j.get("value")?.as_f64()?,
+            }),
+            other => Err(anyhow!("unknown analog fault kind {other:?}")),
+        }
+    }
+}
+
+impl InfraFault {
+    fn to_json(&self) -> Json {
+        match self {
+            InfraFault::EnginePanic { after_batches } => Json::obj(vec![
+                ("kind", Json::Str("engine_panic".into())),
+                ("after_batches", Json::Num(*after_batches as f64)),
+            ]),
+            InfraFault::SlowEngine { delay_us } => Json::obj(vec![
+                ("kind", Json::Str("slow_engine".into())),
+                ("delay_us", Json::Num(*delay_us as f64)),
+            ]),
+            InfraFault::SubmitStorm {
+                submitters,
+                requests,
+            } => Json::obj(vec![
+                ("kind", Json::Str("submit_storm".into())),
+                ("submitters", Json::Num(*submitters as f64)),
+                ("requests", Json::Num(*requests as f64)),
+            ]),
+        }
+    }
+
+    fn from_json(j: &Json) -> Result<InfraFault> {
+        match j.get("kind")?.as_str()? {
+            "engine_panic" => Ok(InfraFault::EnginePanic {
+                after_batches: j.get("after_batches")?.as_usize()? as u64,
+            }),
+            "slow_engine" => Ok(InfraFault::SlowEngine {
+                delay_us: j.get("delay_us")?.as_usize()? as u64,
+            }),
+            "submit_storm" => Ok(InfraFault::SubmitStorm {
+                submitters: j.get("submitters")?.as_usize()?,
+                requests: j.get("requests")?.as_usize()?,
+            }),
+            other => Err(anyhow!("unknown infra fault kind {other:?}")),
+        }
+    }
+}
+
+impl FaultPlan {
+    /// Empty plan (no faults) with the given seed.
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            analog: Vec::new(),
+            infra: Vec::new(),
+        }
+    }
+
+    /// The default chaos scenario the CI smoke job and the chaos suite
+    /// replay: paper-calibrated mismatch, a 27→60 °C ramp in four stages,
+    /// a sprinkle of dead lookup cells, plus a panicking lane, a slow
+    /// lane, and a concurrent submit storm.
+    pub fn default_plan(seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            analog: vec![
+                AnalogFault::Mismatch { sigma_scale: 1.0 },
+                AnalogFault::TempDrift {
+                    kind: DriftKind::Ramp,
+                    from_c: 27.0,
+                    to_c: 60.0,
+                    steps: 4,
+                },
+                AnalogFault::StuckCells {
+                    fraction: 0.003,
+                    value: 0.0,
+                },
+            ],
+            infra: vec![
+                InfraFault::EnginePanic { after_batches: 3 },
+                InfraFault::SlowEngine { delay_us: 1500 },
+                InfraFault::SubmitStorm {
+                    submitters: 4,
+                    requests: 96,
+                },
+            ],
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("seed", Json::Num(self.seed as f64)),
+            (
+                "analog",
+                Json::Arr(self.analog.iter().map(|f| f.to_json()).collect()),
+            ),
+            (
+                "infra",
+                Json::Arr(self.infra.iter().map(|f| f.to_json()).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<FaultPlan> {
+        Ok(FaultPlan {
+            seed: j.get("seed")?.as_usize()? as u64,
+            analog: j
+                .get("analog")?
+                .as_arr()?
+                .iter()
+                .map(AnalogFault::from_json)
+                .collect::<Result<_>>()?,
+            infra: j
+                .get("infra")?
+                .as_arr()?
+                .iter()
+                .map(InfraFault::from_json)
+                .collect::<Result<_>>()?,
+        })
+    }
+
+    /// Parse from JSON text.
+    pub fn parse(text: &str) -> Result<FaultPlan> {
+        FaultPlan::from_json(&json::parse(text)?)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+            .map_err(|e| anyhow!("writing {}: {e}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<FaultPlan> {
+        FaultPlan::from_json(&json::parse_file(path)?)
+    }
+
+    /// Mismatch sigma scale; 0.0 when the plan injects no mismatch.
+    pub fn sigma_scale(&self) -> f64 {
+        self.analog
+            .iter()
+            .find_map(|f| match f {
+                AnalogFault::Mismatch { sigma_scale } => Some(*sigma_scale),
+                _ => None,
+            })
+            .unwrap_or(0.0)
+    }
+
+    /// The drift trajectory, if any.
+    pub fn drift(&self) -> Option<(DriftKind, f64, f64, usize)> {
+        self.analog.iter().find_map(|f| match f {
+            AnalogFault::TempDrift {
+                kind,
+                from_c,
+                to_c,
+                steps,
+            } => Some((*kind, *from_c, *to_c, (*steps).max(1))),
+            _ => None,
+        })
+    }
+
+    /// Stuck-cell injection `(fraction, value)`, if any.
+    pub fn stuck(&self) -> Option<(f64, f64)> {
+        self.analog.iter().find_map(|f| match f {
+            AnalogFault::StuckCells { fraction, value } => Some((*fraction, *value)),
+            _ => None,
+        })
+    }
+
+    /// Panic trigger for the panicking lane, if any.
+    pub fn panic_after(&self) -> Option<u64> {
+        self.infra.iter().find_map(|f| match f {
+            InfraFault::EnginePanic { after_batches } => Some(*after_batches),
+            _ => None,
+        })
+    }
+
+    /// Latency injection for the slow lane, if any.
+    pub fn slow_delay(&self) -> Option<std::time::Duration> {
+        self.infra.iter().find_map(|f| match f {
+            InfraFault::SlowEngine { delay_us } => {
+                Some(std::time::Duration::from_micros(*delay_us))
+            }
+            _ => None,
+        })
+    }
+
+    /// Submit-storm shape `(submitters, total requests)`, if any.
+    pub fn storm(&self) -> Option<(usize, usize)> {
+        self.infra.iter().find_map(|f| match f {
+            InfraFault::SubmitStorm {
+                submitters,
+                requests,
+            } => Some(((*submitters).max(1), *requests)),
+            _ => None,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_plan_roundtrips_through_json_text() {
+        let plan = FaultPlan::default_plan(20260808);
+        let text = plan.to_json().to_string();
+        let back = FaultPlan::parse(&text).unwrap();
+        assert_eq!(back, plan);
+        // canonical (BTreeMap-sorted) serialization is stable
+        assert_eq!(back.to_json().to_string(), text);
+    }
+
+    #[test]
+    fn accessors_reflect_faults() {
+        let plan = FaultPlan::default_plan(1);
+        assert_eq!(plan.sigma_scale(), 1.0);
+        let (kind, from_c, to_c, steps) = plan.drift().unwrap();
+        assert_eq!(kind, DriftKind::Ramp);
+        assert_eq!((from_c, to_c, steps), (27.0, 60.0, 4));
+        assert_eq!(plan.stuck().unwrap(), (0.003, 0.0));
+        assert_eq!(plan.panic_after(), Some(3));
+        assert_eq!(plan.slow_delay(), Some(std::time::Duration::from_micros(1500)));
+        assert_eq!(plan.storm(), Some((4, 96)));
+
+        let empty = FaultPlan::new(2);
+        assert_eq!(empty.sigma_scale(), 0.0);
+        assert!(empty.drift().is_none());
+        assert!(empty.stuck().is_none());
+        assert!(empty.panic_after().is_none());
+        assert!(empty.slow_delay().is_none());
+        assert!(empty.storm().is_none());
+    }
+
+    #[test]
+    fn unknown_fault_kinds_rejected() {
+        assert!(FaultPlan::parse(
+            r#"{"seed": 1, "analog": [{"kind": "gamma_ray"}], "infra": []}"#
+        )
+        .is_err());
+        assert!(FaultPlan::parse(
+            r#"{"seed": 1, "analog": [], "infra": [{"kind": "meteor"}]}"#
+        )
+        .is_err());
+        assert!(DriftKind::parse("sawtooth").is_err());
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join("sac_fault_plan_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("plan.json");
+        let plan = FaultPlan::default_plan(42);
+        plan.save(&path).unwrap();
+        assert_eq!(FaultPlan::load(&path).unwrap(), plan);
+    }
+}

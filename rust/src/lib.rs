@@ -16,6 +16,9 @@
 //! 4. **Serving** — [`runtime`] executes the AOT-exported graphs natively;
 //!    [`coordinator`] batches, routes and serves them across tasks and
 //!    worker threads.
+//! 5. **Chaos** — [`faults`]: deterministic fault-injection plans
+//!    (mismatch, temperature drift, stuck cells, panics, storms) replayed
+//!    against the serving stack with bit-identical reports per seed.
 //!
 //! [`analysis`] and [`repro`] regenerate the paper's figures/tables;
 //! [`data`] loads the exported datasets/weights; [`util`] holds the
@@ -47,3 +50,4 @@ pub mod nn;
 pub mod repro;
 pub mod runtime;
 pub mod coordinator;
+pub mod faults;

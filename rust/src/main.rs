@@ -6,6 +6,7 @@
 //! bench-serve           synthetic router throughput bench (no artifacts)
 //! characterize <cell>   DC sweep of a standard cell across corners
 //! mc <cell>             Monte-Carlo mismatch campaign
+//! chaos                 replay a fault-injection plan against the stack
 //! info                  stack/PDK/artifact status
 //! ```
 
@@ -22,6 +23,7 @@ use sac::cells::activations::CellKind;
 use sac::cells::CircuitCorner;
 use sac::coordinator::{synthetic_engine_with_mode, Engine, Router, RouterConfig};
 use sac::data::Dataset;
+use sac::faults::{run_chaos, ChaosConfig, FaultPlan};
 use sac::pdk::{regime::Regime, ProcessNode};
 use sac::repro::{self, ReproOpts};
 use sac::runtime::{default_artifacts_dir, ExecMode, Runtime};
@@ -39,9 +41,11 @@ USAGE:
                   [--engine scalar|batched]
   sac characterize <cell> [--node NAME] [--regime WI|MI|SI] [--temp C] [--out results]
   sac mc <cell> [--node NAME] [--trials N]
+  sac chaos [--plan FILE | --seed S] [--trials N] [--workers N] [--out results] [--check]
   sac info [--artifacts DIR]
 
 engines: batched (default; columnar lookup-grid engine) | scalar (per-row GMP solves)
+env: SAC_MC_TRIALS / SAC_MC_SEED override the mc campaign defaults (flags win)
 
 ids: fig1 fig2a fig3 fig4 fig5 fig7 fig8 fig10 fig12 fig13 fig15
      table1 table2 table3 table4 table5 | all
@@ -62,13 +66,14 @@ fn main() {
 }
 
 fn dispatch(argv: &[String]) -> Result<()> {
-    let args = Args::parse(argv, &["verbose"])?;
+    let args = Args::parse(argv, &["verbose", "check"])?;
     match args.command.as_str() {
         "repro" => cmd_repro(&args),
         "serve" => cmd_serve(&args),
         "bench-serve" => cmd_bench_serve(&args),
         "characterize" => cmd_characterize(&args),
         "mc" => cmd_mc(&args),
+        "chaos" => cmd_chaos(&args),
         "info" => cmd_info(&args),
         other => bail!("unknown command {other:?}\n{USAGE}"),
     }
@@ -274,15 +279,82 @@ fn cmd_mc(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow::anyhow!("unknown cell {cell:?}"))?;
     let node = ProcessNode::by_name(args.get_or("node", "180nm"))
         .ok_or_else(|| anyhow::anyhow!("unknown node"))?;
+    // SAC_MC_TRIALS / SAC_MC_SEED env overrides sit between the library
+    // defaults and explicit CLI flags
+    let base = mc::McConfig::from_env();
     let cfg = mc::McConfig {
-        trials: args.get_usize("trials", 40)?,
-        ..Default::default()
+        trials: args.get_usize("trials", base.trials)?,
+        ..base
     };
     let r = mc::run_cell_mc(kind, node, Regime::WeakInversion, &cfg);
     println!(
         "MC {} @ {} (WI, {} trials): max deviation {:.2}% of full scale",
         cell, node.name, cfg.trials, r.max_pct_dev
     );
+    Ok(())
+}
+
+/// Replay a fault-injection plan against the serving stack and enforce
+/// the degradation envelope + router liveness invariants (DESIGN.md §8).
+/// `--check` runs the campaign twice and insists the canonical reports
+/// are bit-identical — the determinism contract CI enforces on every PR.
+fn cmd_chaos(args: &Args) -> Result<()> {
+    let out = PathBuf::from(args.get_or("out", "results"));
+    std::fs::create_dir_all(&out)?;
+    let plan = match args.get("plan") {
+        Some(path) => FaultPlan::load(&PathBuf::from(path))?,
+        None => FaultPlan::default_plan(args.get_usize("seed", 20220508)? as u64),
+    };
+    let cfg = ChaosConfig {
+        trials: args.get_usize("trials", 12)?.max(1),
+        workers: args.get_usize("workers", 4)?.max(1),
+        ..Default::default()
+    };
+    println!(
+        "chaos: seed {} — {} analog + {} infra fault(s), {} trial(s)/corner, {} worker(s)",
+        plan.seed,
+        plan.analog.len(),
+        plan.infra.len(),
+        cfg.trials,
+        cfg.workers
+    );
+    let t0 = Instant::now();
+    let report = run_chaos(&plan, &cfg)?;
+    let wall = t0.elapsed().as_secs_f64();
+    for c in &report.corners {
+        println!(
+            "  {}/{}: mean agreement {:.4}, worst {:.4}, temps {:?}",
+            c.node, c.regime, c.mean_agreement, c.worst_agreement, c.trial_temp_c
+        );
+    }
+    let i = &report.infra;
+    println!(
+        "  infra: {} submitted, {} answered, {} failed, drain {:.1}ms, \
+         exactly-once {}, panic observed {}",
+        i.submitted, i.answered, i.failed, i.drain_ms, i.resolved_exactly_once, i.panic_observed
+    );
+    if args.has("check") {
+        let replay = run_chaos(&plan, &cfg)?;
+        ensure!(
+            replay.canonical_json() == report.canonical_json(),
+            "replay of seed {} diverged from the first run — determinism contract broken",
+            plan.seed
+        );
+        println!("  replay check: bit-identical");
+    }
+    let plan_path = out.join("chaos_plan.json");
+    plan.save(&plan_path)?;
+    let report_path = out.join("chaos_report.json");
+    std::fs::write(&report_path, report.canonical_json())?;
+    println!("wrote {} and {}", plan_path.display(), report_path.display());
+    let violations = report.violations();
+    if !violations.is_empty() {
+        for v in &violations {
+            eprintln!("VIOLATION: {v}");
+        }
+        bail!("{} chaos violation(s)", violations.len());
+    }
+    println!("chaos pass in {wall:.1}s");
     Ok(())
 }
 

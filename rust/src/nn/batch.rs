@@ -45,6 +45,7 @@ use anyhow::Result;
 use crate::cells::multiplier::Multiplier;
 use crate::cells::{proto_unit, HProvider};
 use crate::data::TrainedNet;
+use crate::util::rng::Rng;
 
 use super::{Activation, ACT_GAIN};
 
@@ -122,6 +123,18 @@ impl Grid1D {
     pub fn is_empty(&self) -> bool {
         self.values.is_empty()
     }
+
+    /// Sample value at index `i` (fault-injection / diagnostic surface).
+    pub fn value(&self, i: usize) -> f64 {
+        self.values[i]
+    }
+
+    /// Overwrite sample `i` — models a stuck-at / dead storage cell in a
+    /// physical lookup crossbar (`faults::` uses this; never called on the
+    /// nominal serving path).
+    pub fn set(&mut self, i: usize, v: f64) {
+        self.values[i] = v;
+    }
 }
 
 /// Dense lookup grid for the calibrated four-quadrant multiplier
@@ -195,6 +208,20 @@ impl MulGrid {
     /// Number of proto-shape samples backing the grid.
     pub fn points(&self) -> usize {
         self.grid.len()
+    }
+
+    /// Force `round(fraction · points)` randomly chosen proto-shape samples
+    /// to `value` (stuck-at cells).  Draws may collide, so the number of
+    /// *distinct* corrupted cells can be slightly lower than the returned
+    /// write count.  Deterministic given `rng`'s state.
+    pub fn inject_stuck(&mut self, rng: &mut Rng, fraction: f64, value: f64) -> usize {
+        let n = self.grid.len();
+        let k = ((n as f64) * fraction).round() as usize;
+        for _ in 0..k {
+            let i = rng.below(n);
+            self.grid.set(i, value);
+        }
+        k
     }
 }
 
@@ -296,6 +323,39 @@ impl BatchKernel {
         Ok(BatchKernel::new(provider, act, net.splines, net.c, cfg))
     }
 
+    /// Like [`BatchKernel::new`] but with a pre-calibrated multiplier:
+    /// grids are sampled from `provider` while the operating point / scale
+    /// come from `mult`.  This is the chip-calibration-then-drift semantics
+    /// the fault harness needs — calibrate once on the nominal corner, then
+    /// replay that calibration on a perturbed backend.
+    pub fn with_multiplier(
+        provider: Box<dyn HProvider + Send + Sync>,
+        mult: Multiplier,
+        act: Activation,
+        splines: usize,
+        c: f64,
+        cfg: &GridConfig,
+    ) -> BatchKernel {
+        debug_assert_eq!(mult.s, splines, "multiplier/spline-count mismatch");
+        let mul_grid = MulGrid::build(provider.as_ref(), &mult, cfg);
+        let act_grid = ActGrid::build(provider.as_ref(), act, splines, cfg);
+        BatchKernel {
+            provider,
+            mult,
+            act,
+            splines,
+            c,
+            mul_grid,
+            act_grid,
+        }
+    }
+
+    /// Stuck-at fault injection into the multiplier lookup grid (see
+    /// [`MulGrid::inject_stuck`]); returns the write count.
+    pub fn inject_stuck_cells(&mut self, rng: &mut Rng, fraction: f64, value: f64) -> usize {
+        self.mul_grid.inject_stuck(rng, fraction, value)
+    }
+
     /// The multiplier calibration the grids were sampled with (identical
     /// to what the scalar path computes for the same backend).
     pub fn multiplier(&self) -> &Multiplier {
@@ -304,6 +364,16 @@ impl BatchKernel {
 
     pub fn activation(&self) -> Activation {
         self.act
+    }
+
+    /// Spline count the kernel was sampled for.
+    pub fn splines(&self) -> usize {
+        self.splines
+    }
+
+    /// Shape parameter C the kernel was sampled for.
+    pub fn c(&self) -> f64 {
+        self.c
     }
 
     /// Evaluate eq. 40 over a whole batch.
@@ -519,6 +589,46 @@ mod tests {
         assert_eq!(&full[..4], &live[..]);
         // zero rows is a clean no-op
         assert!(kernel.forward_net(&net, &x, 0).is_empty());
+    }
+
+    #[test]
+    fn with_multiplier_replays_calibration_and_stuck_cells_perturb() {
+        let net = toy_net();
+        let p = Algorithmic::relu();
+        let act = net.activation_kind().unwrap();
+        let cfg = GridConfig::default();
+        let mult = Multiplier::calibrate(&p, net.splines, net.c);
+        let fresh = BatchKernel::for_net(Box::new(Algorithmic::relu()), &net, &cfg).unwrap();
+        let replay = BatchKernel::with_multiplier(
+            Box::new(Algorithmic::relu()),
+            mult.clone(),
+            act,
+            net.splines,
+            net.c,
+            &cfg,
+        );
+        assert_eq!(replay.splines(), net.splines);
+        assert_eq!(replay.c(), net.c);
+        // same backend + same calibration → bit-identical outputs
+        let x: Vec<f32> = vec![0.5, -0.5, -0.25, 0.75];
+        let want = fresh.forward_net(&net, &x, 2);
+        assert_eq!(replay.forward_net(&net, &x, 2), want);
+
+        // zero-fraction injection is a no-op
+        let mut faulty = BatchKernel::with_multiplier(
+            Box::new(Algorithmic::relu()),
+            mult.clone(),
+            act,
+            net.splines,
+            net.c,
+            &cfg,
+        );
+        assert_eq!(faulty.inject_stuck_cells(&mut Rng::new(3), 0.0, 0.0), 0);
+        assert_eq!(faulty.forward_net(&net, &x, 2), want);
+        // a dense stuck-at-zero sweep must visibly perturb the output
+        let writes = faulty.inject_stuck_cells(&mut Rng::new(3), 0.05, 0.0);
+        assert!(writes > 100, "writes={writes}");
+        assert_ne!(faulty.forward_net(&net, &x, 2), want);
     }
 
     #[test]

@@ -1,0 +1,130 @@
+//! Infrastructure fault injection for executables.
+//!
+//! A [`FaultyExec`] composes with any [`crate::runtime::Executable`] via
+//! `Executable::with_faults`: before each batch execution it can sleep
+//! (latency injection ahead of the router's deadline flusher), panic
+//! (worker-pool crash path — the router's `catch_unwind` must convert it
+//! into per-request failures, never a deadlock), or return an error
+//! (clean engine failure).  The call counter is shared across clones
+//! (`Arc` field on the executable), so a router lane's workers observe one
+//! global batch count — "panic after K batches" means K *total*, not K per
+//! worker.
+//!
+//! All triggers are deterministic functions of the batch ordinal; the only
+//! scheduling dependence is which *requests* land in the failing batches,
+//! which is why the chaos report's canonical form aggregates per-request
+//! outcomes into order-independent invariants (see `faults::chaos`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+/// Deterministic per-batch fault trigger (see module docs).
+#[derive(Debug, Default)]
+pub struct FaultyExec {
+    /// sleep this long before every batch (latency injection)
+    delay: Option<Duration>,
+    /// panic on batch ordinals `>= k` (0 = every batch panics)
+    panic_after: Option<u64>,
+    /// return an error on batch ordinals `>= k`
+    fail_after: Option<u64>,
+    /// batches started so far (shared across executable clones)
+    calls: AtomicU64,
+}
+
+impl FaultyExec {
+    /// Pure latency injection: every batch sleeps `delay` first.
+    pub fn slow(delay: Duration) -> FaultyExec {
+        FaultyExec {
+            delay: Some(delay),
+            ..FaultyExec::default()
+        }
+    }
+
+    /// Panic on every batch once `after` batches have run.
+    pub fn panicking(after: u64) -> FaultyExec {
+        FaultyExec {
+            panic_after: Some(after),
+            ..FaultyExec::default()
+        }
+    }
+
+    /// Return a clean error on every batch once `after` batches have run.
+    pub fn failing(after: u64) -> FaultyExec {
+        FaultyExec {
+            fail_after: Some(after),
+            ..FaultyExec::default()
+        }
+    }
+
+    /// Add latency injection to an existing trigger.
+    pub fn with_delay(mut self, delay: Duration) -> FaultyExec {
+        self.delay = Some(delay);
+        self
+    }
+
+    /// Batches started so far.
+    pub fn calls(&self) -> u64 {
+        self.calls.load(Ordering::SeqCst)
+    }
+
+    /// Fault gate, invoked by `Executable::run_f32_rows` ahead of the real
+    /// execution.  Returns `Ok(())` when the batch should proceed.
+    pub fn before_run(&self) -> Result<()> {
+        let n = self.calls.fetch_add(1, Ordering::SeqCst);
+        if let Some(d) = self.delay {
+            std::thread::sleep(d);
+        }
+        if let Some(k) = self.panic_after {
+            if n >= k {
+                panic!("fault injection: engine panic on batch {n} (trigger: after {k})");
+            }
+        }
+        if let Some(k) = self.fail_after {
+            if n >= k {
+                bail!("fault injection: engine failure on batch {n} (trigger: after {k})");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_transparent() {
+        let f = FaultyExec::default();
+        for _ in 0..10 {
+            f.before_run().unwrap();
+        }
+        assert_eq!(f.calls(), 10);
+    }
+
+    #[test]
+    fn fail_after_triggers_on_exact_ordinal() {
+        let f = FaultyExec::failing(2);
+        assert!(f.before_run().is_ok());
+        assert!(f.before_run().is_ok());
+        assert!(f.before_run().is_err());
+        assert!(f.before_run().is_err());
+        assert_eq!(f.calls(), 4);
+    }
+
+    #[test]
+    fn panic_after_zero_panics_immediately() {
+        let f = FaultyExec::panicking(0);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f.before_run()));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn delay_injects_latency() {
+        let f = FaultyExec::slow(Duration::from_millis(5));
+        let t0 = std::time::Instant::now();
+        f.before_run().unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(5));
+    }
+}

@@ -16,16 +16,20 @@
 //! clean checkout.
 
 pub mod artifact;
+pub mod faulty;
 pub mod native;
 
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use anyhow::{anyhow, Context, Result};
 
 pub use artifact::{EntrySpec, Manifest, ParamSpec};
+pub use faulty::FaultyExec;
 pub use native::{ExecMode, Graph, MlpSpec, NativeExec};
 
 use crate::data::TrainedNet;
+use crate::nn::batch::BatchKernel;
 use crate::util::json::Json;
 
 /// A loaded, ready-to-execute artifact entry.
@@ -34,6 +38,9 @@ pub struct Executable {
     pub name: String,
     pub spec: EntrySpec,
     exec: NativeExec,
+    /// Optional fault-injection gate, shared across clones so "after K
+    /// batches" counts globally over all router workers.
+    faults: Option<Arc<FaultyExec>>,
 }
 
 /// The runtime: the artifact directory plus its parsed manifest.
@@ -78,6 +85,7 @@ impl Runtime {
             name: entry.to_string(),
             spec,
             exec,
+            faults: None,
         })
     }
 }
@@ -173,59 +181,38 @@ impl Executable {
         batch: usize,
         mode: ExecMode,
     ) -> Result<Executable> {
-        let nl = net.n_layers();
-        let mut params = Vec::with_capacity(2 * nl + 1);
-        for li in 0..nl {
-            params.push(ParamSpec {
-                name: format!("w{}", li + 1),
-                shape: vec![net.sizes[li], net.sizes[li + 1]],
-                dtype: "f32".into(),
-            });
-            params.push(ParamSpec {
-                name: format!("b{}", li + 1),
-                shape: vec![net.sizes[li + 1]],
-                dtype: "f32".into(),
-            });
-        }
-        params.push(ParamSpec {
-            name: "x".into(),
-            shape: vec![batch, net.sizes[0]],
-            dtype: "f32".into(),
-        });
-        let outputs = vec![ParamSpec {
-            name: "logits".into(),
-            shape: vec![batch, *net.sizes.last().unwrap()],
-            dtype: "f32".into(),
-        }];
-        let meta = Json::obj(vec![
-            (
-                "sizes",
-                Json::Arr(net.sizes.iter().map(|&s| Json::Num(s as f64)).collect()),
-            ),
-            ("splines", Json::Num(net.splines as f64)),
-            ("c", Json::Num(net.c)),
-            ("activation", Json::Str(net.activation.clone())),
-        ]);
-        let exec = NativeExec::mlp_with_mode(
-            MlpSpec {
-                sizes: net.sizes.clone(),
-                splines: net.splines,
-                c: net.c,
-                activation: net.activation.clone(),
-                batch,
-            },
-            mode,
-        )?;
+        let exec = NativeExec::mlp_with_mode(mlp_spec(net, batch), mode)?;
         Ok(Executable {
             name: format!("{}_mlp", net.task),
-            spec: EntrySpec {
-                file: String::new(),
-                params,
-                outputs,
-                meta,
-            },
+            spec: mlp_entry_spec(net, batch),
             exec,
+            faults: None,
         })
+    }
+
+    /// [`Executable::native_mlp`] driven by a caller-supplied batched
+    /// kernel (corner backends, fault-injected grids) — the fault
+    /// harness's analog-corner path.
+    pub fn native_mlp_with_kernel(
+        net: &TrainedNet,
+        batch: usize,
+        kernel: Arc<BatchKernel>,
+    ) -> Result<Executable> {
+        let exec = NativeExec::mlp_with_kernel(mlp_spec(net, batch), kernel)?;
+        Ok(Executable {
+            name: format!("{}_mlp", net.task),
+            spec: mlp_entry_spec(net, batch),
+            exec,
+            faults: None,
+        })
+    }
+
+    /// Attach an infrastructure fault gate: `run_f32_rows` consults it
+    /// before every batch.  The gate is `Arc`-shared, so clones (router
+    /// lane workers) advance one global batch counter.
+    pub fn with_faults(mut self, faults: Arc<FaultyExec>) -> Executable {
+        self.faults = Some(faults);
+        self
     }
 
     /// Raise intra-batch row parallelism (single-task paths only; the
@@ -270,6 +257,9 @@ impl Executable {
                 ));
             }
         }
+        if let Some(faults) = &self.faults {
+            faults.before_run()?;
+        }
         self.exec.run_rows(params, rows)
     }
 
@@ -280,6 +270,61 @@ impl Executable {
             .iter()
             .map(|o| o.shape.iter().product::<usize>())
             .sum()
+    }
+}
+
+/// Graph spec for an in-memory MLP executable (no artifact directory).
+fn mlp_spec(net: &TrainedNet, batch: usize) -> MlpSpec {
+    MlpSpec {
+        sizes: net.sizes.clone(),
+        splines: net.splines,
+        c: net.c,
+        activation: net.activation.clone(),
+        batch,
+    }
+}
+
+/// Manifest-equivalent entry spec for an in-memory MLP executable, so the
+/// artifact path and the in-memory path share one validation surface.
+fn mlp_entry_spec(net: &TrainedNet, batch: usize) -> EntrySpec {
+    let nl = net.n_layers();
+    let mut params = Vec::with_capacity(2 * nl + 1);
+    for li in 0..nl {
+        params.push(ParamSpec {
+            name: format!("w{}", li + 1),
+            shape: vec![net.sizes[li], net.sizes[li + 1]],
+            dtype: "f32".into(),
+        });
+        params.push(ParamSpec {
+            name: format!("b{}", li + 1),
+            shape: vec![net.sizes[li + 1]],
+            dtype: "f32".into(),
+        });
+    }
+    params.push(ParamSpec {
+        name: "x".into(),
+        shape: vec![batch, net.sizes[0]],
+        dtype: "f32".into(),
+    });
+    let outputs = vec![ParamSpec {
+        name: "logits".into(),
+        shape: vec![batch, *net.sizes.last().unwrap()],
+        dtype: "f32".into(),
+    }];
+    let meta = Json::obj(vec![
+        (
+            "sizes",
+            Json::Arr(net.sizes.iter().map(|&s| Json::Num(s as f64)).collect()),
+        ),
+        ("splines", Json::Num(net.splines as f64)),
+        ("c", Json::Num(net.c)),
+        ("activation", Json::Str(net.activation.clone())),
+    ]);
+    EntrySpec {
+        file: String::new(),
+        params,
+        outputs,
+        meta,
     }
 }
 
@@ -406,6 +451,30 @@ mod tests {
         // same manifest-facing spec either way
         assert_eq!(batched.spec.params.len(), scalar.spec.params.len());
         assert_eq!(batched.output_len(), scalar.output_len());
+    }
+
+    #[test]
+    fn faulty_executable_gates_runs_and_shares_counter_across_clones() {
+        let net = toy_net();
+        let gate = Arc::new(FaultyExec::failing(2));
+        let exe = Executable::native_mlp(&net, 2)
+            .unwrap()
+            .with_faults(gate.clone());
+        let clone = exe.clone();
+        let bufs: Vec<Vec<f32>> = vec![
+            net.weights[0].iter().map(|&v| v as f32).collect(),
+            net.biases[0].iter().map(|&v| v as f32).collect(),
+            net.weights[1].iter().map(|&v| v as f32).collect(),
+            net.biases[1].iter().map(|&v| v as f32).collect(),
+            vec![0.1; 4],
+        ];
+        let refs: Vec<&[f32]> = bufs.iter().map(|b| b.as_slice()).collect();
+        // the clone's batch consumes the shared budget
+        assert!(exe.run_f32(&refs).is_ok());
+        assert!(clone.run_f32(&refs).is_ok());
+        let err = exe.run_f32(&refs).unwrap_err();
+        assert!(err.to_string().contains("fault injection"), "{err:#}");
+        assert_eq!(gate.calls(), 3);
     }
 
     #[test]

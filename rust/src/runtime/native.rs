@@ -159,6 +159,40 @@ impl NativeExec {
         })
     }
 
+    /// Executor for an S-AC MLP graph driven by a caller-supplied batched
+    /// kernel (corner backends, fault-injected grids, …) instead of the
+    /// default `Algorithmic` calibration.  The kernel must match the
+    /// spec's `(activation, splines)`; its multiplier doubles as the
+    /// scalar-fallback calibration.
+    pub fn mlp_with_kernel(spec: MlpSpec, kernel: Arc<BatchKernel>) -> Result<NativeExec> {
+        if spec.sizes.len() < 2 {
+            bail!("mlp needs at least [in, out] sizes, got {:?}", spec.sizes);
+        }
+        let act = Activation::parse(&spec.activation)?;
+        if kernel.activation() != act {
+            bail!(
+                "kernel activation {:?} != spec activation {:?}",
+                kernel.activation(),
+                act
+            );
+        }
+        if kernel.splines() != spec.splines {
+            bail!(
+                "kernel splines {} != spec splines {}",
+                kernel.splines(),
+                spec.splines
+            );
+        }
+        let mult = kernel.multiplier().clone();
+        Ok(NativeExec {
+            graph: Graph::Mlp(spec),
+            mult: Some(mult),
+            act: Some(act),
+            kernel: Some(kernel),
+            par_threads: 1,
+        })
+    }
+
     /// Which execution strategy this executor uses.
     pub fn mode(&self) -> ExecMode {
         if self.kernel.is_some() {
@@ -398,6 +432,53 @@ mod tests {
         };
         assert!(NativeExec::mlp(spec.clone()).is_err());
         assert!(NativeExec::mlp_with_mode(spec, ExecMode::Batched).is_err());
+    }
+
+    #[test]
+    fn mlp_with_kernel_matches_default_batched_and_validates() {
+        let spec = MlpSpec {
+            sizes: vec![2, 3, 2],
+            splines: 3,
+            c: 1.0,
+            activation: "phi1".into(),
+            batch: 4,
+        };
+        let kernel = Arc::new(BatchKernel::new(
+            Box::new(Algorithmic::relu()),
+            Activation::Phi1,
+            3,
+            1.0,
+            &GridConfig::default(),
+        ));
+        let custom = NativeExec::mlp_with_kernel(spec.clone(), kernel).unwrap();
+        assert_eq!(custom.mode(), ExecMode::Batched);
+        let stock = NativeExec::mlp_with_mode(spec.clone(), ExecMode::Batched).unwrap();
+        let w1: Vec<f32> = vec![0.5, -0.25, 0.75, -0.5, 0.25, 0.5];
+        let b1: Vec<f32> = vec![-0.125, 0.0, 0.25];
+        let w2: Vec<f32> = vec![0.5, -0.5, 0.25, -0.25, -0.75, 0.75];
+        let b2: Vec<f32> = vec![0.0, 0.125];
+        let x: Vec<f32> = vec![0.5, -0.5, -0.25, 0.75, 0.1, 0.9, -0.8, -0.3];
+        let bufs: Vec<&[f32]> = vec![&w1, &b1, &w2, &b2, &x];
+        // same backend, same calibration path → bit-identical outputs
+        assert_eq!(custom.run(&bufs).unwrap(), stock.run(&bufs).unwrap());
+
+        // kernel/spec activation or spline disagreement is rejected
+        let relu_kernel = Arc::new(BatchKernel::new(
+            Box::new(Algorithmic::relu()),
+            Activation::Relu,
+            3,
+            1.0,
+            &GridConfig::default(),
+        ));
+        assert!(NativeExec::mlp_with_kernel(spec.clone(), relu_kernel).is_err());
+        let s1_kernel = Arc::new(BatchKernel::new(
+            Box::new(Algorithmic::relu()),
+            Activation::Phi1,
+            1,
+            1.0,
+            &GridConfig::default(),
+        ));
+        assert!(NativeExec::mlp_with_kernel(spec, s1_kernel).is_err());
     }
 
     #[test]

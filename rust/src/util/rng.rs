@@ -187,6 +187,41 @@ mod tests {
     }
 
     #[test]
+    fn adjacent_seeds_give_uncorrelated_gauss_streams() {
+        // The fault-injection harness seeds one stream per trial with
+        // consecutive integers; Pelgrom draws from seed s and s+1 must not
+        // correlate. |pearson| for n iid pairs is ~N(0, 1/sqrt(n)); 0.1 at
+        // n=4096 is a >6-sigma bound, so a failure means real structure.
+        crate::util::propcheck::check(0xC0FFEE, 10, |g| -> Result<(), String> {
+            let seed = g.rng.next_u64();
+            let mut a = Rng::new(seed);
+            let mut b = Rng::new(seed.wrapping_add(1));
+            let n = 4096;
+            let xs: Vec<f64> = (0..n).map(|_| a.gauss()).collect();
+            let ys: Vec<f64> = (0..n).map(|_| b.gauss()).collect();
+            let r = crate::util::stats::pearson(&xs, &ys);
+            crate::prop_assert!(r.abs() < 0.1, "seed={seed} pearson={r}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn adjacent_forks_give_uncorrelated_uniform_streams() {
+        crate::util::propcheck::check(0xBEEF, 10, |g| -> Result<(), String> {
+            let root = Rng::new(g.rng.next_u64());
+            let t = g.rng.below(1000) as u64;
+            let mut a = root.fork(t);
+            let mut b = root.fork(t + 1);
+            let n = 4096;
+            let xs: Vec<f64> = (0..n).map(|_| a.uniform()).collect();
+            let ys: Vec<f64> = (0..n).map(|_| b.uniform()).collect();
+            let r = crate::util::stats::pearson(&xs, &ys);
+            crate::prop_assert!(r.abs() < 0.1, "fork={t} pearson={r}");
+            Ok(())
+        });
+    }
+
+    #[test]
     fn shuffle_permutes() {
         let mut r = Rng::new(9);
         let mut v: Vec<u32> = (0..50).collect();

@@ -1,0 +1,170 @@
+//! Chaos integration suite: seeded fault plans replayed end to end
+//! against the serving stack (ISSUE 6 acceptance).
+//!
+//! What is pinned here:
+//!  * graceful degradation — synthetic-task agreement under
+//!    paper-calibrated mismatch + temperature drift + stuck cells stays
+//!    inside the documented envelope at both paper corners;
+//!  * router liveness — exactly-once delivery, no stranded waiters and a
+//!    bounded drain despite injected panics, latency and submit storms;
+//!  * determinism — identical-seed replays produce bit-identical
+//!    canonical reports, different seeds measurably different ones.
+
+use sac::faults::{
+    run_chaos, run_infra, AnalogFault, ChaosConfig, DriftKind, FaultPlan, InfraFault,
+    MEAN_DEGRADATION_ENVELOPE, WORST_DEGRADATION_ENVELOPE,
+};
+
+fn small_cfg(trials: usize) -> ChaosConfig {
+    ChaosConfig {
+        trials,
+        workers: 3,
+        eval_rows: 24,
+    }
+}
+
+#[test]
+fn chaos_plan_json_roundtrip() {
+    let plan = FaultPlan::default_plan(77);
+    let text = plan.to_json().to_string();
+    let back = FaultPlan::parse(&text).unwrap();
+    assert_eq!(back, plan);
+    // canonical serialization is stable across a round trip
+    assert_eq!(back.to_json().to_string(), text);
+    // and the schema is strict, not lossy
+    assert!(FaultPlan::parse("{\"seed\": 1}").is_err());
+}
+
+#[test]
+fn chaos_default_plan_passes_invariants_and_envelope() {
+    let plan = FaultPlan::default_plan(20260808);
+    let cfg = small_cfg(6);
+    let report = run_chaos(&plan, &cfg).unwrap();
+
+    assert_eq!(report.corners.len(), 2, "both paper corners must run");
+    for c in &report.corners {
+        assert_eq!(c.trial_agreement.len(), cfg.trials);
+        // the drift ramp is walked from its first to its last stage
+        assert_eq!(c.trial_temp_c.first().copied(), Some(27.0));
+        assert_eq!(c.trial_temp_c.last().copied(), Some(60.0));
+        // paper-calibrated mismatch is a *perturbation*: it must actually
+        // move the logits, yet stay inside the acceptance envelope
+        assert!(
+            c.trial_logit_dev.iter().any(|&d| d > 0.0),
+            "corner {}: mismatch injected but logits never moved",
+            c.node
+        );
+        assert!(
+            c.stuck_cells.iter().all(|&n| n > 0),
+            "corner {}: stuck-cell fault planned but nothing injected",
+            c.node
+        );
+        assert!(
+            c.mean_agreement >= 1.0 - MEAN_DEGRADATION_ENVELOPE,
+            "corner {}: mean agreement {} breached the envelope",
+            c.node,
+            c.mean_agreement
+        );
+        assert!(
+            c.worst_agreement >= 1.0 - WORST_DEGRADATION_ENVELOPE,
+            "corner {}: worst agreement {} breached the collapse floor",
+            c.node,
+            c.worst_agreement
+        );
+    }
+    assert!(report.infra.resolved_exactly_once);
+    assert!(report.infra.drained_in_bound);
+    assert!(report.infra.panic_observed, "planned panic never fired");
+    assert!(
+        report.pass(),
+        "default plan must pass: {:?}",
+        report.violations()
+    );
+}
+
+#[test]
+fn chaos_identical_seed_replay_is_bit_identical() {
+    let plan = FaultPlan::default_plan(4242);
+    let cfg = small_cfg(4);
+    let a = run_chaos(&plan, &cfg).unwrap();
+    let b = run_chaos(&plan, &cfg).unwrap();
+    assert_eq!(
+        a.canonical_json(),
+        b.canonical_json(),
+        "identical-seed replay diverged — determinism contract broken"
+    );
+}
+
+#[test]
+fn chaos_different_seed_changes_analog_trials() {
+    let cfg = small_cfg(4);
+    let a = run_chaos(&FaultPlan::default_plan(1001), &cfg).unwrap();
+    let b = run_chaos(&FaultPlan::default_plan(1002), &cfg).unwrap();
+    assert_ne!(a.canonical_json(), b.canonical_json());
+    // not just the seed echo: the sampled mismatch itself must differ
+    assert_ne!(
+        a.corners[0].trial_logit_dev, b.corners[0].trial_logit_dev,
+        "different seeds drew identical mismatch"
+    );
+}
+
+#[test]
+fn chaos_engine_panic_cannot_deadlock_router() {
+    // the nastiest infra composition: a lane that panics on its very
+    // first batch, a slow lane ahead of the deadline flusher, and a
+    // six-thread submit storm over all lanes
+    let plan = FaultPlan {
+        seed: 555,
+        analog: vec![],
+        infra: vec![
+            InfraFault::EnginePanic { after_batches: 0 },
+            InfraFault::SlowEngine { delay_us: 800 },
+            InfraFault::SubmitStorm {
+                submitters: 6,
+                requests: 60,
+            },
+        ],
+    };
+    let infra = run_infra(&plan, &small_cfg(1)).unwrap();
+    assert_eq!(infra.submitted, 60, "storm submissions were dropped");
+    assert!(infra.panic_observed, "contained panic was not surfaced");
+    assert!(infra.failed > 0, "panicking lane produced no failures");
+    assert!(infra.answered > 0, "healthy lanes produced no answers");
+    assert_eq!(infra.stranded, 0, "requests stranded after drain");
+    assert_eq!(infra.double_delivery, 0, "a response was delivered twice");
+    assert!(infra.resolved_exactly_once);
+    assert!(infra.drained_in_bound, "drain blew its bound (deadlock?)");
+}
+
+#[test]
+fn chaos_drift_only_plan_keeps_high_agreement() {
+    // temperature drift alone (no mismatch, no stuck cells): the
+    // chip-calibration-then-drift path must degrade gently, and the trial
+    // temperature schedule must follow the plan's step shape
+    let plan = FaultPlan {
+        seed: 9,
+        analog: vec![AnalogFault::TempDrift {
+            kind: DriftKind::Step,
+            from_c: 27.0,
+            to_c: 85.0,
+            steps: 2,
+        }],
+        infra: vec![],
+    };
+    let cfg = small_cfg(4);
+    let report = run_chaos(&plan, &cfg).unwrap();
+    for c in &report.corners {
+        assert_eq!(c.trial_temp_c, vec![27.0, 27.0, 85.0, 85.0]);
+        assert!(c.stuck_cells.iter().all(|&n| n == 0));
+        assert!(
+            c.mean_agreement >= 1.0 - MEAN_DEGRADATION_ENVELOPE,
+            "corner {}: drift-only agreement {}",
+            c.node,
+            c.mean_agreement
+        );
+    }
+    // no infra faults planned: the storm default still resolves cleanly
+    assert!(report.infra.resolved_exactly_once);
+    assert!(!report.infra.panic_observed);
+    assert!(report.pass(), "{:?}", report.violations());
+}

@@ -437,6 +437,56 @@ fn batched_engine_matches_scalar_forward_across_corners() {
     }
 }
 
+/// Features pushed deliberately beyond the multiplier grid's safety
+/// margin must take the exact-cell fallback (never a clamp) and still
+/// agree with the scalar path within `BATCH_TOL` — the out-of-grid
+/// escape hatch of the batched engine.
+#[test]
+fn batched_out_of_grid_features_fall_back_to_exact_cells() {
+    // a deliberately tight grid: proto_range 2.5 barely covers the
+    // calibrated operating point ± weight, so |x| ≳ 1 fails the margin
+    // check and routes through the exact multiplier; act_range 12 still
+    // gets exceeded by the relu hidden layer on the large rows
+    let cfg = GridConfig {
+        proto_range: 2.5,
+        proto_density: 256,
+        act_range: 12.0,
+        act_density: 256,
+    };
+    let net = toy_net_act("oog", 47, &[3, 5, 2], "relu");
+    let provider: Box<dyn HProvider + Send + Sync> = Box::new(Algorithmic::relu());
+    let kernel = BatchKernel::for_net(provider, &net, &cfg).unwrap();
+    let scalar_p = Algorithmic::relu();
+    let mult = Multiplier::calibrate(&scalar_p, net.splines, net.c);
+    // mixed rows: comfortably in-grid next to far out-of-grid features
+    let rows_f: Vec<Vec<f32>> = vec![
+        vec![0.2, -0.4, 0.1],
+        vec![3.5, -3.5, 2.75],
+        vec![-4.0, 0.25, 3.875],
+        vec![0.125, 4.5, -0.2],
+    ];
+    let rows = rows_f.len();
+    let x: Vec<f32> = rows_f.iter().flatten().copied().collect();
+    let k = *net.sizes.last().unwrap();
+    let batched = kernel.forward_net(&net, &x, rows);
+    assert_eq!(batched.len(), rows * k);
+    for (r, row) in rows_f.iter().enumerate() {
+        let golden = sac::nn::forward(&net, &scalar_p, &mult, row);
+        for (j, &want) in golden.iter().enumerate() {
+            let got = batched[r * k + j];
+            assert!(
+                got.is_finite(),
+                "row {r} logit {j} not finite: {got}"
+            );
+            assert!(
+                (got - want).abs() < BATCH_TOL,
+                "row {r} logit {j}: batched {got} vs scalar {want} \
+                 (out-of-grid fallback diverged)"
+            );
+        }
+    }
+}
+
 /// The golden serving test on the batched engine: the full concurrent
 /// router path with batched executables must reproduce the scalar golden
 /// forward's logits within `BATCH_TOL` and its predicted labels exactly
