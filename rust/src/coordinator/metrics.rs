@@ -1,91 +1,91 @@
-//! Serving metrics: batch latency distribution and sustained throughput.
+//! Serving metrics: batch/request latency distributions and sustained
+//! throughput, backed by the log-bucketed histograms in
+//! [`crate::coordinator::telemetry`].
 //!
 //! The router keeps one `ServeMetrics` per task lane and
 //! [`ServeMetrics::merge`]s them into a fleet-wide aggregate on demand.
-//! Lifetime totals (batches, rows, busy time) are exact counters; the
-//! per-batch latency samples backing the mean/percentile estimates are a
-//! bounded window of the most recent batches, so a long-lived router does
-//! not grow without limit.
+//! Every accumulator is an integer (bucket counts, nanosecond sums), so
+//! `merge` is exactly associative and commutative: the aggregate is
+//! bit-identical no matter which order (or grouping) the lanes are
+//! folded in.  This replaces the earlier bounded sample-vector design,
+//! whose `p99` was biased at small sample counts and whose windowed
+//! eviction made merges order-dependent.
 
 use std::time::Duration;
 
-use crate::util::stats;
+use crate::coordinator::telemetry::LatencyHistogram;
+use crate::util::json::Json;
 
-/// Retained latency samples per lane; older samples are evicted in blocks
-/// (amortized O(1)) once the window overflows.
-const MAX_SAMPLES: usize = 8192;
-
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct ServeMetrics {
-    /// per-batch latency in seconds (bounded window, most recent batches)
-    pub batch_latency_s: Vec<f64>,
-    /// live rows per batch (window parallel to `batch_latency_s`)
-    pub batch_rows: Vec<usize>,
-    /// lifetime batch count (exact, survives window eviction)
+    /// per-batch engine latency distribution (one sample per batch)
+    pub batch_latency: LatencyHistogram,
+    /// per-request latency distribution: each delivered row inherits
+    /// its batch's latency, so `request_latency.count()` equals the
+    /// number of delivered requests
+    pub request_latency: LatencyHistogram,
+    /// lifetime batch count (exact)
     pub total_batches: usize,
     /// lifetime request count (exact)
     pub total_rows: usize,
-    /// lifetime busy time in seconds (exact)
-    pub total_time_s: f64,
+    /// lifetime busy time in integer nanoseconds (exact, associative)
+    pub total_time_ns: u64,
 }
 
 impl ServeMetrics {
     pub fn record_batch(&mut self, rows: usize, dt: Duration) {
-        let secs = dt.as_secs_f64();
-        self.batch_latency_s.push(secs);
-        self.batch_rows.push(rows);
+        let ns = dt.as_nanos().min(u128::from(u64::MAX)) as u64;
+        self.batch_latency.record_ns(ns);
+        self.request_latency.record_n_ns(ns, rows as u64);
         self.total_batches += 1;
         self.total_rows += rows;
-        self.total_time_s += secs;
-        self.evict();
+        self.total_time_ns = self.total_time_ns.saturating_add(ns);
     }
 
     /// Fold another lane's metrics into this one (per-task → aggregate).
-    ///
-    /// Deliberately does *not* evict: the aggregate is a transient
-    /// snapshot, and evicting here would bias its percentiles toward the
-    /// last-merged lane (earlier lanes' samples sit at the front of the
-    /// window).  It holds at most `lanes × MAX_SAMPLES` samples.
+    /// Integer adds only — associative, commutative, lossless.
     pub fn merge(&mut self, other: &ServeMetrics) {
-        self.batch_latency_s
-            .extend_from_slice(&other.batch_latency_s);
-        self.batch_rows.extend_from_slice(&other.batch_rows);
+        self.batch_latency.merge(&other.batch_latency);
+        self.request_latency.merge(&other.request_latency);
         self.total_batches += other.total_batches;
         self.total_rows += other.total_rows;
-        self.total_time_s += other.total_time_s;
-    }
-
-    fn evict(&mut self) {
-        if self.batch_latency_s.len() > MAX_SAMPLES {
-            let cut = self.batch_latency_s.len() - MAX_SAMPLES / 2;
-            self.batch_latency_s.drain(..cut);
-            self.batch_rows.drain(..cut);
-        }
+        self.total_time_ns = self.total_time_ns.saturating_add(other.total_time_ns);
     }
 
     pub fn total_requests(&self) -> usize {
         self.total_rows
     }
 
-    /// Mean batch latency over the retained window, in milliseconds.
+    /// Mean batch latency in milliseconds (exact: integer sum / count).
     pub fn mean_latency_ms(&self) -> f64 {
-        stats::summarize(&self.batch_latency_s).mean * 1e3
+        if self.total_batches == 0 {
+            return 0.0;
+        }
+        self.batch_latency.sum_ns() as f64 / self.total_batches as f64 / 1e6
     }
 
-    /// p99 batch latency over the retained window, in milliseconds.
+    /// Median batch latency in milliseconds (histogram estimate, exact
+    /// for a single sample).
+    pub fn p50_latency_ms(&self) -> f64 {
+        self.batch_latency.quantile_ns(0.50) / 1e6
+    }
+
+    /// p99 batch latency in milliseconds.  The histogram walk
+    /// interpolates within the landing bucket and clamps to the
+    /// observed min/max, so small sample counts are no longer biased
+    /// (n = 1 returns the sample itself).
     pub fn p99_latency_ms(&self) -> f64 {
-        if self.batch_latency_s.is_empty() {
-            return 0.0;
-        }
-        stats::percentile(&self.batch_latency_s, 99.0) * 1e3
+        self.batch_latency.quantile_ns(0.99) / 1e6
     }
 
-    /// Lifetime requests / second of worker busy time.
+    /// Lifetime requests / second of worker busy time.  Computed as
+    /// `rows * 1e9 / ns` so the quotient stays exact for power-of-two
+    /// nanosecond totals (the golden tests depend on this).
     pub fn throughput_rps(&self) -> f64 {
-        if self.total_time_s <= 0.0 {
+        if self.total_time_ns == 0 {
             return 0.0;
         }
-        self.total_rows as f64 / self.total_time_s
+        self.total_rows as f64 * 1e9 / self.total_time_ns as f64
     }
 
     pub fn report(&self) -> String {
@@ -97,6 +97,21 @@ impl ServeMetrics {
             self.p99_latency_ms(),
             self.throughput_rps()
         )
+    }
+
+    /// Canonical JSON form (alphabetical keys; see DESIGN.md §9).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("batch_latency", self.batch_latency.to_json()),
+            ("mean_latency_ms", Json::Num(self.mean_latency_ms())),
+            ("p50_latency_ms", Json::Num(self.p50_latency_ms())),
+            ("p99_latency_ms", Json::Num(self.p99_latency_ms())),
+            ("request_latency", self.request_latency.to_json()),
+            ("throughput_rps", Json::Num(self.throughput_rps())),
+            ("total_batches", Json::Num(self.total_batches as f64)),
+            ("total_rows", Json::Num(self.total_rows as f64)),
+            ("total_time_ns", Json::Num(self.total_time_ns as f64)),
+        ])
     }
 }
 
@@ -114,6 +129,9 @@ mod tests {
         let rps = m.throughput_rps();
         assert!((rps - 6.0 / 0.030).abs() < 1.0, "rps={rps}");
         assert!(m.report().contains("requests=6"));
+        // per-request histogram counts every delivered row
+        assert_eq!(m.request_latency.count(), 6);
+        assert_eq!(m.batch_latency.count(), 2);
     }
 
     #[test]
@@ -126,22 +144,45 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.total_requests(), 7);
         assert_eq!(a.total_batches, 3);
-        assert_eq!(a.batch_latency_s.len(), 3);
+        assert_eq!(a.batch_latency.count(), 3);
+        assert_eq!(a.request_latency.count(), 7);
     }
 
     #[test]
-    fn window_is_bounded_but_totals_exact() {
+    fn small_sample_p99_is_unbiased() {
+        // the old sample-vector percentile returned an extrapolated value
+        // for n < 100; the histogram estimate must return the max-ish
+        // sample for tiny n and the exact value for n = 1
+        let mut one = ServeMetrics::default();
+        one.record_batch(1, Duration::from_millis(7));
+        assert!((one.p99_latency_ms() - 7.0).abs() < 1e-9);
+
+        let mut few = ServeMetrics::default();
+        for ms in [1u64, 2, 3, 4] {
+            few.record_batch(1, Duration::from_millis(ms));
+        }
+        let p99 = few.p99_latency_ms();
+        assert!(
+            (3.0..=4.0 * 1.04).contains(&p99),
+            "n=4 p99 should sit at the top sample's bucket, got {p99}"
+        );
+    }
+
+    #[test]
+    fn totals_are_exact_at_scale() {
         let mut m = ServeMetrics::default();
-        let n = MAX_SAMPLES * 3;
+        let n = 3 * 8192;
         for _ in 0..n {
             m.record_batch(2, Duration::from_micros(100));
         }
-        assert!(m.batch_latency_s.len() <= MAX_SAMPLES);
-        assert_eq!(m.batch_rows.len(), m.batch_latency_s.len());
         assert_eq!(m.total_batches, n);
         assert_eq!(m.total_requests(), 2 * n);
-        // throughput uses the exact lifetime counters, not the window
+        assert_eq!(m.batch_latency.count(), n as u64);
+        assert_eq!(m.request_latency.count(), 2 * n as u64);
         assert!((m.throughput_rps() - 2.0 / 100e-6).abs() < 1.0);
+        // p99 of a constant distribution is that constant (±bucket width)
+        let p99 = m.p99_latency_ms();
+        assert!((p99 - 0.1).abs() / 0.1 < 0.04, "p99={p99}");
     }
 
     #[test]
@@ -150,5 +191,8 @@ mod tests {
         assert_eq!(m.total_requests(), 0);
         assert_eq!(m.throughput_rps(), 0.0);
         assert_eq!(m.p99_latency_ms(), 0.0);
+        assert_eq!(m.mean_latency_ms(), 0.0);
+        let j = m.to_json().to_string();
+        assert!(j.contains("\"total_rows\":0"));
     }
 }

@@ -21,6 +21,7 @@
 pub mod batcher;
 pub mod metrics;
 pub mod router;
+pub mod telemetry;
 
 use std::time::Instant;
 
@@ -29,6 +30,10 @@ use anyhow::{anyhow, Result};
 pub use batcher::{Batch, DynamicBatcher};
 pub use metrics::ServeMetrics;
 pub use router::{RequestId, Response, Router, RouterConfig};
+pub use telemetry::{
+    metrics_file_json, prometheus_exposition, LatencyHistogram, MetricsSnapshot, StageCounters,
+    StageSnapshot, METRICS_SCHEMA,
+};
 
 use crate::data::TrainedNet;
 use crate::runtime::{Executable, ExecMode, Runtime};
@@ -119,6 +124,7 @@ impl Engine {
     /// rows are computed — a deadline-flushed tail batch with one request
     /// costs one row of solves, not the whole padded batch.
     pub fn run_batch(&self, batch: &Batch) -> Result<Vec<Answer>> {
+        let _span = crate::util::trace::span("engine.run_batch");
         let mut params: Vec<&[f32]> =
             self.weight_bufs.iter().map(|b| b.as_slice()).collect();
         params.push(&batch.data);

@@ -43,8 +43,10 @@ use anyhow::{anyhow, bail, Result};
 
 use super::batcher::{Batch, DynamicBatcher};
 use super::metrics::ServeMetrics;
+use super::telemetry::{MetricsSnapshot, StageCounters, StageSnapshot};
 use super::Engine;
 use crate::util::pool::{PoolHandle, WorkerPool};
+use crate::util::trace;
 
 /// Handle to one submitted request: the task lane plus the per-lane
 /// request id assigned by the batcher.
@@ -129,17 +131,20 @@ impl LaneBatcher {
     }
 
     /// Full batches always; the partial tail too once its oldest request
-    /// has waited `max_wait`.
-    fn take_overdue(&mut self, max_wait: Duration) -> Vec<Batch> {
+    /// has waited `max_wait`.  The second return is `true` when the
+    /// deadline fired (a partial batch was force-materialized).
+    fn take_overdue(&mut self, max_wait: Duration) -> (Vec<Batch>, bool) {
         let mut out = self.pop_fulls();
+        let mut deadline_fired = false;
         if self.batcher.pending() > 0 {
             if let Some(t0) = self.enqueued_at.front() {
                 if t0.elapsed() >= max_wait {
                     out.extend(self.flush_all());
+                    deadline_fired = true;
                 }
             }
         }
-        out
+        (out, deadline_fired)
     }
 
     fn pending(&self) -> usize {
@@ -180,6 +185,8 @@ struct Shared {
     /// tick-polling an idle router
     flush_signal: Mutex<bool>,
     flush_cv: Condvar,
+    /// lock-free pipeline stage counters (telemetry, DESIGN.md §9)
+    stages: StageCounters,
 }
 
 /// The multi-task serving router.  See the module docs for the dataflow.
@@ -218,6 +225,7 @@ impl Router {
             failures: Mutex::new(Vec::new()),
             flush_signal: Mutex::new(false),
             flush_cv: Condvar::new(),
+            stages: StageCounters::default(),
         });
         let pool = WorkerPool::new(cfg.workers);
         let pool_handle = pool.handle();
@@ -257,23 +265,30 @@ impl Router {
                         // loop above re-enters the active phase immediately
                         *shared.flush_signal.lock().unwrap() = false;
                         let mut any_pending = false;
-                        for li in 0..shared.lanes.len() {
-                            let lane = &shared.lanes[li];
-                            // idle lanes cost one atomic load, not a lock
-                            // acquisition contending with submitters
-                            if !lane.has_pending.load(Ordering::SeqCst) {
-                                continue;
+                        {
+                            let _scan = trace::span("router.flush");
+                            for li in 0..shared.lanes.len() {
+                                let lane = &shared.lanes[li];
+                                // idle lanes cost one atomic load, not a lock
+                                // acquisition contending with submitters
+                                if !lane.has_pending.load(Ordering::SeqCst) {
+                                    continue;
+                                }
+                                // enqueue under the lane lock: a batch is never
+                                // "in limbo" outside both the queue and the
+                                // inflight counter (drain correctness).
+                                let mut q = lane.queue.lock().unwrap();
+                                let (batches, deadline_fired) = q.take_overdue(max_wait);
+                                if deadline_fired {
+                                    StageCounters::bump(&shared.stages.deadline_flushes);
+                                }
+                                for b in batches {
+                                    enqueue_batch(&shared, &handle, li, b);
+                                }
+                                let still = q.pending() > 0;
+                                lane.has_pending.store(still, Ordering::SeqCst);
+                                any_pending |= still;
                             }
-                            // enqueue under the lane lock: a batch is never
-                            // "in limbo" outside both the queue and the
-                            // inflight counter (drain correctness).
-                            let mut q = lane.queue.lock().unwrap();
-                            for b in q.take_overdue(max_wait) {
-                                enqueue_batch(&shared, &handle, li, b);
-                            }
-                            let still = q.pending() > 0;
-                            lane.has_pending.store(still, Ordering::SeqCst);
-                            any_pending |= still;
                         }
                         if !any_pending {
                             break; // back to the park loop
@@ -311,15 +326,20 @@ impl Router {
     /// dispatches immediately when full, otherwise within
     /// `max_wait + flush_tick`.
     pub fn submit(&self, task: usize, features: Vec<f32>) -> Result<RequestId> {
+        let _span = trace::span("router.submit");
         if self.shared.shutdown.load(Ordering::SeqCst) {
+            StageCounters::bump(&self.shared.stages.rejected);
             bail!("router is shut down");
         }
-        let lane = self
-            .shared
-            .lanes
-            .get(task)
-            .ok_or_else(|| anyhow!("no task lane #{task}"))?;
+        let lane = match self.shared.lanes.get(task) {
+            Some(lane) => lane,
+            None => {
+                StageCounters::bump(&self.shared.stages.rejected);
+                bail!("no task lane #{task}");
+            }
+        };
         if features.len() != lane.engine.dim {
+            StageCounters::bump(&self.shared.stages.rejected);
             bail!(
                 "task {:?}: feature dim {} != {}",
                 lane.name,
@@ -327,6 +347,7 @@ impl Router {
                 lane.engine.dim
             );
         }
+        StageCounters::bump(&self.shared.stages.submitted);
         let mut q = lane.queue.lock().unwrap();
         let id = q.submit(features);
         for b in q.pop_fulls() {
@@ -367,6 +388,7 @@ impl Router {
             .ok_or_else(|| anyhow!("no task lane #{}", req.task))?;
         let mut res = lane.results.lock().unwrap();
         if let Some(r) = res.ready.remove(&req.id) {
+            StageCounters::bump(&self.shared.stages.responses_taken);
             return Ok(Some(r));
         }
         if let Some(msg) = res.failed.remove(&req.id) {
@@ -388,6 +410,7 @@ impl Router {
         let mut res = lane.results.lock().unwrap();
         loop {
             if let Some(r) = res.ready.remove(&req.id) {
+                StageCounters::bump(&self.shared.stages.responses_taken);
                 return Ok(r);
             }
             if let Some(msg) = res.failed.remove(&req.id) {
@@ -395,6 +418,7 @@ impl Router {
             }
             let now = Instant::now();
             if now >= deadline {
+                StageCounters::bump(&self.shared.stages.wait_timeouts);
                 bail!(
                     "request {}/{} timed out after {timeout:?}",
                     lane.name,
@@ -477,6 +501,33 @@ impl Router {
         total
     }
 
+    /// Copy of the lock-free pipeline stage counters.
+    pub fn stages(&self) -> StageSnapshot {
+        self.shared.stages.snapshot()
+    }
+
+    /// Full telemetry snapshot under `name`: stage counters, per-lane
+    /// and aggregate metrics, and the trace-sink stats at capture time.
+    pub fn metrics_snapshot(&self, name: &str) -> MetricsSnapshot {
+        let lanes: Vec<(String, ServeMetrics)> = self
+            .shared
+            .lanes
+            .iter()
+            .map(|l| (l.name.clone(), l.metrics.lock().unwrap().clone()))
+            .collect();
+        let mut aggregate = ServeMetrics::default();
+        for (_, m) in &lanes {
+            aggregate.merge(m);
+        }
+        MetricsSnapshot {
+            name: name.to_string(),
+            stages: self.shared.stages.snapshot(),
+            lanes,
+            aggregate,
+            trace: trace::stats(),
+        }
+    }
+
     /// Worker failure messages collected so far (normally empty).
     pub fn failures(&self) -> Vec<String> {
         self.shared.failures.lock().unwrap().clone()
@@ -525,6 +576,7 @@ impl Drop for Router {
 /// Hand one materialized batch to the worker pool.  Must be called with
 /// the originating lane's queue lock held (see the flusher comment).
 fn enqueue_batch(shared: &Arc<Shared>, pool: &PoolHandle, li: usize, batch: Batch) {
+    StageCounters::bump(&shared.stages.batches_enqueued);
     *shared.inflight.lock().unwrap() += 1;
     let shared = Arc::clone(shared);
     pool.execute(move || {
@@ -546,10 +598,16 @@ fn enqueue_batch(shared: &Arc<Shared>, pool: &PoolHandle, li: usize, batch: Batc
         });
         match outcome {
             Ok(rows) => {
+                StageCounters::bump(&shared.stages.batches_completed);
+                shared
+                    .stages
+                    .rows_delivered
+                    .fetch_add(batch.live as u64, std::sync::atomic::Ordering::Relaxed);
                 lane.metrics
                     .lock()
                     .unwrap()
                     .record_batch(batch.live, t0.elapsed());
+                let _deliver = trace::span("router.deliver");
                 let mut res = lane.results.lock().unwrap();
                 for (id, pred, logits) in rows {
                     if res.ready.insert(id, Response { id, pred, logits }).is_some() {
@@ -564,6 +622,7 @@ fn enqueue_batch(shared: &Arc<Shared>, pool: &PoolHandle, li: usize, batch: Batc
                 lane.results_cv.notify_all();
             }
             Err(e) => {
+                StageCounters::bump(&shared.stages.batches_failed);
                 // resolve every request of the failed batch so waiters get
                 // the engine error immediately, not a timeout
                 let msg = format!("{e:#}");

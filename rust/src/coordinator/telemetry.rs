@@ -1,0 +1,686 @@
+//! Serving telemetry: log-bucketed latency histograms, lock-free stage
+//! counters and the Prometheus/JSON exposition formats (DESIGN.md §9).
+//!
+//! The histogram is HDR-style log-linear over integer nanoseconds:
+//! each power-of-two octave is split into `2^SUB_BITS = 32` equal-width
+//! sub-buckets, so the relative width of any bucket is ≤ 1/32 ≈ 3.2%.
+//! Indexing is pure bit math (`leading_zeros`), deterministic on every
+//! platform, and all accumulators are integers — merges are exactly
+//! associative and commutative, which is what makes multi-lane
+//! aggregation order-invariant (see the merge property test).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::coordinator::ServeMetrics;
+use crate::util::json::Json;
+use crate::util::trace::TraceStats;
+
+/// Schema tag stamped on every metrics snapshot file.
+pub const METRICS_SCHEMA: &str = "sac-metrics/v1";
+
+/// Sub-bucket resolution: each octave is split into `2^SUB_BITS` buckets.
+pub const SUB_BITS: u32 = 5;
+const SUB_BUCKETS: u64 = 1 << SUB_BITS;
+/// Total bucket count: 60 octaves (u64 range above `2^SUB_BITS`) × 32
+/// sub-buckets, plus the exact low range `[0, 2^SUB_BITS)`.
+pub const N_BUCKETS: usize = ((64 - SUB_BITS as usize) * SUB_BUCKETS as usize) + SUB_BUCKETS as usize;
+
+/// Log-linear latency histogram over integer nanoseconds.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LatencyHistogram {
+    counts: Vec<u64>,
+    count: u64,
+    sum_ns: u64,
+    min_ns: u64,
+    max_ns: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram {
+            counts: vec![0; N_BUCKETS],
+            count: 0,
+            sum_ns: 0,
+            min_ns: u64::MAX,
+            max_ns: 0,
+        }
+    }
+}
+
+/// Bucket index for a nanosecond value.  Values below `2^SUB_BITS` get
+/// exact unit-width buckets; above, the index is
+/// `(octave - SUB_BITS + 1) * 32 + sub` where `sub` reads the 5 bits
+/// below the most significant bit.
+pub fn index_of(ns: u64) -> usize {
+    if ns < SUB_BUCKETS {
+        return ns as usize;
+    }
+    let msb = 63 - ns.leading_zeros() as u64; // >= SUB_BITS as u64
+    let octave = msb - SUB_BITS as u64 + 1;
+    let sub = (ns >> (msb - SUB_BITS as u64)) & (SUB_BUCKETS - 1);
+    let idx = (octave * SUB_BUCKETS + sub) as usize;
+    idx.min(N_BUCKETS - 1)
+}
+
+/// Inclusive-lo / exclusive-hi nanosecond bounds of bucket `i` (the top
+/// bucket's hi saturates at `u64::MAX`).
+pub fn bucket_bounds(i: usize) -> (u64, u64) {
+    let i = i as u64;
+    if i < SUB_BUCKETS {
+        return (i, i + 1);
+    }
+    let octave = i / SUB_BUCKETS; // >= 1
+    let sub = i % SUB_BUCKETS;
+    let msb = octave + SUB_BITS as u64 - 1;
+    let width = 1u64 << (msb - SUB_BITS as u64);
+    let lo = (1u64 << msb) + sub * width;
+    let hi = lo.checked_add(width).unwrap_or(u64::MAX);
+    (lo, hi)
+}
+
+impl LatencyHistogram {
+    /// Record one sample of `ns` nanoseconds.
+    pub fn record_ns(&mut self, ns: u64) {
+        self.record_n_ns(ns, 1);
+    }
+
+    /// Record `n` samples all of `ns` nanoseconds (used to attribute a
+    /// batch latency to each request it carried).
+    pub fn record_n_ns(&mut self, ns: u64, n: u64) {
+        if n == 0 {
+            return;
+        }
+        let i = index_of(ns);
+        self.counts[i] = self.counts[i].saturating_add(n);
+        self.count = self.count.saturating_add(n);
+        self.sum_ns = self.sum_ns.saturating_add(ns.saturating_mul(n));
+        if ns < self.min_ns {
+            self.min_ns = ns;
+        }
+        if ns > self.max_ns {
+            self.max_ns = ns;
+        }
+    }
+
+    /// Record a `Duration` sample.
+    pub fn record(&mut self, dt: Duration) {
+        self.record_ns(dt.as_nanos().min(u128::from(u64::MAX)) as u64);
+    }
+
+    /// Merge `other` into `self`.  Integer adds only: exactly
+    /// associative and commutative.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a = a.saturating_add(*b);
+        }
+        self.count = self.count.saturating_add(other.count);
+        self.sum_ns = self.sum_ns.saturating_add(other.sum_ns);
+        self.min_ns = self.min_ns.min(other.min_ns);
+        self.max_ns = self.max_ns.max(other.max_ns);
+    }
+
+    /// Total samples recorded.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Sum of all samples in nanoseconds.
+    pub fn sum_ns(&self) -> u64 {
+        self.sum_ns
+    }
+
+    /// Smallest sample (0 when empty).
+    pub fn min_ns(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min_ns
+        }
+    }
+
+    /// Largest sample.
+    pub fn max_ns(&self) -> u64 {
+        self.max_ns
+    }
+
+    /// Sparse `(bucket_index, count)` pairs for the non-empty buckets,
+    /// in ascending index order.
+    pub fn buckets(&self) -> Vec<(usize, u64)> {
+        self.counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| (i, c))
+            .collect()
+    }
+
+    /// Quantile estimate in nanoseconds (`q` in `[0, 1]`).  Walks the
+    /// cumulative counts to the target rank and linearly interpolates
+    /// within the landing bucket; the result is clamped to the observed
+    /// `[min_ns, max_ns]`, which makes single-sample histograms exact.
+    pub fn quantile_ns(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let q = q.max(0.0).min(1.0);
+        let target = (q * self.count as f64).max(1.0);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let next = seen + c;
+            if (next as f64) >= target {
+                let (lo, hi) = bucket_bounds(i);
+                let frac = (target - seen as f64) / c as f64;
+                let est = lo as f64 + frac * (hi - lo) as f64;
+                return est.max(self.min_ns as f64).min(self.max_ns as f64);
+            }
+            seen = next;
+        }
+        self.max_ns as f64
+    }
+
+    /// Canonical JSON form: totals plus the sparse bucket list.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "buckets",
+                Json::Arr(
+                    self.buckets()
+                        .into_iter()
+                        .map(|(i, c)| Json::Arr(vec![Json::Num(i as f64), Json::Num(c as f64)]))
+                        .collect(),
+                ),
+            ),
+            ("count", Json::Num(self.count as f64)),
+            ("max_ns", Json::Num(self.max_ns() as f64)),
+            ("min_ns", Json::Num(self.min_ns() as f64)),
+            ("sum_ns", Json::Num(self.sum_ns as f64)),
+        ])
+    }
+}
+
+/// Lock-free per-stage counters for the serving pipeline.  All loads
+/// and stores are `Relaxed`: these are statistics, not synchronization.
+#[derive(Debug, Default)]
+pub struct StageCounters {
+    /// Requests accepted by `Router::submit`.
+    pub submitted: AtomicU64,
+    /// Requests rejected (unknown task / bad dimension / shutdown).
+    pub rejected: AtomicU64,
+    /// Batches handed to the worker pool.
+    pub batches_enqueued: AtomicU64,
+    /// Partial batches flushed by the deadline flusher.
+    pub deadline_flushes: AtomicU64,
+    /// Batches that completed successfully.
+    pub batches_completed: AtomicU64,
+    /// Batches whose engine failed or panicked.
+    pub batches_failed: AtomicU64,
+    /// Rows delivered from completed batches.
+    pub rows_delivered: AtomicU64,
+    /// Responses handed to callers via `try_take` / `wait`.
+    pub responses_taken: AtomicU64,
+    /// `wait` calls that timed out before a response arrived.
+    pub wait_timeouts: AtomicU64,
+}
+
+impl StageCounters {
+    /// Relaxed increment helper.
+    #[inline]
+    pub fn bump(counter: &AtomicU64) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Consistent-enough copy of all counters.
+    pub fn snapshot(&self) -> StageSnapshot {
+        StageSnapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            batches_enqueued: self.batches_enqueued.load(Ordering::Relaxed),
+            deadline_flushes: self.deadline_flushes.load(Ordering::Relaxed),
+            batches_completed: self.batches_completed.load(Ordering::Relaxed),
+            batches_failed: self.batches_failed.load(Ordering::Relaxed),
+            rows_delivered: self.rows_delivered.load(Ordering::Relaxed),
+            responses_taken: self.responses_taken.load(Ordering::Relaxed),
+            wait_timeouts: self.wait_timeouts.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Plain-value copy of [`StageCounters`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StageSnapshot {
+    pub submitted: u64,
+    pub rejected: u64,
+    pub batches_enqueued: u64,
+    pub deadline_flushes: u64,
+    pub batches_completed: u64,
+    pub batches_failed: u64,
+    pub rows_delivered: u64,
+    pub responses_taken: u64,
+    pub wait_timeouts: u64,
+}
+
+impl StageSnapshot {
+    /// `(stage_name, value)` pairs in pipeline order.
+    pub fn fields(&self) -> [(&'static str, u64); 9] {
+        [
+            ("submitted", self.submitted),
+            ("rejected", self.rejected),
+            ("batches_enqueued", self.batches_enqueued),
+            ("deadline_flushes", self.deadline_flushes),
+            ("batches_completed", self.batches_completed),
+            ("batches_failed", self.batches_failed),
+            ("rows_delivered", self.rows_delivered),
+            ("responses_taken", self.responses_taken),
+            ("wait_timeouts", self.wait_timeouts),
+        ]
+    }
+
+    /// Canonical JSON form (alphabetical keys, like every `Json::Obj`).
+    pub fn to_json(&self) -> Json {
+        Json::Obj(
+            self.fields()
+                .iter()
+                .map(|&(k, v)| (k.to_string(), Json::Num(v as f64)))
+                .collect(),
+        )
+    }
+}
+
+/// One self-contained metrics snapshot: a named router (or campaign
+/// stage), its stage counters, per-lane and aggregate `ServeMetrics`,
+/// and the trace-sink stats at capture time.
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    /// Snapshot name, e.g. `"serve"`, `"bench-serve"`, `"chaos.infra"`.
+    pub name: String,
+    /// Pipeline stage counters.
+    pub stages: StageSnapshot,
+    /// Per-lane metrics, in lane (task-id) order.
+    pub lanes: Vec<(String, ServeMetrics)>,
+    /// All lanes merged.
+    pub aggregate: ServeMetrics,
+    /// Trace sink state at capture time.
+    pub trace: TraceStats,
+}
+
+impl MetricsSnapshot {
+    /// Canonical JSON object for this snapshot.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("aggregate", self.aggregate.to_json()),
+            (
+                "lanes",
+                Json::Arr(
+                    self.lanes
+                        .iter()
+                        .map(|(task, m)| {
+                            Json::obj(vec![
+                                ("metrics", m.to_json()),
+                                ("task", Json::Str(task.clone())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("router", Json::Str(self.name.clone())),
+            ("schema", Json::Str(METRICS_SCHEMA.to_string())),
+            ("stages", self.stages.to_json()),
+            (
+                "trace",
+                Json::obj(vec![
+                    ("capacity", Json::Num(self.trace.capacity as f64)),
+                    ("dropped", Json::Num(self.trace.dropped as f64)),
+                    ("enabled", Json::Bool(self.trace.enabled)),
+                    ("recorded", Json::Num(self.trace.recorded as f64)),
+                ]),
+            ),
+        ])
+    }
+
+    /// Canonical single-snapshot JSON text.
+    pub fn canonical_json(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    /// Prometheus text exposition for this snapshot alone.
+    pub fn prometheus(&self) -> String {
+        prometheus_exposition(std::slice::from_ref(self))
+    }
+}
+
+/// Canonical metrics file: a schema tag plus every snapshot, in order.
+pub fn metrics_file_json(snapshots: &[MetricsSnapshot]) -> Json {
+    Json::obj(vec![
+        ("schema", Json::Str(METRICS_SCHEMA.to_string())),
+        (
+            "snapshots",
+            Json::Arr(snapshots.iter().map(|s| s.to_json()).collect()),
+        ),
+    ])
+}
+
+fn prom_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+/// Format a nanosecond bound as seconds with no float rounding: the
+/// value is printed as `ns / 1e9` in plain decimal (exact, since it is
+/// just a decimal point shift).
+fn ns_as_seconds(ns: u64) -> String {
+    let secs = ns / 1_000_000_000;
+    let frac = ns % 1_000_000_000;
+    if frac == 0 {
+        format!("{secs}")
+    } else {
+        let mut f = format!("{frac:09}");
+        while f.ends_with('0') {
+            f.pop();
+        }
+        format!("{secs}.{f}")
+    }
+}
+
+fn push_histogram(out: &mut String, family: &str, labels: &str, h: &LatencyHistogram) {
+    use std::fmt::Write;
+    let mut cum = 0u64;
+    for (i, c) in h.buckets() {
+        cum += c;
+        let (_, hi) = bucket_bounds(i);
+        let le = if hi == u64::MAX {
+            "+Inf".to_string()
+        } else {
+            ns_as_seconds(hi)
+        };
+        let _ = writeln!(out, "{family}_bucket{{{labels},le=\"{le}\"}} {cum}");
+    }
+    let _ = writeln!(out, "{family}_bucket{{{labels},le=\"+Inf\"}} {}", h.count());
+    let _ = writeln!(out, "{family}_sum{{{labels}}} {}", ns_as_seconds(h.sum_ns()));
+    let _ = writeln!(out, "{family}_count{{{labels}}} {}", h.count());
+}
+
+/// Prometheus text exposition for a set of snapshots.  Families are
+/// emitted in a fixed order; per-lane series carry `router` and `task`
+/// labels.  The aggregate lane is intentionally *not* exported to
+/// Prometheus (summing the per-task series would double-count).
+pub fn prometheus_exposition(snapshots: &[MetricsSnapshot]) -> String {
+    use std::fmt::Write;
+    let mut out = String::new();
+
+    let _ = writeln!(out, "# HELP sac_requests_total Rows delivered per serving lane.");
+    let _ = writeln!(out, "# TYPE sac_requests_total counter");
+    for s in snapshots {
+        let r = prom_escape(&s.name);
+        for (task, m) in &s.lanes {
+            let t = prom_escape(task);
+            let _ = writeln!(
+                out,
+                "sac_requests_total{{router=\"{r}\",task=\"{t}\"}} {}",
+                m.total_rows
+            );
+        }
+    }
+
+    let _ = writeln!(out, "# HELP sac_batches_total Batches executed per serving lane.");
+    let _ = writeln!(out, "# TYPE sac_batches_total counter");
+    for s in snapshots {
+        let r = prom_escape(&s.name);
+        for (task, m) in &s.lanes {
+            let t = prom_escape(task);
+            let _ = writeln!(
+                out,
+                "sac_batches_total{{router=\"{r}\",task=\"{t}\"}} {}",
+                m.total_batches
+            );
+        }
+    }
+
+    let _ = writeln!(
+        out,
+        "# HELP sac_busy_seconds_total Engine busy time per serving lane."
+    );
+    let _ = writeln!(out, "# TYPE sac_busy_seconds_total counter");
+    for s in snapshots {
+        let r = prom_escape(&s.name);
+        for (task, m) in &s.lanes {
+            let t = prom_escape(task);
+            let _ = writeln!(
+                out,
+                "sac_busy_seconds_total{{router=\"{r}\",task=\"{t}\"}} {}",
+                ns_as_seconds(m.total_time_ns)
+            );
+        }
+    }
+
+    let _ = writeln!(
+        out,
+        "# HELP sac_stage_total Pipeline stage counters for the serving router."
+    );
+    let _ = writeln!(out, "# TYPE sac_stage_total counter");
+    for s in snapshots {
+        let r = prom_escape(&s.name);
+        for (stage, v) in s.stages.fields() {
+            let _ = writeln!(
+                out,
+                "sac_stage_total{{router=\"{r}\",stage=\"{stage}\"}} {v}"
+            );
+        }
+    }
+
+    let _ = writeln!(
+        out,
+        "# HELP sac_trace_recorded_total Spans recorded by the trace ring."
+    );
+    let _ = writeln!(out, "# TYPE sac_trace_recorded_total counter");
+    for s in snapshots {
+        let r = prom_escape(&s.name);
+        let _ = writeln!(
+            out,
+            "sac_trace_recorded_total{{router=\"{r}\"}} {}",
+            s.trace.recorded
+        );
+    }
+
+    let _ = writeln!(
+        out,
+        "# HELP sac_trace_dropped_total Spans overwritten after the trace ring filled."
+    );
+    let _ = writeln!(out, "# TYPE sac_trace_dropped_total counter");
+    for s in snapshots {
+        let r = prom_escape(&s.name);
+        let _ = writeln!(
+            out,
+            "sac_trace_dropped_total{{router=\"{r}\"}} {}",
+            s.trace.dropped
+        );
+    }
+
+    // Histograms last (they dominate line count); HELP/TYPE once per family.
+    let _ = writeln!(out, "# HELP sac_batch_latency_seconds Per-batch engine latency.");
+    let _ = writeln!(out, "# TYPE sac_batch_latency_seconds histogram");
+    for s in snapshots {
+        let r = prom_escape(&s.name);
+        for (task, m) in &s.lanes {
+            let t = prom_escape(task);
+            push_histogram(
+                &mut out,
+                "sac_batch_latency_seconds",
+                &format!("router=\"{r}\",task=\"{t}\""),
+                &m.batch_latency,
+            );
+        }
+    }
+    let _ = writeln!(
+        out,
+        "# HELP sac_request_latency_seconds Per-request delivered latency (batch latency attributed to each row)."
+    );
+    let _ = writeln!(out, "# TYPE sac_request_latency_seconds histogram");
+    for s in snapshots {
+        let r = prom_escape(&s.name);
+        for (task, m) in &s.lanes {
+            let t = prom_escape(task);
+            push_histogram(
+                &mut out,
+                "sac_request_latency_seconds",
+                &format!("router=\"{r}\",task=\"{t}\""),
+                &m.request_latency,
+            );
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_and_bounds_are_consistent() {
+        // every representable value lands in a bucket whose bounds
+        // contain it, and indices are monotone in the value
+        let probes: Vec<u64> = vec![
+            0,
+            1,
+            31,
+            32,
+            33,
+            63,
+            64,
+            100,
+            1_000,
+            65_535,
+            65_536,
+            1_048_576,
+            1_000_000_000,
+            u64::MAX / 2,
+            u64::MAX - 1,
+            u64::MAX,
+        ];
+        let mut last_idx = 0usize;
+        for &ns in &probes {
+            let i = index_of(ns);
+            assert!(i < N_BUCKETS, "index {i} out of range for {ns}");
+            let (lo, hi) = bucket_bounds(i);
+            assert!(
+                lo <= ns && (ns < hi || hi == u64::MAX),
+                "ns={ns} outside bucket {i} bounds [{lo},{hi})"
+            );
+            assert!(i >= last_idx, "index not monotone at ns={ns}");
+            last_idx = i;
+        }
+    }
+
+    #[test]
+    fn bucket_relative_error_is_bounded() {
+        // above the exact range, bucket width / lo ≤ 1/32
+        for i in SUB_BUCKETS as usize..N_BUCKETS {
+            let (lo, hi) = bucket_bounds(i);
+            if hi == u64::MAX {
+                continue;
+            }
+            let width = hi - lo;
+            assert!(
+                (width as f64) / (lo as f64) <= 1.0 / 32.0 + 1e-12,
+                "bucket {i}: width {width} vs lo {lo}"
+            );
+        }
+    }
+
+    #[test]
+    fn single_sample_quantiles_are_exact() {
+        let mut h = LatencyHistogram::default();
+        h.record_ns(123_456);
+        assert_eq!(h.quantile_ns(0.5), 123_456.0);
+        assert_eq!(h.quantile_ns(0.99), 123_456.0);
+        assert_eq!(h.min_ns(), 123_456);
+        assert_eq!(h.max_ns(), 123_456);
+    }
+
+    #[test]
+    fn quantiles_track_known_distributions() {
+        let mut h = LatencyHistogram::default();
+        for ns in 1..=1000u64 {
+            h.record_ns(ns * 1_000); // 1µs .. 1ms uniform
+        }
+        let p50 = h.quantile_ns(0.50);
+        let p99 = h.quantile_ns(0.99);
+        // log-bucket resolution is 1/32 ≈ 3.2%
+        assert!((p50 - 500_000.0).abs() / 500_000.0 < 0.05, "p50={p50}");
+        assert!((p99 - 990_000.0).abs() / 990_000.0 < 0.05, "p99={p99}");
+    }
+
+    #[test]
+    fn merge_matches_bulk_recording() {
+        let mut a = LatencyHistogram::default();
+        let mut b = LatencyHistogram::default();
+        let mut all = LatencyHistogram::default();
+        for i in 0..200u64 {
+            let ns = 17 * i * i + 3;
+            if i % 3 == 0 {
+                a.record_ns(ns);
+            } else {
+                b.record_ns(ns);
+            }
+            all.record_ns(ns);
+        }
+        let mut merged = a.clone();
+        merged.merge(&b);
+        assert_eq!(merged, all);
+        // and the other order gives the identical struct
+        let mut merged2 = b;
+        merged2.merge(&a);
+        assert_eq!(merged2, all);
+    }
+
+    #[test]
+    fn stage_counters_snapshot_roundtrip() {
+        let c = StageCounters::default();
+        StageCounters::bump(&c.submitted);
+        StageCounters::bump(&c.submitted);
+        StageCounters::bump(&c.rejected);
+        c.rows_delivered.fetch_add(7, Ordering::Relaxed);
+        let s = c.snapshot();
+        assert_eq!(s.submitted, 2);
+        assert_eq!(s.rejected, 1);
+        assert_eq!(s.rows_delivered, 7);
+        assert_eq!(s.fields().len(), 9);
+        let j = s.to_json().to_string();
+        assert!(j.contains("\"submitted\":2"));
+        assert!(j.contains("\"rows_delivered\":7"));
+    }
+
+    #[test]
+    fn ns_as_seconds_is_exact_decimal() {
+        assert_eq!(ns_as_seconds(0), "0");
+        assert_eq!(ns_as_seconds(1), "0.000000001");
+        assert_eq!(ns_as_seconds(1_500_000), "0.0015");
+        assert_eq!(ns_as_seconds(1_000_000_000), "1");
+        assert_eq!(ns_as_seconds(2_250_000_000), "2.25");
+        assert_eq!(ns_as_seconds(1_048_576), "0.001048576");
+        assert_eq!(ns_as_seconds(1_081_344), "0.001081344");
+    }
+
+    #[test]
+    fn empty_histogram_is_safe() {
+        let h = LatencyHistogram::default();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.min_ns(), 0);
+        assert_eq!(h.max_ns(), 0);
+        assert_eq!(h.quantile_ns(0.99), 0.0);
+        assert!(h.buckets().is_empty());
+        let j = h.to_json().to_string();
+        assert!(j.contains("\"count\":0"));
+    }
+}

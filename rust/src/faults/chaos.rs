@@ -34,7 +34,9 @@ use anyhow::{anyhow, Result};
 
 use crate::cells::multiplier::Multiplier;
 use crate::cells::HProvider;
-use crate::coordinator::{synthetic_engine, Engine, Response, Router, RouterConfig};
+use crate::coordinator::{
+    synthetic_engine, Engine, MetricsSnapshot, Response, Router, RouterConfig,
+};
 use crate::data::TrainedNet;
 use crate::device::MismatchModel;
 use crate::nn::batch::{BatchKernel, GridConfig};
@@ -346,6 +348,19 @@ pub fn run_corner(
     plan: &FaultPlan,
     cfg: &ChaosConfig,
 ) -> Result<CornerReport> {
+    Ok(run_corner_with_metrics(node, regime, net, plan, cfg)?.0)
+}
+
+/// [`run_corner`] plus the corner router's telemetry snapshot (captured
+/// after the drain, before shutdown — see `--metrics-out` on `chaos`).
+pub fn run_corner_with_metrics(
+    node: &'static ProcessNode,
+    regime: Regime,
+    net: &TrainedNet,
+    plan: &FaultPlan,
+    cfg: &ChaosConfig,
+) -> Result<(CornerReport, MetricsSnapshot)> {
+    let _span = crate::util::trace::span("chaos.corner");
     let grid = chaos_grid();
     let act = net.activation_kind()?;
     let (dkind, from_c, to_c, steps) = plan
@@ -440,6 +455,7 @@ pub fn run_corner(
         }
         lane_answers.push(rows);
     }
+    let snapshot = router.metrics_snapshot(&format!("chaos.corner.{}", node.name));
     router.shutdown();
 
     let nominal = &lane_answers[0];
@@ -471,22 +487,34 @@ pub fn run_corner(
         .cloned()
         .fold(1.0f64, f64::min);
 
-    Ok(CornerReport {
-        node: node.name.to_string(),
-        regime: regime.short().to_string(),
-        trial_temp_c,
-        trial_agreement,
-        trial_logit_dev,
-        stuck_cells,
-        mean_agreement,
-        worst_agreement,
-    })
+    Ok((
+        CornerReport {
+            node: node.name.to_string(),
+            regime: regime.short().to_string(),
+            trial_temp_c,
+            trial_agreement,
+            trial_logit_dev,
+            stuck_cells,
+            mean_agreement,
+            worst_agreement,
+        },
+        snapshot,
+    ))
 }
 
 /// Run the infrastructure campaign: three synthetic lanes (healthy /
 /// latency-injected / panic-injected) under a multi-threaded submit
 /// storm, then assert the router's liveness invariants.
 pub fn run_infra(plan: &FaultPlan, cfg: &ChaosConfig) -> Result<InfraReport> {
+    Ok(run_infra_with_metrics(plan, cfg)?.0)
+}
+
+/// [`run_infra`] plus the storm router's telemetry snapshot.
+pub fn run_infra_with_metrics(
+    plan: &FaultPlan,
+    cfg: &ChaosConfig,
+) -> Result<(InfraReport, MetricsSnapshot)> {
+    let _span = crate::util::trace::span("chaos.infra");
     let (submitters, requests) = plan.storm().unwrap_or((2, 48));
     let sizes = [4usize, 6, 3];
     let healthy = synthetic_engine(plan.seed.wrapping_add(101), &sizes, 4)?;
@@ -562,37 +590,60 @@ pub fn run_infra(plan: &FaultPlan, cfg: &ChaosConfig) -> Result<InfraReport> {
         .failures()
         .iter()
         .any(|m| m.contains("panicked"));
+    let snapshot = router.metrics_snapshot("chaos.infra");
     router.shutdown();
 
-    Ok(InfraReport {
-        submitted,
-        answered,
-        failed,
-        stranded,
-        double_delivery,
-        resolved_exactly_once: stranded == 0
-            && double_delivery == 0
-            && answered + failed == submitted,
-        drained_in_bound,
-        panic_observed,
-        drain_ms,
-    })
+    Ok((
+        InfraReport {
+            submitted,
+            answered,
+            failed,
+            stranded,
+            double_delivery,
+            resolved_exactly_once: stranded == 0
+                && double_delivery == 0
+                && answered + failed == submitted,
+            drained_in_bound,
+            panic_observed,
+            drain_ms,
+        },
+        snapshot,
+    ))
 }
 
 /// Replay a plan end to end: both paper corners plus the infrastructure
 /// campaign, composed into one report.
 pub fn run_chaos(plan: &FaultPlan, cfg: &ChaosConfig) -> Result<ChaosReport> {
+    Ok(run_chaos_with_metrics(plan, cfg)?.0)
+}
+
+/// [`run_chaos`] plus one telemetry snapshot per campaign stage (two
+/// corners, then infra) — the `chaos --metrics-out` surface.  The
+/// snapshots carry wall-clock latencies and are *not* part of the
+/// deterministic [`ChaosReport::canonical_json`] replay contract.
+pub fn run_chaos_with_metrics(
+    plan: &FaultPlan,
+    cfg: &ChaosConfig,
+) -> Result<(ChaosReport, Vec<MetricsSnapshot>)> {
+    let _span = crate::util::trace::span("chaos.campaign");
     let net = chaos_net();
     let mut corners = Vec::with_capacity(2);
+    let mut snapshots = Vec::with_capacity(3);
     for (node, regime) in chaos_corners() {
-        corners.push(run_corner(node, regime, &net, plan, cfg)?);
+        let (corner, snap) = run_corner_with_metrics(node, regime, &net, plan, cfg)?;
+        corners.push(corner);
+        snapshots.push(snap);
     }
-    let infra = run_infra(plan, cfg)?;
-    Ok(ChaosReport {
-        plan: plan.clone(),
-        corners,
-        infra,
-    })
+    let (infra, infra_snap) = run_infra_with_metrics(plan, cfg)?;
+    snapshots.push(infra_snap);
+    Ok((
+        ChaosReport {
+            plan: plan.clone(),
+            corners,
+            infra,
+        },
+        snapshots,
+    ))
 }
 
 #[cfg(test)]

@@ -19,9 +19,10 @@ pub mod drift;
 pub mod plan;
 
 pub use chaos::{
-    chaos_corners, chaos_grid, chaos_net, eval_features, run_chaos, run_corner, run_infra,
-    ChaosConfig, ChaosReport, CornerReport, InfraReport, DRAIN_BOUND_SECS,
-    MEAN_DEGRADATION_ENVELOPE, WORST_DEGRADATION_ENVELOPE,
+    chaos_corners, chaos_grid, chaos_net, eval_features, run_chaos, run_chaos_with_metrics,
+    run_corner, run_corner_with_metrics, run_infra, run_infra_with_metrics, ChaosConfig,
+    ChaosReport, CornerReport, InfraReport, DRAIN_BOUND_SECS, MEAN_DEGRADATION_ENVELOPE,
+    WORST_DEGRADATION_ENVELOPE,
 };
 pub use drift::{
     stage_for_progress, temperature_schedule, DriftingHProvider, MismatchedProvider,

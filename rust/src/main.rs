@@ -4,6 +4,7 @@
 //! repro <id|all>        regenerate a paper table/figure (results/*.csv)
 //! serve <task>          batched inference through the multi-task router
 //! bench-serve           synthetic router throughput bench (no artifacts)
+//! metrics               synthetic serving run + telemetry exposition
 //! characterize <cell>   DC sweep of a standard cell across corners
 //! mc <cell>             Monte-Carlo mismatch campaign
 //! chaos                 replay a fault-injection plan against the stack
@@ -21,9 +22,11 @@ use anyhow::{anyhow, bail, ensure, Result};
 use sac::analysis::{dc, montecarlo as mc};
 use sac::cells::activations::CellKind;
 use sac::cells::CircuitCorner;
-use sac::coordinator::{synthetic_engine_with_mode, Engine, Router, RouterConfig};
+use sac::coordinator::{
+    metrics_file_json, synthetic_engine_with_mode, Engine, MetricsSnapshot, Router, RouterConfig,
+};
 use sac::data::Dataset;
-use sac::faults::{run_chaos, ChaosConfig, FaultPlan};
+use sac::faults::{run_chaos, run_chaos_with_metrics, ChaosConfig, FaultPlan};
 use sac::pdk::{regime::Regime, ProcessNode};
 use sac::repro::{self, ReproOpts};
 use sac::runtime::{default_artifacts_dir, ExecMode, Runtime};
@@ -37,15 +40,21 @@ sac — shape-based analog computing framework (TCSI 2022 reproduction)
 USAGE:
   sac repro <id|all> [--out results] [--limit N] [--threads N] [--mc-trials N]
   sac serve <task> [--artifacts DIR] [--requests N] [--workers N] [--engine scalar|batched]
+                   [--metrics-out FILE]
   sac bench-serve [--tasks K] [--workers N] [--submitters N] [--requests N] [--batch B]
-                  [--engine scalar|batched]
+                  [--engine scalar|batched] [--metrics-out FILE]
+  sac metrics [--tasks K] [--requests N] [--workers N] [--batch B] [--seed S]
+              [--format prom|json|both] [--out FILE]
   sac characterize <cell> [--node NAME] [--regime WI|MI|SI] [--temp C] [--out results]
   sac mc <cell> [--node NAME] [--trials N]
   sac chaos [--plan FILE | --seed S] [--trials N] [--workers N] [--out results] [--check]
+            [--metrics-out FILE]
   sac info [--artifacts DIR]
 
 engines: batched (default; columnar lookup-grid engine) | scalar (per-row GMP solves)
 env: SAC_MC_TRIALS / SAC_MC_SEED override the mc campaign defaults (flags win)
+     SAC_TRACE=1 enables span tracing (SAC_TRACE_CAPACITY sizes the ring);
+     --metrics-out / sac metrics emit Prometheus + canonical JSON telemetry
 
 ids: fig1 fig2a fig3 fig4 fig5 fig7 fig8 fig10 fig12 fig13 fig15
      table1 table2 table3 table4 table5 | all
@@ -59,6 +68,7 @@ fn main() {
         print!("{USAGE}");
         return;
     }
+    sac::util::trace::init_from_env();
     if let Err(e) = dispatch(&argv) {
         eprintln!("error: {e:#}");
         std::process::exit(1);
@@ -71,6 +81,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "repro" => cmd_repro(&args),
         "serve" => cmd_serve(&args),
         "bench-serve" => cmd_bench_serve(&args),
+        "metrics" => cmd_metrics(&args),
         "characterize" => cmd_characterize(&args),
         "mc" => cmd_mc(&args),
         "chaos" => cmd_chaos(&args),
@@ -170,6 +181,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
         wall,
         n as f64 / wall
     );
+    if let Some(path) = args.get("metrics-out") {
+        write_metrics_file(path, &[router.metrics_snapshot("serve")])?;
+    }
+    Ok(())
+}
+
+/// Write snapshots as a canonical `sac-metrics/v1` JSON file, creating
+/// parent directories as needed.
+fn write_metrics_file(path: &str, snapshots: &[MetricsSnapshot]) -> Result<()> {
+    let p = PathBuf::from(path);
+    if let Some(dir) = p.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(&p, metrics_file_json(snapshots).to_string())?;
+    println!("wrote {}", p.display());
     Ok(())
 }
 
@@ -227,6 +255,11 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
     for t in 0..tasks {
         println!("  task{t}: {}", router.metrics(t).report());
     }
+    // written before the delivery assertion so a failing run still
+    // leaves its telemetry behind (CI uploads it as an artifact)
+    if let Some(path) = args.get("metrics-out") {
+        write_metrics_file(path, &[router.metrics_snapshot("bench-serve")])?;
+    }
     let agg = router.aggregate_metrics();
     ensure!(
         agg.total_requests() == requests,
@@ -238,6 +271,68 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
         "end-to-end: {requests} requests in {wall:.2}s = {:.0} req/s",
         requests as f64 / wall
     );
+    Ok(())
+}
+
+/// Self-contained telemetry demo: run a deterministic synthetic serving
+/// workload through the router and print its metrics in Prometheus text
+/// exposition and/or canonical JSON (DESIGN.md §9).  Runs on a clean
+/// checkout — the schema-stability goldens in `tests/observability.rs`
+/// pin both formats.
+fn cmd_metrics(args: &Args) -> Result<()> {
+    let tasks = args.get_usize("tasks", 2)?.max(1);
+    let requests = args.get_usize("requests", 128)?;
+    let workers = args.get_usize("workers", 4)?.max(1);
+    let batch = args.get_usize("batch", 16)?.max(1);
+    let seed = args.get_usize("seed", 7)? as u64;
+    let format = args.get_or("format", "both");
+    const DIM: usize = 8;
+    let engines = (0..tasks)
+        .map(|t| {
+            Ok((
+                format!("task{t}"),
+                synthetic_engine_with_mode(
+                    seed + t as u64,
+                    &[DIM, 10, 4],
+                    batch,
+                    ExecMode::Batched,
+                )?,
+            ))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let router = Router::new(
+        RouterConfig {
+            workers,
+            ..RouterConfig::default()
+        },
+        engines,
+    );
+    let mut rng = Rng::new(seed ^ 0x5AC0);
+    let mut reqs = Vec::with_capacity(requests);
+    for k in 0..requests {
+        let feats: Vec<f32> = (0..DIM).map(|_| rng.uniform_in(-1.0, 1.0) as f32).collect();
+        reqs.push(router.submit(k % tasks, feats)?);
+    }
+    router.drain(Duration::from_secs(600))?;
+    for &req in &reqs {
+        router
+            .try_take(req)?
+            .ok_or_else(|| anyhow!("request {req:?} unanswered"))?;
+    }
+    let snap = router.metrics_snapshot("metrics");
+    let json_text = metrics_file_json(std::slice::from_ref(&snap)).to_string();
+    match format {
+        "prom" => print!("{}", snap.prometheus()),
+        "json" => println!("{json_text}"),
+        "both" => {
+            print!("{}", snap.prometheus());
+            println!("{json_text}");
+        }
+        other => bail!("unknown --format {other:?} (use prom, json or both)"),
+    }
+    if let Some(path) = args.get("out") {
+        write_metrics_file(path, std::slice::from_ref(&snap))?;
+    }
     Ok(())
 }
 
@@ -319,8 +414,13 @@ fn cmd_chaos(args: &Args) -> Result<()> {
         cfg.workers
     );
     let t0 = Instant::now();
-    let report = run_chaos(&plan, &cfg)?;
+    let (report, snapshots) = run_chaos_with_metrics(&plan, &cfg)?;
     let wall = t0.elapsed().as_secs_f64();
+    // telemetry lands before any violation bail so a failing campaign
+    // still leaves its metrics behind
+    if let Some(path) = args.get("metrics-out") {
+        write_metrics_file(path, &snapshots)?;
+    }
     for c in &report.corners {
         println!(
             "  {}/{}: mean agreement {:.4}, worst {:.4}, temps {:?}",

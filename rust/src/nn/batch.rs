@@ -392,6 +392,7 @@ impl BatchKernel {
         x: &[f32],
         rows: usize,
     ) -> Vec<f64> {
+        let _span = crate::util::trace::span("batch.forward");
         let nl = sizes.len() - 1;
         let din = sizes[0];
         debug_assert!(x.len() >= rows * din, "input batch shorter than rows");

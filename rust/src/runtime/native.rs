@@ -229,6 +229,7 @@ impl NativeExec {
     /// This is the deadline-flush fast path: a padded tail batch with one
     /// live request costs one row of GMP solves, not the whole batch.
     pub fn run_rows(&self, params: &[&[f32]], rows: usize) -> Result<Vec<f32>> {
+        let _span = crate::util::trace::span("native.run");
         if params.len() != self.n_params() {
             bail!("expected {} params, got {}", self.n_params(), params.len());
         }

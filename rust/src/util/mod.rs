@@ -11,6 +11,8 @@
 //! * [`benchkit`] — warmup/sampling micro-benchmark harness
 //! * [`stats`] — summaries, percentiles, confusion matrices, histograms
 //! * [`table`] — ASCII tables, CSV writers, terminal plots
+//! * [`trace`] — structured spans with a ring-buffer sink, zero-cost
+//!   when disabled (DESIGN.md §9)
 
 pub mod benchkit;
 pub mod cli;
@@ -20,3 +22,4 @@ pub mod propcheck;
 pub mod rng;
 pub mod stats;
 pub mod table;
+pub mod trace;

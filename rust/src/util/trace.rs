@@ -1,0 +1,297 @@
+//! Lightweight structured tracing spans (§Observability, DESIGN.md §9).
+//!
+//! A [`Span`] records an enter/exit pair with a monotonic timestamp, the
+//! recording thread's id and a global sequence number into a fixed-size
+//! ring buffer.  The design goals, in order:
+//!
+//!  1. **zero cost when disabled** — `span()` is a relaxed atomic load
+//!     plus a two-word struct; no clock read, no lock, no allocation;
+//!  2. **no interleaving corruption** — a span is written as one
+//!     [`SpanRecord`] on drop (enter and exit together), so concurrent
+//!     threads can never tear a record in half;
+//!  3. **bounded memory** — the ring overwrites the oldest record once
+//!     full and counts what it dropped.
+//!
+//! Tracing is process-global.  Enable it programmatically with
+//! [`enable`], or from the environment with [`init_from_env`]
+//! (`SAC_TRACE=1`, optional `SAC_TRACE_CAPACITY=<n>`).
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Default ring capacity used by [`init_from_env`] when
+/// `SAC_TRACE_CAPACITY` is not set.
+pub const DEFAULT_CAPACITY: usize = 65536;
+
+/// One completed span: a named enter/exit pair with monotonic
+/// nanosecond offsets from the trace epoch (the `enable()` call).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SpanRecord {
+    /// Static span name, e.g. `"router.submit"`.
+    pub name: &'static str,
+    /// Small dense id of the recording thread (assigned on first span).
+    pub thread: u32,
+    /// Global sequence number in record order (gap-free while enabled).
+    pub seq: u64,
+    /// Nanoseconds from the trace epoch to span entry.
+    pub t_enter_ns: u64,
+    /// Nanoseconds from the trace epoch to span exit.
+    pub t_exit_ns: u64,
+}
+
+impl SpanRecord {
+    /// Span duration in nanoseconds (saturating).
+    pub fn duration_ns(&self) -> u64 {
+        self.t_exit_ns.saturating_sub(self.t_enter_ns)
+    }
+}
+
+/// Counters describing the trace sink, for exposition in metrics
+/// snapshots.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TraceStats {
+    /// Whether tracing is currently enabled.
+    pub enabled: bool,
+    /// Ring capacity in records (0 when tracing was never enabled).
+    pub capacity: usize,
+    /// Total spans recorded since the last `enable()`.
+    pub recorded: u64,
+    /// Spans overwritten after the ring filled.
+    pub dropped: u64,
+}
+
+struct Ring {
+    epoch: Instant,
+    buf: Vec<SpanRecord>,
+    capacity: usize,
+    head: usize,
+    seq: u64,
+    recorded: u64,
+    dropped: u64,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static RING: Mutex<Option<Ring>> = Mutex::new(None);
+static NEXT_THREAD_ID: AtomicU32 = AtomicU32::new(1);
+
+thread_local! {
+    static THREAD_ID: Cell<u32> = const { Cell::new(0) };
+}
+
+fn thread_id() -> u32 {
+    THREAD_ID.with(|c| {
+        let id = c.get();
+        if id != 0 {
+            return id;
+        }
+        let id = NEXT_THREAD_ID.fetch_add(1, Ordering::Relaxed);
+        c.set(id);
+        id
+    })
+}
+
+/// Turn tracing on with a fresh ring of `capacity` records (clamped to
+/// at least 1).  Any previously recorded spans are discarded.
+pub fn enable(capacity: usize) {
+    let capacity = capacity.max(1);
+    let mut g = RING.lock().unwrap();
+    *g = Some(Ring {
+        epoch: Instant::now(),
+        buf: Vec::with_capacity(capacity),
+        capacity,
+        head: 0,
+        seq: 0,
+        recorded: 0,
+        dropped: 0,
+    });
+    ENABLED.store(true, Ordering::Release);
+}
+
+/// Turn tracing off.  The ring (and its stats) are kept readable via
+/// [`snapshot`] / [`stats`] until the next [`enable`].
+pub fn disable() {
+    ENABLED.store(false, Ordering::Release);
+}
+
+/// Whether spans are currently being recorded.
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Enable tracing if `SAC_TRACE` is set to `1`/`true`/`on`/`yes`
+/// (case-insensitive).  `SAC_TRACE_CAPACITY` overrides the ring size.
+pub fn init_from_env() {
+    let on = std::env::var("SAC_TRACE")
+        .map(|v| {
+            let v = v.trim().to_ascii_lowercase();
+            v == "1" || v == "true" || v == "on" || v == "yes"
+        })
+        .unwrap_or(false);
+    if !on {
+        return;
+    }
+    let capacity = std::env::var("SAC_TRACE_CAPACITY")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .unwrap_or(DEFAULT_CAPACITY);
+    enable(capacity);
+}
+
+/// Current sink counters (all zero if tracing was never enabled).
+pub fn stats() -> TraceStats {
+    let g = RING.lock().unwrap();
+    match g.as_ref() {
+        Some(r) => TraceStats {
+            enabled: enabled(),
+            capacity: r.capacity,
+            recorded: r.recorded,
+            dropped: r.dropped,
+        },
+        None => TraceStats::default(),
+    }
+}
+
+/// Chronological copy of the ring contents (oldest record first).
+pub fn snapshot() -> Vec<SpanRecord> {
+    let g = RING.lock().unwrap();
+    match g.as_ref() {
+        Some(r) => {
+            if r.buf.len() < r.capacity || r.head == 0 {
+                r.buf.clone()
+            } else {
+                let mut out = Vec::with_capacity(r.capacity);
+                out.extend_from_slice(&r.buf[r.head..]);
+                out.extend_from_slice(&r.buf[..r.head]);
+                out
+            }
+        }
+        None => Vec::new(),
+    }
+}
+
+/// An in-flight span.  Records itself into the ring when dropped; does
+/// nothing (and allocated nothing) if tracing was disabled at entry.
+#[must_use = "a span records its duration when dropped; binding it to _ drops it immediately"]
+pub struct Span {
+    name: &'static str,
+    enter: Option<Instant>,
+}
+
+/// Open a span.  When tracing is disabled this is a relaxed atomic load
+/// and a two-word struct — no clock read, no lock, no allocation.
+#[inline]
+pub fn span(name: &'static str) -> Span {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return Span { name, enter: None };
+    }
+    Span {
+        name,
+        enter: Some(Instant::now()),
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let enter = match self.enter {
+            Some(t) => t,
+            None => return,
+        };
+        let exit = Instant::now();
+        let tid = thread_id();
+        let mut g = RING.lock().unwrap();
+        let r = match g.as_mut() {
+            Some(r) => r,
+            None => return,
+        };
+        // `duration_since` saturates to zero for pre-epoch instants, so
+        // a span opened across an `enable()` cannot panic.
+        let epoch = r.epoch;
+        let ns = |t: Instant| {
+            t.duration_since(epoch)
+                .as_nanos()
+                .min(u128::from(u64::MAX)) as u64
+        };
+        let rec = SpanRecord {
+            name: self.name,
+            thread: tid,
+            seq: r.seq,
+            t_enter_ns: ns(enter),
+            t_exit_ns: ns(exit),
+        };
+        r.seq += 1;
+        r.recorded += 1;
+        if r.buf.len() < r.capacity {
+            r.buf.push(rec);
+        } else {
+            let head = r.head;
+            r.buf[head] = rec;
+            r.head = (head + 1) % r.capacity;
+            r.dropped += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_span_records_nothing() {
+        // NOTE: trace state is process-global; unit tests here only make
+        // filtered / monotone assertions so they stay robust under the
+        // parallel test harness.  Exact-count tests live in
+        // tests/observability.rs behind a serialization guard.
+        let before = stats().recorded;
+        if !enabled() {
+            let _s = span("trace.test.disabled");
+            drop(span("trace.test.disabled"));
+            assert_eq!(stats().recorded, before);
+        }
+    }
+
+    #[test]
+    fn enabled_span_lands_with_ordered_timestamps() {
+        enable(4096);
+        {
+            let _s = span("trace.test.enabled_unique_xyzzy");
+            std::hint::black_box(3 + 4);
+        }
+        let snap = snapshot();
+        let mine: Vec<_> = snap
+            .iter()
+            .filter(|r| r.name == "trace.test.enabled_unique_xyzzy")
+            .collect();
+        assert!(!mine.is_empty(), "span missing from ring");
+        for r in &mine {
+            assert!(r.t_exit_ns >= r.t_enter_ns);
+        }
+        disable();
+    }
+
+    #[test]
+    fn pre_epoch_span_saturates_instead_of_panicking() {
+        let s = span("trace.test.pre_epoch"); // possibly disabled → None
+        enable(64);
+        let s2 = span("trace.test.pre_epoch_live");
+        drop(s); // enter (if any) predates the new epoch: must not panic
+        drop(s2);
+        let snap = snapshot();
+        assert!(snap
+            .iter()
+            .filter(|r| r.name.starts_with("trace.test.pre_epoch"))
+            .all(|r| r.t_exit_ns >= r.t_enter_ns));
+        disable();
+    }
+
+    #[test]
+    fn thread_ids_are_stable_within_a_thread() {
+        let a = thread_id();
+        let b = thread_id();
+        assert_eq!(a, b);
+        assert_ne!(a, 0);
+        let other = std::thread::spawn(thread_id).join().unwrap();
+        assert_ne!(other, a, "two threads shared a trace thread id");
+    }
+}

@@ -1,0 +1,774 @@
+//! Observability integration suite (ISSUE 7 acceptance).
+//!
+//! What is pinned here:
+//!  * schema stability — the Prometheus and canonical-JSON expositions
+//!    are golden-tested byte for byte against hand-computed values (the
+//!    golden snapshot uses power-of-two nanosecond latencies so every
+//!    derived float is an exact dyadic rational);
+//!  * merge algebra — `ServeMetrics::merge` is exactly associative and
+//!    commutative: any fold order over random lanes yields a bit-identical
+//!    aggregate (property test);
+//!  * tracing under concurrency — spans recorded from every worker-pool
+//!    thread land in the ring with unique, ordered sequence numbers and
+//!    no torn records; the ring wraps with exact drop accounting;
+//!  * zero-cost disabled — recording a disabled span performs no heap
+//!    allocation (counting global allocator), and the enabled steady
+//!    state doesn't allocate either;
+//!  * end-to-end counts — chaos corner and infra campaigns, including a
+//!    latency-injection fault plan, produce histograms whose counts
+//!    equal the delivered requests at every (node, regime, temperature)
+//!    corner; the CLI `--metrics-out` / `metrics` surfaces emit the same
+//!    invariants through the binary.
+//!
+//! Trace state is process-global, so every test that enables tracing or
+//! records spans in-process serializes on `TRACE_GUARD`.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::path::{Path, PathBuf};
+use std::process::Command;
+use std::sync::{Arc, Barrier, Mutex, MutexGuard};
+use std::time::Duration;
+
+use sac::coordinator::{
+    metrics_file_json, prometheus_exposition, synthetic_engine, MetricsSnapshot, Router,
+    RouterConfig, ServeMetrics, StageSnapshot,
+};
+use sac::faults::{
+    chaos_corners, chaos_net, run_corner_with_metrics, run_infra_with_metrics, AnalogFault,
+    ChaosConfig, DriftKind, FaultPlan, InfraFault,
+};
+use sac::prop_assert;
+use sac::runtime::FaultyExec;
+use sac::util::json::{self, Json};
+use sac::util::pool::WorkerPool;
+use sac::util::propcheck;
+use sac::util::trace::{self, TraceStats};
+
+// ---------------------------------------------------------------------
+// counting allocator: per-thread allocation counter for the zero-cost
+// tracing assertions (deallocation is uncounted — only new allocations
+// matter for the hot path)
+// ---------------------------------------------------------------------
+
+struct CountingAlloc;
+
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        // try_with: TLS may be mid-teardown when a destructor allocates
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn thread_allocs() -> u64 {
+    ALLOCS.with(|c| c.get())
+}
+
+// ---------------------------------------------------------------------
+// trace-state serialization (tracing is process-global; the test harness
+// runs #[test] fns on parallel threads)
+// ---------------------------------------------------------------------
+
+static TRACE_GUARD: Mutex<()> = Mutex::new(());
+
+fn trace_lock() -> MutexGuard<'static, ()> {
+    TRACE_GUARD.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+// ---------------------------------------------------------------------
+// golden snapshot: every latency is a power-of-two nanosecond count, so
+// each derived float (mean, quantiles, throughput) is an exact dyadic
+// rational and the serialized text is platform-independent.
+//
+// One batch of 2 rows at 2^20 ns = 1048576 ns:
+//   bucket index = (octave 16)·32 + sub 0 = 512, bounds [1048576, 1081344)
+//   mean = p50 = p99 = 1.048576 ms (single sample: clamped exact)
+//   throughput = 2·10^9 / 2^20 = 1907.3486328125 req/s (dyadic)
+// ---------------------------------------------------------------------
+
+fn golden_snapshot() -> MetricsSnapshot {
+    let mut alpha = ServeMetrics::default();
+    alpha.record_batch(2, Duration::from_nanos(1 << 20));
+    let beta = ServeMetrics::default();
+    let mut aggregate = alpha.clone();
+    aggregate.merge(&beta);
+    MetricsSnapshot {
+        name: "golden".into(),
+        stages: StageSnapshot {
+            submitted: 2,
+            rejected: 1,
+            batches_enqueued: 1,
+            deadline_flushes: 1,
+            batches_completed: 1,
+            batches_failed: 0,
+            rows_delivered: 2,
+            responses_taken: 2,
+            wait_timeouts: 0,
+        },
+        lanes: vec![("alpha".into(), alpha), ("beta".into(), beta)],
+        aggregate,
+        trace: TraceStats {
+            enabled: true,
+            capacity: 64,
+            recorded: 5,
+            dropped: 0,
+        },
+    }
+}
+
+fn golden_path(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/goldens")
+        .join(name)
+}
+
+fn check_golden(name: &str, produced: &str) {
+    let path = golden_path(name);
+    if std::env::var("SAC_UPDATE_GOLDENS").is_ok() {
+        std::fs::write(&path, format!("{}\n", produced.trim_end())).unwrap();
+        return;
+    }
+    let want = std::fs::read_to_string(&path).unwrap_or_else(|e| {
+        panic!(
+            "reading golden {}: {e} (regenerate with SAC_UPDATE_GOLDENS=1)",
+            path.display()
+        )
+    });
+    assert_eq!(
+        produced.trim_end(),
+        want.trim_end(),
+        "golden mismatch for {name} (regenerate with SAC_UPDATE_GOLDENS=1 \
+         only if the format change is intentional — this is the schema contract)"
+    );
+}
+
+// ---------------------------------------------------------------------
+// satellite 2: golden-file exposition tests
+// ---------------------------------------------------------------------
+
+#[test]
+fn golden_json_exposition_is_stable() {
+    let snap = golden_snapshot();
+    let text = metrics_file_json(std::slice::from_ref(&snap)).to_string();
+    check_golden("metrics.json", &text);
+    // the canonical text round-trips through the parser unchanged
+    let back = json::parse(&text).unwrap();
+    assert_eq!(back.to_string(), text);
+    assert_eq!(back.get("schema").unwrap().as_str().unwrap(), "sac-metrics/v1");
+    let snap_json = &back.get("snapshots").unwrap().as_arr().unwrap()[0];
+    assert_eq!(snap_json.get("router").unwrap().as_str().unwrap(), "golden");
+}
+
+#[test]
+fn golden_prometheus_exposition_is_stable() {
+    let snap = golden_snapshot();
+    let prom = snap.prometheus();
+    check_golden("metrics.prom", &prom);
+    // the single-snapshot shorthand equals the slice exposition
+    assert_eq!(prom, prometheus_exposition(std::slice::from_ref(&snap)));
+}
+
+#[test]
+fn golden_values_are_hand_checkable() {
+    // the dyadic arithmetic behind the golden files, asserted in-process
+    // so a histogram change fails here with numbers, not a text diff
+    let snap = golden_snapshot();
+    let (task, m) = &snap.lanes[0];
+    assert_eq!(task, "alpha");
+    assert_eq!(m.batch_latency.buckets(), vec![(512, 1)]);
+    assert_eq!(m.request_latency.buckets(), vec![(512, 2)]);
+    assert_eq!(sac::coordinator::telemetry::bucket_bounds(512), (1_048_576, 1_081_344));
+    assert_eq!(m.mean_latency_ms(), 1.048576);
+    assert_eq!(m.p50_latency_ms(), 1.048576);
+    assert_eq!(m.p99_latency_ms(), 1.048576);
+    assert_eq!(m.throughput_rps(), 1907.3486328125);
+    assert_eq!(snap.aggregate, snap.lanes[0].1);
+}
+
+// ---------------------------------------------------------------------
+// satellite 1: merge-order invariance (property test)
+// ---------------------------------------------------------------------
+
+#[test]
+fn metrics_merge_is_order_and_grouping_invariant() {
+    propcheck::check(0x5AC_0B5, 40, |g| -> Result<(), String> {
+        let n_lanes = g.usize_in(1, 6);
+        let mut lanes: Vec<ServeMetrics> = (0..n_lanes).map(|_| ServeMetrics::default()).collect();
+        for _ in 0..g.usize_in(1, 60) {
+            let lane = g.usize_in(0, n_lanes - 1);
+            let rows = g.usize_in(1, 32);
+            let ns = g.usize_in(1, 50_000_000) as u64;
+            lanes[lane].record_batch(rows, Duration::from_nanos(ns));
+        }
+
+        let mut fwd = ServeMetrics::default();
+        for m in &lanes {
+            fwd.merge(m);
+        }
+        let mut rev = ServeMetrics::default();
+        for m in lanes.iter().rev() {
+            rev.merge(m);
+        }
+        // pairwise-tree fold: a different *grouping*, not just order
+        let mut level = lanes.clone();
+        while level.len() > 1 {
+            let mut next = Vec::with_capacity(level.len().div_ceil(2));
+            for pair in level.chunks(2) {
+                let mut acc = pair[0].clone();
+                if let Some(b) = pair.get(1) {
+                    acc.merge(b);
+                }
+                next.push(acc);
+            }
+            level = next;
+        }
+        let tree = level.pop().unwrap();
+
+        prop_assert!(fwd == rev, "forward vs reverse fold diverged");
+        prop_assert!(fwd == tree, "sequential vs tree fold diverged");
+        prop_assert!(
+            fwd.to_json().to_string() == rev.to_json().to_string(),
+            "serialized aggregates differ between fold orders"
+        );
+        prop_assert!(
+            fwd.p99_latency_ms().to_bits() == tree.p99_latency_ms().to_bits(),
+            "p99 is not bitwise fold-invariant"
+        );
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// satellite 3: tracing under concurrency + zero-allocation hot path
+// ---------------------------------------------------------------------
+
+#[test]
+fn spans_from_all_pool_threads_land_without_corruption() {
+    let _g = trace_lock();
+    trace::enable(65536);
+    {
+        let pool = WorkerPool::new(4);
+        // a barrier job per worker forces every thread to record at
+        // least one span concurrently
+        let barrier = Arc::new(Barrier::new(4));
+        for _ in 0..4 {
+            let b = Arc::clone(&barrier);
+            pool.execute(move || {
+                let _s = trace::span("obs.barrier");
+                b.wait();
+            });
+        }
+        for _ in 0..400 {
+            pool.execute(|| drop(trace::span("obs.job")));
+        }
+    } // WorkerPool::drop drains the queue and joins the workers
+
+    let snap = trace::snapshot();
+    let barrier_spans: Vec<_> = snap.iter().filter(|r| r.name == "obs.barrier").collect();
+    assert_eq!(barrier_spans.len(), 4);
+    assert_eq!(snap.iter().filter(|r| r.name == "obs.job").count(), 400);
+    let threads: std::collections::BTreeSet<u32> =
+        barrier_spans.iter().map(|r| r.thread).collect();
+    assert_eq!(threads.len(), 4, "barrier spans must come from 4 distinct threads");
+
+    // no torn records: exit ≥ enter everywhere, sequence numbers unique
+    // and strictly increasing in (chronological) snapshot order
+    for r in &snap {
+        assert!(r.t_exit_ns >= r.t_enter_ns, "torn span record: {r:?}");
+    }
+    let seqs: Vec<u64> = snap.iter().map(|r| r.seq).collect();
+    assert!(
+        seqs.windows(2).all(|w| w[0] < w[1]),
+        "snapshot is not in unique record order"
+    );
+
+    let st = trace::stats();
+    assert_eq!(st.recorded, 404);
+    assert_eq!(st.dropped, 0);
+    trace::disable();
+}
+
+#[test]
+fn ring_wraps_and_counts_drops_exactly() {
+    let _g = trace_lock();
+    trace::enable(16);
+    for _ in 0..40 {
+        drop(trace::span("obs.wrap"));
+    }
+    let snap = trace::snapshot();
+    assert_eq!(snap.len(), 16);
+    // the survivors are exactly the 16 most recent records, oldest first
+    let seqs: Vec<u64> = snap.iter().map(|r| r.seq).collect();
+    assert_eq!(seqs, (24..40).collect::<Vec<u64>>());
+    let st = trace::stats();
+    assert_eq!(st.capacity, 16);
+    assert_eq!(st.recorded, 40);
+    assert_eq!(st.dropped, 24);
+    trace::disable();
+}
+
+#[test]
+fn disabled_tracing_allocates_nothing() {
+    let _g = trace_lock();
+    trace::disable();
+    // warm up lazy thread-local state outside the measured window
+    for _ in 0..16 {
+        drop(trace::span("obs.warm"));
+    }
+    let before = thread_allocs();
+    for _ in 0..10_000 {
+        drop(trace::span("obs.noop"));
+    }
+    let after = thread_allocs();
+    assert_eq!(
+        after - before,
+        0,
+        "a disabled span must not allocate (router hot path)"
+    );
+}
+
+#[test]
+fn enabled_tracing_steady_state_allocates_nothing() {
+    let _g = trace_lock();
+    trace::enable(64);
+    // fill past capacity so both the push and the overwrite paths run
+    // inside the measured window without growing the ring
+    for _ in 0..200 {
+        drop(trace::span("obs.fill"));
+    }
+    let before = thread_allocs();
+    for _ in 0..1_000 {
+        drop(trace::span("obs.steady"));
+    }
+    assert_eq!(
+        thread_allocs() - before,
+        0,
+        "steady-state span recording must not allocate"
+    );
+    trace::disable();
+}
+
+// ---------------------------------------------------------------------
+// tentpole: stage counters through the live router pipeline
+// ---------------------------------------------------------------------
+
+#[test]
+fn stage_counters_track_the_request_pipeline() {
+    let _g = trace_lock();
+    let engine = synthetic_engine(11, &[6, 8, 3], 8).unwrap();
+    let router = Router::new(
+        RouterConfig {
+            workers: 2,
+            max_wait: Duration::from_millis(1),
+            ..RouterConfig::default()
+        },
+        vec![("only".into(), engine)],
+    );
+    // rejections: unknown lane, then a dimension mismatch
+    assert!(router.submit(5, vec![0.0; 6]).is_err());
+    assert!(router.submit(0, vec![0.0; 3]).is_err());
+    // 3 requests against batch size 8: delivery requires a deadline flush
+    let ids: Vec<_> = (0..3)
+        .map(|i| router.submit(0, vec![0.1 * i as f32; 6]).unwrap())
+        .collect();
+    for id in ids {
+        router.wait(id, Duration::from_secs(30)).unwrap();
+    }
+    let s = router.stages();
+    assert_eq!(s.submitted, 3);
+    assert_eq!(s.rejected, 2);
+    assert_eq!(s.rows_delivered, 3);
+    assert_eq!(s.responses_taken, 3);
+    assert!(s.deadline_flushes >= 1, "partial batch must be deadline-flushed");
+    assert!(s.batches_enqueued >= 1);
+    assert_eq!(s.batches_completed, s.batches_enqueued);
+    assert_eq!(s.batches_failed, 0);
+    assert_eq!(s.wait_timeouts, 0);
+
+    let snap = router.metrics_snapshot("pipeline");
+    assert_eq!(snap.name, "pipeline");
+    assert_eq!(snap.stages, s);
+    assert_eq!(snap.lanes.len(), 1);
+    assert_eq!(snap.aggregate.request_latency.count(), 3);
+    assert_eq!(snap.aggregate.total_rows, 3);
+    router.shutdown();
+}
+
+#[test]
+fn wait_timeouts_are_counted() {
+    let _g = trace_lock();
+    let engine = synthetic_engine(12, &[4, 6, 3], 4)
+        .unwrap()
+        .with_faults(Arc::new(FaultyExec::slow(Duration::from_millis(200))));
+    let router = Router::new(
+        RouterConfig {
+            workers: 1,
+            ..RouterConfig::default()
+        },
+        vec![("slow".into(), engine)],
+    );
+    // a full batch enqueues immediately; the engine sleeps 200 ms per
+    // batch, so a 1 ms wait must time out
+    let ids: Vec<_> = (0..4)
+        .map(|_| router.submit(0, vec![0.25; 4]).unwrap())
+        .collect();
+    assert!(router.wait(ids[0], Duration::from_millis(1)).is_err());
+    assert!(router.stages().wait_timeouts >= 1);
+    router.drain(Duration::from_secs(30)).unwrap();
+    for id in ids {
+        router.try_take(id).unwrap().unwrap();
+    }
+    let s = router.stages();
+    assert_eq!(s.wait_timeouts, 1);
+    assert_eq!(s.rows_delivered, 4);
+    assert_eq!(s.responses_taken, 4);
+    router.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// satellite 4: histogram counts equal delivered requests at every
+// (node, regime, temperature) corner, including under latency injection
+// ---------------------------------------------------------------------
+
+#[test]
+fn corner_histograms_count_every_delivered_request() {
+    let _g = trace_lock();
+    // run the full analog campaign with the span ring live: the snapshot
+    // must carry the trace stats alongside the histograms
+    trace::enable(8192);
+    let net = chaos_net();
+    let plan = FaultPlan {
+        seed: 20260808,
+        analog: vec![
+            AnalogFault::Mismatch { sigma_scale: 1.0 },
+            AnalogFault::TempDrift {
+                kind: DriftKind::Step,
+                from_c: 0.0,
+                to_c: 85.0,
+                steps: 2,
+            },
+        ],
+        infra: vec![],
+    };
+    let cfg = ChaosConfig {
+        trials: 2,
+        workers: 3,
+        eval_rows: 24,
+    };
+    for (node, regime) in chaos_corners() {
+        let (report, snap) = run_corner_with_metrics(node, regime, &net, &plan, &cfg).unwrap();
+        // trials 0 and 1 pin the two drifted temperatures (0 °C, 85 °C)
+        assert_eq!(report.trial_temp_c, vec![0.0, 85.0]);
+        assert_eq!(snap.lanes.len(), cfg.trials + 1, "nominal + one lane per trial");
+        for (task, m) in &snap.lanes {
+            assert_eq!(
+                m.total_rows, cfg.eval_rows,
+                "lane {task} rows at {}/{}",
+                report.node, report.regime
+            );
+            assert_eq!(
+                m.request_latency.count(),
+                cfg.eval_rows as u64,
+                "lane {task} histogram count at {}/{}",
+                report.node,
+                report.regime
+            );
+            assert!(m.batch_latency.count() >= 1);
+            assert_eq!(m.total_batches as u64, m.batch_latency.count());
+        }
+        let total = ((cfg.trials + 1) * cfg.eval_rows) as u64;
+        assert_eq!(snap.aggregate.request_latency.count(), total);
+        assert_eq!(snap.stages.submitted, total);
+        assert_eq!(snap.stages.rows_delivered, total);
+        assert_eq!(snap.stages.responses_taken, total);
+        assert_eq!(snap.stages.rejected, 0);
+        assert_eq!(snap.stages.batches_failed, 0);
+        assert_eq!(snap.name, format!("chaos.corner.{}", report.node));
+        assert!(snap.trace.enabled, "snapshot must capture live trace state");
+        assert!(snap.trace.recorded > 0, "serving under tracing records spans");
+    }
+    // the campaign's own spans are present by name
+    let names: std::collections::BTreeSet<&str> =
+        trace::snapshot().iter().map(|r| r.name).collect();
+    for expected in ["chaos.corner", "router.submit", "engine.run_batch", "batch.forward"] {
+        assert!(names.contains(expected), "missing span {expected:?} in {names:?}");
+    }
+    trace::disable();
+}
+
+#[test]
+fn latency_injection_shows_up_in_the_histograms() {
+    let _g = trace_lock();
+    let plan = FaultPlan {
+        seed: 4242,
+        analog: vec![],
+        infra: vec![
+            InfraFault::SlowEngine { delay_us: 2_000 },
+            InfraFault::SubmitStorm {
+                submitters: 3,
+                requests: 45,
+            },
+        ],
+    };
+    let cfg = ChaosConfig {
+        trials: 1,
+        workers: 3,
+        eval_rows: 8,
+    };
+    let (report, snap) = run_infra_with_metrics(&plan, &cfg).unwrap();
+    assert!(report.resolved_exactly_once);
+    assert_eq!(report.submitted, 45);
+    assert_eq!(report.answered, 45, "no panic fault: everything answers");
+    // every answered request is exactly one histogram sample
+    assert_eq!(snap.aggregate.request_latency.count(), 45);
+    assert_eq!(snap.aggregate.total_rows, 45);
+    assert_eq!(snap.stages.rows_delivered, 45);
+    // the injected 2 ms delay bounds every batch on the slow lane from below
+    let slow = &snap.lanes.iter().find(|(t, _)| t == "slow").unwrap().1;
+    assert!(slow.batch_latency.count() >= 1);
+    assert!(
+        slow.batch_latency.min_ns() >= 2_000_000,
+        "injected 2 ms delay missing from the histogram: min = {} ns",
+        slow.batch_latency.min_ns()
+    );
+    assert!(slow.p50_latency_ms() >= 2.0);
+    // the healthy lane served its share too
+    let healthy = &snap.lanes.iter().find(|(t, _)| t == "storm").unwrap().1;
+    assert!(healthy.total_rows > 0);
+    assert_eq!(snap.name, "chaos.infra");
+}
+
+// ---------------------------------------------------------------------
+// CLI surfaces: bench-serve --metrics-out, sac metrics, chaos --metrics-out
+// (subprocesses — no TRACE_GUARD needed)
+// ---------------------------------------------------------------------
+
+fn sac_bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_sac"))
+}
+
+fn temp_path(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("sac-obs-{}-{name}", std::process::id()))
+}
+
+#[test]
+fn bench_serve_metrics_out_counts_match_delivered_requests() {
+    let out = temp_path("bench.json");
+    let status = sac_bin()
+        .args([
+            "bench-serve",
+            "--tasks",
+            "2",
+            "--requests",
+            "64",
+            "--batch",
+            "8",
+            "--submitters",
+            "2",
+            "--workers",
+            "3",
+            "--metrics-out",
+            out.to_str().unwrap(),
+        ])
+        .env("SAC_TRACE", "1")
+        .status()
+        .unwrap();
+    assert!(status.success());
+
+    let j = json::parse_file(&out).unwrap();
+    assert_eq!(j.get("schema").unwrap().as_str().unwrap(), "sac-metrics/v1");
+    let snaps = j.get("snapshots").unwrap().as_arr().unwrap();
+    assert_eq!(snaps.len(), 1);
+    let snap = &snaps[0];
+    assert_eq!(snap.get("router").unwrap().as_str().unwrap(), "bench-serve");
+
+    let lanes = snap.get("lanes").unwrap().as_arr().unwrap();
+    assert_eq!(lanes.len(), 2);
+    let mut rows_total = 0usize;
+    for lane in lanes {
+        let m = lane.get("metrics").unwrap();
+        let rows = m.get("total_rows").unwrap().as_usize().unwrap();
+        let hist = m.get("request_latency").unwrap();
+        let count = hist.get("count").unwrap().as_usize().unwrap();
+        assert_eq!(
+            count,
+            rows,
+            "lane {} histogram count vs delivered rows",
+            lane.get("task").unwrap().as_str().unwrap()
+        );
+        // sparse bucket counts must sum to the total
+        let bucket_sum: usize = hist
+            .get("buckets")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|b| b.as_arr().unwrap()[1].as_usize().unwrap())
+            .sum();
+        assert_eq!(bucket_sum, count);
+        rows_total += rows;
+    }
+    assert_eq!(rows_total, 64);
+    let agg = snap.get("aggregate").unwrap();
+    assert_eq!(
+        agg.get("request_latency").unwrap().get("count").unwrap().as_usize().unwrap(),
+        64
+    );
+    // SAC_TRACE=1 reached the binary: spans were recorded
+    let tr = snap.get("trace").unwrap();
+    assert!(matches!(tr.get("enabled").unwrap(), Json::Bool(true)));
+    assert!(tr.get("recorded").unwrap().as_usize().unwrap() > 0);
+    let _ = std::fs::remove_file(&out);
+}
+
+#[test]
+fn metrics_cli_emits_parseable_canonical_json() {
+    let output = sac_bin()
+        .args([
+            "metrics", "--tasks", "1", "--requests", "32", "--batch", "8", "--seed", "9",
+            "--format", "json",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        output.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&output.stderr)
+    );
+    let stdout = String::from_utf8(output.stdout).unwrap();
+    let j = json::parse(stdout.trim()).unwrap();
+    assert_eq!(j.get("schema").unwrap().as_str().unwrap(), "sac-metrics/v1");
+    let snap = &j.get("snapshots").unwrap().as_arr().unwrap()[0];
+    assert_eq!(snap.get("router").unwrap().as_str().unwrap(), "metrics");
+    let agg = snap.get("aggregate").unwrap();
+    assert_eq!(agg.get("total_rows").unwrap().as_usize().unwrap(), 32);
+    assert_eq!(
+        agg.get("request_latency").unwrap().get("count").unwrap().as_usize().unwrap(),
+        32
+    );
+}
+
+#[test]
+fn metrics_cli_prometheus_exposition_is_wellformed() {
+    let output = sac_bin()
+        .args([
+            "metrics", "--tasks", "2", "--requests", "16", "--batch", "4", "--format", "prom",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        output.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&output.stderr)
+    );
+    let text = String::from_utf8(output.stdout).unwrap();
+    for family in [
+        "sac_requests_total",
+        "sac_batches_total",
+        "sac_busy_seconds_total",
+        "sac_stage_total",
+        "sac_trace_recorded_total",
+        "sac_trace_dropped_total",
+        "sac_batch_latency_seconds",
+        "sac_request_latency_seconds",
+    ] {
+        assert!(
+            text.contains(&format!("# HELP {family} ")),
+            "missing HELP for {family}"
+        );
+        assert!(
+            text.contains(&format!("# TYPE {family} ")),
+            "missing TYPE for {family}"
+        );
+    }
+    // HELP/TYPE once per family (valid exposition), histograms terminated
+    assert_eq!(text.matches("# TYPE sac_stage_total").count(), 1);
+    assert_eq!(text.matches("# TYPE sac_batch_latency_seconds").count(), 1);
+    assert!(text.contains("le=\"+Inf\""));
+    // format mode "prom" prints no JSON
+    assert!(!text.contains("\"schema\""));
+}
+
+#[test]
+fn chaos_metrics_out_writes_one_snapshot_per_stage() {
+    let out_dir = temp_path("chaos-out");
+    let metrics = temp_path("chaos-metrics.json");
+    // drift-only analog faults keep agreement high (see tests/chaos.rs),
+    // so this small campaign passes the envelope deterministically while
+    // still exercising latency injection end to end
+    let plan = FaultPlan {
+        seed: 91,
+        analog: vec![AnalogFault::TempDrift {
+            kind: DriftKind::Ramp,
+            from_c: 27.0,
+            to_c: 85.0,
+            steps: 2,
+        }],
+        infra: vec![
+            InfraFault::SlowEngine { delay_us: 1_000 },
+            InfraFault::SubmitStorm {
+                submitters: 3,
+                requests: 36,
+            },
+        ],
+    };
+    let plan_path = temp_path("chaos-plan.json");
+    plan.save(&plan_path).unwrap();
+    let status = sac_bin()
+        .args([
+            "chaos",
+            "--plan",
+            plan_path.to_str().unwrap(),
+            "--trials",
+            "2",
+            "--workers",
+            "3",
+            "--out",
+            out_dir.to_str().unwrap(),
+            "--metrics-out",
+            metrics.to_str().unwrap(),
+        ])
+        .status()
+        .unwrap();
+    assert!(status.success());
+    let j = json::parse_file(&metrics).unwrap();
+    let snaps = j.get("snapshots").unwrap().as_arr().unwrap();
+    // two paper corners, then the infra storm
+    assert_eq!(snaps.len(), 3);
+    let names: Vec<&str> = snaps
+        .iter()
+        .map(|s| s.get("router").unwrap().as_str().unwrap())
+        .collect();
+    assert!(names[0].starts_with("chaos.corner."));
+    assert!(names[1].starts_with("chaos.corner."));
+    assert_eq!(names[2], "chaos.infra");
+    assert_ne!(names[0], names[1], "the two corners are distinct nodes");
+    for s in snaps {
+        let agg = s.get("aggregate").unwrap();
+        let rows = agg.get("total_rows").unwrap().as_usize().unwrap();
+        let count = agg
+            .get("request_latency")
+            .unwrap()
+            .get("count")
+            .unwrap()
+            .as_usize()
+            .unwrap();
+        assert_eq!(count, rows, "snapshot {:?}", s.get("router").unwrap());
+        assert!(rows > 0);
+    }
+    let _ = std::fs::remove_file(&metrics);
+    let _ = std::fs::remove_file(&plan_path);
+    let _ = std::fs::remove_dir_all(&out_dir);
+}
