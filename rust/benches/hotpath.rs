@@ -212,6 +212,127 @@ fn main() {
         reports.push(rspan);
     }
 
+    // --- hot spot 10: row-sharded batched kernel + grid cache ------------
+    // The ISSUE-8 acceptance floor: `forward_batch` sharded over 4 threads
+    // must be ≥ 1.8× the serial kernel on a 256-row batch (asserted only
+    // when the host actually has ≥ 4 cores — the sharding is pure overhead
+    // on a single-core box), and the logits must be bit-identical at every
+    // thread count regardless.  The grid-cache microbench times a cold
+    // grid build against a cached (Arc-shared) kernel construction.
+    {
+        use sac::nn::batch::{grid_cache_clear, grid_cache_stats, BatchKernel, GridConfig};
+        use sac::nn::Activation;
+        let sizes = vec![16usize, 12, 4];
+        let kernel = BatchKernel::new(
+            Box::new(Algorithmic::relu()),
+            Activation::Phi1,
+            3,
+            1.0,
+            &GridConfig::default(),
+        );
+        let mut rng = Rng::new(11);
+        let nl = sizes.len() - 1;
+        let mut weights: Vec<Vec<f64>> = Vec::new();
+        let mut biases: Vec<Vec<f64>> = Vec::new();
+        for li in 0..nl {
+            weights.push(
+                (0..sizes[li] * sizes[li + 1])
+                    .map(|_| rng.uniform_in(-0.8, 0.8))
+                    .collect(),
+            );
+            biases.push((0..sizes[li + 1]).map(|_| rng.uniform_in(-0.2, 0.2)).collect());
+        }
+        let rows = 256;
+        let x: Vec<f32> = (0..rows * sizes[0])
+            .map(|_| rng.uniform_in(-1.0, 1.0) as f32)
+            .collect();
+        // bit-identity first: determinism holds on any host
+        let serial = kernel.forward_batch_threads(&sizes, &weights, &biases, &x, rows, 1);
+        for threads in [2usize, 4] {
+            let par = kernel.forward_batch_threads(&sizes, &weights, &biases, &x, rows, threads);
+            assert_eq!(serial, par, "kernel logits diverged at {threads} threads");
+        }
+        let quick = Bench::quick();
+        let mut means = Vec::new();
+        for threads in [1usize, 2, 4] {
+            let r = quick.run(
+                &format!("kernel/forward_batch 256×[16,12,4] threads={threads}"),
+                || {
+                    black_box(kernel.forward_batch_threads(
+                        &sizes, &weights, &biases, &x, rows, threads,
+                    ))
+                },
+            );
+            means.push(r.mean_ns());
+            reports.push(r);
+        }
+        let cores = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        let speedup = means[0] / means[2];
+        println!(
+            "kernel/forward_batch 4-thread speedup: {speedup:.2}× \
+             (acceptance floor: 1.8× on ≥ 4 cores; this host has {cores})"
+        );
+        if cores >= 4 {
+            assert!(
+                speedup >= 1.8,
+                "4-thread kernel speedup {speedup:.2}× is below the 1.8× acceptance floor"
+            );
+        } else {
+            println!("  (speedup floor not asserted: {cores} core(s) available)");
+        }
+
+        // grid cache: cold build vs Arc-shared cache hit
+        grid_cache_clear();
+        let cache_cfg = GridConfig {
+            proto_range: 6.0,
+            proto_density: 2048,
+            act_range: 16.0,
+            act_density: 1024,
+        };
+        let s0 = grid_cache_stats();
+        let t0 = std::time::Instant::now();
+        let cold_kernel = BatchKernel::new(
+            Box::new(Algorithmic::relu()),
+            Activation::Phi1,
+            3,
+            1.0,
+            &cache_cfg,
+        );
+        let cold = t0.elapsed();
+        let t1 = std::time::Instant::now();
+        let warm_kernel = BatchKernel::new(
+            Box::new(Algorithmic::relu()),
+            Activation::Phi1,
+            3,
+            1.0,
+            &cache_cfg,
+        );
+        let warm = t1.elapsed();
+        let s1 = grid_cache_stats();
+        assert!(
+            s1.misses >= s0.misses + 1,
+            "cold kernel construction must miss the grid cache"
+        );
+        assert!(
+            s1.hits >= s0.hits + 1,
+            "second kernel construction must hit the grid cache"
+        );
+        assert!(
+            cold_kernel.shares_grids_with(&warm_kernel),
+            "a cache hit must share the grid allocations"
+        );
+        println!(
+            "kernel/grid-cache: cold build {:.3} ms, cached build {:.3} ms \
+             (+{} hits / +{} misses)",
+            cold.as_secs_f64() * 1e3,
+            warm.as_secs_f64() * 1e3,
+            s1.hits - s0.hits,
+            s1.misses - s0.misses
+        );
+    }
+
     println!("\n=== hotpath benchmarks ===");
     for r in &reports {
         println!("{}", r.report());

@@ -37,6 +37,17 @@ pub trait HProvider {
 
     /// Short backend label for reports.
     fn label(&self) -> String;
+
+    /// Stable identity for the process-wide lookup-grid cache
+    /// (`nn::batch`).  `Some(key)` promises that two providers returning
+    /// the same key produce bit-identical `h` over all inputs, so their
+    /// sampled grids may be shared.  Backends that cannot make that
+    /// promise cheaply — the device-exact circuit solve with its mutable
+    /// mismatch vectors, or the fault harness's drift wrappers — keep the
+    /// `None` default and build private grids.
+    fn cache_key(&self) -> Option<String> {
+        None
+    }
 }
 
 /// Pure-algorithm backend (ReLU GMP — the paper's eq. 6 with eq. 3).
@@ -66,6 +77,13 @@ impl HProvider for Algorithmic {
     fn label(&self) -> String {
         format!("algorithmic({:?})", self.shape)
     }
+
+    fn cache_key(&self) -> Option<String> {
+        Some(match self.shape {
+            Shape::Relu => "alg/relu".to_string(),
+            Shape::Softplus { width } => format!("alg/softplus/{:016x}", width.to_bits()),
+        })
+    }
 }
 
 impl HProvider for TableModel {
@@ -75,6 +93,18 @@ impl HProvider for TableModel {
 
     fn label(&self) -> String {
         format!("table({}/{}/{}C)", self.node.name, self.regime, self.t_c)
+    }
+
+    fn cache_key(&self) -> Option<String> {
+        // exact calibration identity: corner name plus the fitted knee
+        // width / temperature bits
+        Some(format!(
+            "table/{}/{}/t={:016x}/w={:016x}",
+            self.node.name,
+            self.regime,
+            self.t_c.to_bits(),
+            self.width.to_bits(),
+        ))
     }
 }
 

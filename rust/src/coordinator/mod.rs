@@ -31,8 +31,8 @@ pub use batcher::{Batch, DynamicBatcher};
 pub use metrics::ServeMetrics;
 pub use router::{RequestId, Response, Router, RouterConfig};
 pub use telemetry::{
-    metrics_file_json, prometheus_exposition, LatencyHistogram, MetricsSnapshot, StageCounters,
-    StageSnapshot, METRICS_SCHEMA,
+    kernel_stats, metrics_file_json, prometheus_exposition, KernelSnapshot, LatencyHistogram,
+    MetricsSnapshot, StageCounters, StageSnapshot, METRICS_SCHEMA,
 };
 
 use crate::data::TrainedNet;
@@ -86,6 +86,15 @@ impl Engine {
     /// (see [`crate::runtime::FaultyExec`]) — chaos-suite surface.
     pub fn with_faults(mut self, faults: std::sync::Arc<crate::runtime::FaultyExec>) -> Engine {
         self.exe = self.exe.with_faults(faults);
+        self
+    }
+
+    /// Set intra-batch row parallelism on the underlying executable (the
+    /// `--threads`/`SAC_THREADS` knob; see
+    /// [`Executable::with_par_threads`]).  Results are bit-identical at
+    /// any thread count.
+    pub fn with_par_threads(mut self, n: usize) -> Engine {
+        self.exe = self.exe.with_par_threads(n);
         self
     }
 

@@ -74,6 +74,11 @@ pub struct RouterConfig {
     /// flusher wake-up cadence (effective tail deadline is
     /// `max_wait + flush_tick`)
     pub flush_tick: Duration,
+    /// intra-batch row parallelism applied to every engine
+    /// (`--threads`/`SAC_THREADS`); `None` keeps each engine's own
+    /// setting.  Slab work runs on the process-wide slab pool, not the
+    /// router's worker pool, and results are bit-identical at any value.
+    pub kernel_threads: Option<usize>,
 }
 
 impl Default for RouterConfig {
@@ -82,6 +87,7 @@ impl Default for RouterConfig {
             workers: crate::util::pool::default_threads().min(8),
             max_wait: Duration::from_millis(2),
             flush_tick: Duration::from_micros(500),
+            kernel_threads: None,
         }
     }
 }
@@ -205,6 +211,10 @@ impl Router {
         let lanes = tasks
             .into_iter()
             .map(|(name, engine)| {
+                let engine = match cfg.kernel_threads {
+                    Some(n) => engine.with_par_threads(n),
+                    None => engine,
+                };
                 let queue = Mutex::new(LaneBatcher::new(engine.batch_size, engine.dim));
                 Lane {
                     name,
@@ -524,6 +534,7 @@ impl Router {
             stages: self.shared.stages.snapshot(),
             lanes,
             aggregate,
+            kernel: crate::coordinator::telemetry::kernel_stats(),
             trace: trace::stats(),
         }
     }
@@ -657,6 +668,7 @@ mod tests {
             workers,
             max_wait: Duration::from_millis(2),
             flush_tick: Duration::from_micros(200),
+            kernel_threads: None,
         }
     }
 
@@ -668,6 +680,43 @@ mod tests {
                 ("beta".into(), synthetic_engine(12, &[2, 3, 3], 3).unwrap()),
             ],
         )
+    }
+
+    #[test]
+    fn kernel_threads_config_is_bit_identical() {
+        use crate::coordinator::synthetic_engine_with_mode;
+        use crate::runtime::ExecMode;
+        let mk = || synthetic_engine_with_mode(31, &[4, 5, 3], 32, ExecMode::Batched).unwrap();
+        let serial = Router::new(
+            RouterConfig {
+                kernel_threads: Some(1),
+                ..quick_cfg(2)
+            },
+            vec![("t".into(), mk())],
+        );
+        let par = Router::new(
+            RouterConfig {
+                kernel_threads: Some(4),
+                ..quick_cfg(2)
+            },
+            vec![("t".into(), mk())],
+        );
+        let mut pairs = Vec::new();
+        for i in 0..32 {
+            let feat: Vec<f32> = (0..4).map(|j| 0.03 * (i * 4 + j) as f32 - 0.5).collect();
+            pairs.push((
+                serial.submit(0, feat.clone()).unwrap(),
+                par.submit(0, feat).unwrap(),
+            ));
+        }
+        serial.drain(Duration::from_secs(10)).unwrap();
+        par.drain(Duration::from_secs(10)).unwrap();
+        for (a, b) in pairs {
+            let ra = serial.try_take(a).unwrap().expect("serial answer");
+            let rb = par.try_take(b).unwrap().expect("parallel answer");
+            assert_eq!(ra.pred, rb.pred);
+            assert_eq!(ra.logits, rb.logits, "threaded kernel must be bit-identical");
+        }
     }
 
     #[test]

@@ -16,8 +16,9 @@ use crate::coordinator::ServeMetrics;
 use crate::util::json::Json;
 use crate::util::trace::TraceStats;
 
-/// Schema tag stamped on every metrics snapshot file.
-pub const METRICS_SCHEMA: &str = "sac-metrics/v1";
+/// Schema tag stamped on every metrics snapshot file.  v2 added the
+/// `kernel` block (batched-kernel dispatch + grid-cache counters).
+pub const METRICS_SCHEMA: &str = "sac-metrics/v2";
 
 /// Sub-bucket resolution: each octave is split into `2^SUB_BITS` buckets.
 pub const SUB_BITS: u32 = 5;
@@ -290,9 +291,53 @@ impl StageSnapshot {
     }
 }
 
+/// Process-wide batched-kernel counters at capture time: how batches
+/// were dispatched (parallel row-slabs vs the serial single-slab path)
+/// and how the shared grid cache behaved.  The sources are
+/// process-global (`nn::batch`), so concurrent routers see one shared
+/// set of counters — like the trace stats.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct KernelSnapshot {
+    /// `forward_batch` calls dispatched as parallel row-slabs.
+    pub parallel_batches: u64,
+    /// `forward_batch` calls run as one serial slab.
+    pub serial_batches: u64,
+    /// Kernel constructions that reused cached grids.
+    pub grid_cache_hits: u64,
+    /// Kernel constructions that sampled fresh grids.
+    pub grid_cache_misses: u64,
+}
+
+/// Capture the current process-wide batched-kernel counters.
+pub fn kernel_stats() -> KernelSnapshot {
+    let (parallel_batches, serial_batches) = crate::nn::batch::batch_dispatch_counts();
+    let cache = crate::nn::batch::grid_cache_stats();
+    KernelSnapshot {
+        parallel_batches,
+        serial_batches,
+        grid_cache_hits: cache.hits,
+        grid_cache_misses: cache.misses,
+    }
+}
+
+impl KernelSnapshot {
+    /// Canonical JSON form (alphabetical keys).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("grid_cache_hits", Json::Num(self.grid_cache_hits as f64)),
+            (
+                "grid_cache_misses",
+                Json::Num(self.grid_cache_misses as f64),
+            ),
+            ("parallel_batches", Json::Num(self.parallel_batches as f64)),
+            ("serial_batches", Json::Num(self.serial_batches as f64)),
+        ])
+    }
+}
+
 /// One self-contained metrics snapshot: a named router (or campaign
 /// stage), its stage counters, per-lane and aggregate `ServeMetrics`,
-/// and the trace-sink stats at capture time.
+/// the kernel counters, and the trace-sink stats at capture time.
 #[derive(Clone, Debug)]
 pub struct MetricsSnapshot {
     /// Snapshot name, e.g. `"serve"`, `"bench-serve"`, `"chaos.infra"`.
@@ -303,6 +348,8 @@ pub struct MetricsSnapshot {
     pub lanes: Vec<(String, ServeMetrics)>,
     /// All lanes merged.
     pub aggregate: ServeMetrics,
+    /// Batched-kernel dispatch + grid-cache counters at capture time.
+    pub kernel: KernelSnapshot,
     /// Trace sink state at capture time.
     pub trace: TraceStats,
 }
@@ -312,6 +359,7 @@ impl MetricsSnapshot {
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("aggregate", self.aggregate.to_json()),
+            ("kernel", self.kernel.to_json()),
             (
                 "lanes",
                 Json::Arr(
@@ -477,6 +525,44 @@ pub fn prometheus_exposition(snapshots: &[MetricsSnapshot]) -> String {
                 "sac_stage_total{{router=\"{r}\",stage=\"{stage}\"}} {v}"
             );
         }
+    }
+
+    let _ = writeln!(
+        out,
+        "# HELP sac_kernel_batches_total Batched-kernel dispatches by mode (process-wide)."
+    );
+    let _ = writeln!(out, "# TYPE sac_kernel_batches_total counter");
+    for s in snapshots {
+        let r = prom_escape(&s.name);
+        let _ = writeln!(
+            out,
+            "sac_kernel_batches_total{{router=\"{r}\",mode=\"parallel\"}} {}",
+            s.kernel.parallel_batches
+        );
+        let _ = writeln!(
+            out,
+            "sac_kernel_batches_total{{router=\"{r}\",mode=\"serial\"}} {}",
+            s.kernel.serial_batches
+        );
+    }
+
+    let _ = writeln!(
+        out,
+        "# HELP sac_grid_cache_total Grid-cache lookups by outcome (process-wide)."
+    );
+    let _ = writeln!(out, "# TYPE sac_grid_cache_total counter");
+    for s in snapshots {
+        let r = prom_escape(&s.name);
+        let _ = writeln!(
+            out,
+            "sac_grid_cache_total{{router=\"{r}\",event=\"hit\"}} {}",
+            s.kernel.grid_cache_hits
+        );
+        let _ = writeln!(
+            out,
+            "sac_grid_cache_total{{router=\"{r}\",event=\"miss\"}} {}",
+            s.kernel.grid_cache_misses
+        );
     }
 
     let _ = writeln!(
@@ -659,6 +745,26 @@ mod tests {
         let j = s.to_json().to_string();
         assert!(j.contains("\"submitted\":2"));
         assert!(j.contains("\"rows_delivered\":7"));
+    }
+
+    #[test]
+    fn kernel_snapshot_json_is_canonical() {
+        let k = KernelSnapshot {
+            parallel_batches: 3,
+            serial_batches: 5,
+            grid_cache_hits: 2,
+            grid_cache_misses: 1,
+        };
+        let j = k.to_json().to_string();
+        assert_eq!(
+            j,
+            "{\"grid_cache_hits\":2,\"grid_cache_misses\":1,\
+             \"parallel_batches\":3,\"serial_batches\":5}"
+        );
+        // live capture never goes backwards relative to a default
+        let live = kernel_stats();
+        assert!(live.parallel_batches + live.serial_batches + live.grid_cache_misses
+            >= KernelSnapshot::default().grid_cache_misses);
     }
 
     #[test]

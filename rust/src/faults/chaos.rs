@@ -93,6 +93,11 @@ pub struct ChaosConfig {
     /// evaluation rows per lane (kept a multiple of the batch size so the
     /// analog campaign never depends on the deadline flusher)
     pub eval_rows: usize,
+    /// intra-batch row parallelism for every lane engine (the CLI's
+    /// `--threads`; forwarded to `RouterConfig::kernel_threads`).  `None`
+    /// keeps the engine default.  Agreement numbers are unaffected — the
+    /// sharded kernel is bit-identical to the serial one.
+    pub kernel_threads: Option<usize>,
 }
 
 impl Default for ChaosConfig {
@@ -101,6 +106,7 @@ impl Default for ChaosConfig {
             trials: 12,
             workers: 4,
             eval_rows: 32,
+            kernel_threads: None,
         }
     }
 }
@@ -429,6 +435,7 @@ pub fn run_corner_with_metrics(
     let router = Router::new(
         RouterConfig {
             workers: cfg.workers.max(1),
+            kernel_threads: cfg.kernel_threads,
             ..Default::default()
         },
         lanes,
@@ -529,6 +536,7 @@ pub fn run_infra_with_metrics(
     let router = Router::new(
         RouterConfig {
             workers: cfg.workers.max(2),
+            kernel_threads: cfg.kernel_threads,
             ..Default::default()
         },
         vec![

@@ -40,19 +40,21 @@ sac — shape-based analog computing framework (TCSI 2022 reproduction)
 USAGE:
   sac repro <id|all> [--out results] [--limit N] [--threads N] [--mc-trials N]
   sac serve <task> [--artifacts DIR] [--requests N] [--workers N] [--engine scalar|batched]
-                   [--metrics-out FILE]
+                   [--threads N] [--metrics-out FILE]
   sac bench-serve [--tasks K] [--workers N] [--submitters N] [--requests N] [--batch B]
-                  [--engine scalar|batched] [--metrics-out FILE]
+                  [--engine scalar|batched] [--threads N] [--metrics-out FILE]
   sac metrics [--tasks K] [--requests N] [--workers N] [--batch B] [--seed S]
               [--format prom|json|both] [--out FILE]
   sac characterize <cell> [--node NAME] [--regime WI|MI|SI] [--temp C] [--out results]
   sac mc <cell> [--node NAME] [--trials N]
-  sac chaos [--plan FILE | --seed S] [--trials N] [--workers N] [--out results] [--check]
-            [--metrics-out FILE]
+  sac chaos [--plan FILE | --seed S] [--trials N] [--workers N] [--threads N] [--out results]
+            [--check] [--metrics-out FILE]
   sac info [--artifacts DIR]
 
 engines: batched (default; columnar lookup-grid engine) | scalar (per-row GMP solves)
 env: SAC_MC_TRIALS / SAC_MC_SEED override the mc campaign defaults (flags win)
+     SAC_THREADS sets the default intra-batch row parallelism (--threads wins);
+     results are bit-identical at any thread count
      SAC_TRACE=1 enables span tracing (SAC_TRACE_CAPACITY sizes the ring);
      --metrics-out / sac metrics emit Prometheus + canonical JSON telemetry
 
@@ -72,6 +74,16 @@ fn main() {
     if let Err(e) = dispatch(&argv) {
         eprintln!("error: {e:#}");
         std::process::exit(1);
+    }
+}
+
+/// Intra-batch row parallelism for the serving commands: an explicit
+/// `--threads` flag wins, else the `SAC_THREADS` env default, else
+/// `None` (keep the engine's own setting).
+fn kernel_threads_arg(args: &Args) -> Result<Option<usize>> {
+    match args.get("threads") {
+        Some(_) => Ok(Some(args.get_usize("threads", 1)?.max(1))),
+        None => Ok(sac::util::pool::threads_from_env()),
     }
 }
 
@@ -134,21 +146,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let n_req = args.get_usize("requests", 256)?;
     let workers = args.get_usize("workers", sac::util::pool::default_threads())?;
     let mode = ExecMode::parse(args.get_or("engine", "batched"))?;
+    let kernel_threads = kernel_threads_arg(args)?;
     let rt = Runtime::new(&artifacts)?;
     println!("backend: {}", rt.platform());
     let engine = Engine::new_with_mode(&rt, task, mode)?;
     println!(
-        "serving {task}: net {:?}, batch={} dim={} workers={workers} engine={}",
+        "serving {task}: net {:?}, batch={} dim={} workers={workers} engine={} threads={}",
         engine.net.sizes,
         engine.batch_size,
         engine.dim,
-        engine.mode().name()
+        engine.mode().name(),
+        kernel_threads.unwrap_or(1)
     );
     let ds = Dataset::load_sacd(&artifacts.join(format!("{task}_test.bin")))?;
     let n = n_req.min(ds.n);
     let router = Router::new(
         RouterConfig {
             workers,
+            kernel_threads,
             ..RouterConfig::default()
         },
         vec![(task.to_string(), engine)],
@@ -187,7 +202,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Write snapshots as a canonical `sac-metrics/v1` JSON file, creating
+/// Write snapshots as a canonical `sac-metrics/v2` JSON file, creating
 /// parent directories as needed.
 fn write_metrics_file(path: &str, snapshots: &[MetricsSnapshot]) -> Result<()> {
     let p = PathBuf::from(path);
@@ -211,12 +226,14 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
     let requests = args.get_usize("requests", 512)?;
     let batch = args.get_usize("batch", 32)?.max(1);
     let mode = ExecMode::parse(args.get_or("engine", "batched"))?;
+    let kernel_threads = kernel_threads_arg(args)?;
     const DIM: usize = 16;
     println!(
         "bench-serve: {tasks} task(s) × [{DIM},12,4] S-AC nets, batch={batch}, \
          {submitters} submitter(s), {workers} worker(s), {requests} requests, \
-         engine={}",
-        mode.name()
+         engine={} threads={}",
+        mode.name(),
+        kernel_threads.unwrap_or(1)
     );
     let engines = (0..tasks)
         .map(|t| {
@@ -229,6 +246,7 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
     let router = Router::new(
         RouterConfig {
             workers,
+            kernel_threads,
             ..RouterConfig::default()
         },
         engines,
@@ -403,6 +421,7 @@ fn cmd_chaos(args: &Args) -> Result<()> {
     let cfg = ChaosConfig {
         trials: args.get_usize("trials", 12)?.max(1),
         workers: args.get_usize("workers", 4)?.max(1),
+        kernel_threads: kernel_threads_arg(args)?,
         ..Default::default()
     };
     println!(

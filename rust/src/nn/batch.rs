@@ -34,11 +34,39 @@
 //! contiguous.  Padded tail rows are skipped by the `rows` (live-row)
 //! argument — the padded-row contract of `coordinator::batcher::Batch`.
 //!
+//! Three hot-path properties on top of the layout (DESIGN.md §10):
+//!
+//! * **Row-slab parallelism** — `forward_batch_threads` shards the live
+//!   rows into contiguous slabs dispatched over the process-wide
+//!   [`crate::util::pool::shared_pool`]; each slab runs the *full*
+//!   layer pipeline over its own disjoint row range, so no per-layer
+//!   barrier exists and every row's accumulation order is unchanged —
+//!   results are **bit-identical** to the serial kernel at any thread
+//!   count.  Batches under `2 ×` [`MIN_SLAB_ROWS`] skip parallel
+//!   dispatch entirely.
+//! * **Zero-alloc steady state** — the per-layer column buffers live in
+//!   a reusable ping-pong scratch arena checked out per call (sized to
+//!   `widest layer × rows`, grown monotonically), and
+//!   `forward_batch_into` writes into a caller-owned logits buffer, so
+//!   a warmed kernel's forward pass performs no heap allocation
+//!   (asserted by the counting-allocator harness in
+//!   `tests/observability.rs`).
+//! * **Shared grid cache** — grids for cacheable backends (see
+//!   [`crate::cells::HProvider::cache_key`]) are sampled once per
+//!   `(backend, multiplier, activation, splines, GridConfig)` key and
+//!   `Arc`-shared process-wide across engines, tasks and chaos lanes;
+//!   [`BatchKernel::inject_stuck_cells`] copy-on-writes the shared grid
+//!   so faults never leak into sibling kernels.
+//!
 //! DESIGN.md §7 documents grid resolution and the interpolation error
 //! budget; `tests/integration.rs` pins batched-vs-scalar equivalence at
-//! every corner the table tier exercises.
+//! every corner the table tier exercises plus bit-identical
+//! parallel-vs-serial logits.
 
+use std::collections::HashMap;
 use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
@@ -260,6 +288,155 @@ impl ActGrid {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Process-wide grid cache
+// ---------------------------------------------------------------------------
+
+/// Counters describing the process-wide grid cache (telemetry surface;
+/// see `coordinator::telemetry::KernelSnapshot`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct GridCacheStats {
+    /// Kernel constructions that reused a cached grid pair.
+    pub hits: u64,
+    /// Kernel constructions that sampled fresh grids (uncacheable
+    /// backends count here too — they bypass the map entirely).
+    pub misses: u64,
+    /// Grid pairs currently held by the cache.
+    pub entries: usize,
+}
+
+static GRID_CACHE: Mutex<Option<HashMap<String, (Arc<MulGrid>, Arc<ActGrid>)>>> =
+    Mutex::new(None);
+static GRID_CACHE_HITS: AtomicU64 = AtomicU64::new(0);
+static GRID_CACHE_MISSES: AtomicU64 = AtomicU64::new(0);
+
+/// Current grid-cache counters.
+pub fn grid_cache_stats() -> GridCacheStats {
+    let entries = GRID_CACHE
+        .lock()
+        .unwrap()
+        .as_ref()
+        .map_or(0, |m| m.len());
+    GridCacheStats {
+        hits: GRID_CACHE_HITS.load(Ordering::Relaxed),
+        misses: GRID_CACHE_MISSES.load(Ordering::Relaxed),
+        entries,
+    }
+}
+
+/// Drop every cached grid pair (benchmarks use this to measure cold
+/// builds; live kernels keep their `Arc`s and are unaffected).  The
+/// hit/miss counters are monotonic and survive the clear.
+pub fn grid_cache_clear() {
+    if let Some(m) = GRID_CACHE.lock().unwrap().as_mut() {
+        m.clear();
+    }
+}
+
+/// Fetch-or-build the grid pair for one kernel.  Cache key =
+/// backend identity ([`HProvider::cache_key`]) ⊕ exact multiplier
+/// calibration bits ⊕ activation ⊕ spline count ⊕ exact [`GridConfig`]
+/// bits, so two kernels share grids only when they would sample
+/// bit-identical tables.  Uncacheable backends (`cache_key() == None`,
+/// e.g. the fault harness's mismatch wrappers) build privately and count
+/// as misses.  Builds happen under the cache lock: each key is sampled
+/// at most once per process.
+fn grids_for(
+    p: &dyn HProvider,
+    mult: &Multiplier,
+    act: Activation,
+    splines: usize,
+    cfg: &GridConfig,
+) -> (Arc<MulGrid>, Arc<ActGrid>) {
+    let build = || {
+        (
+            Arc::new(MulGrid::build(p, mult, cfg)),
+            Arc::new(ActGrid::build(p, act, splines, cfg)),
+        )
+    };
+    let key = match p.cache_key() {
+        Some(k) => format!(
+            "{k}|a={:016x}|sc={:016x}|c={:016x}|S={}|act={}|sp={}|pr={:016x}|pd={}|ar={:016x}|ad={}",
+            mult.a.to_bits(),
+            mult.scale.to_bits(),
+            mult.c.to_bits(),
+            mult.s,
+            act.name(),
+            splines,
+            cfg.proto_range.to_bits(),
+            cfg.proto_density,
+            cfg.act_range.to_bits(),
+            cfg.act_density,
+        ),
+        None => {
+            GRID_CACHE_MISSES.fetch_add(1, Ordering::Relaxed);
+            return build();
+        }
+    };
+    let mut g = GRID_CACHE.lock().unwrap();
+    let map = g.get_or_insert_with(HashMap::new);
+    if let Some((m, a)) = map.get(&key) {
+        GRID_CACHE_HITS.fetch_add(1, Ordering::Relaxed);
+        return (Arc::clone(m), Arc::clone(a));
+    }
+    GRID_CACHE_MISSES.fetch_add(1, Ordering::Relaxed);
+    let pair = build();
+    map.insert(key, (Arc::clone(&pair.0), Arc::clone(&pair.1)));
+    pair
+}
+
+// ---------------------------------------------------------------------------
+// Slab dispatch bookkeeping
+// ---------------------------------------------------------------------------
+
+/// Minimum live rows per slab.  Batches with fewer than
+/// `2 × MIN_SLAB_ROWS` live rows never take the parallel dispatch path —
+/// the per-slab coordination would cost more than it saves.
+pub const MIN_SLAB_ROWS: usize = 8;
+
+static PARALLEL_BATCHES: AtomicU64 = AtomicU64::new(0);
+static SERIAL_BATCHES: AtomicU64 = AtomicU64::new(0);
+
+/// `(parallel, serial)` `forward_batch` dispatch counts since process
+/// start (telemetry surface — `sac_kernel_batches_total`).
+pub fn batch_dispatch_counts() -> (u64, u64) {
+    (
+        PARALLEL_BATCHES.load(Ordering::Relaxed),
+        SERIAL_BATCHES.load(Ordering::Relaxed),
+    )
+}
+
+/// Slab count actually dispatched for a `(threads, rows)` request.
+fn effective_shards(threads: usize, rows: usize) -> usize {
+    threads.max(1).min((rows / MIN_SLAB_ROWS).max(1))
+}
+
+/// Raw-pointer courier into the disjoint-slab buffers (same
+/// edition-2021 capture note as `util::pool`'s `SendPtr`).  Soundness:
+/// every shard writes only its own `[r0, r1)` row range of each column,
+/// and `run_scoped` establishes the happens-before edge back to the
+/// caller before the buffers are read.
+#[derive(Clone, Copy)]
+struct SendPtr(*mut f64);
+
+impl SendPtr {
+    fn get(self) -> *mut f64 {
+        self.0
+    }
+}
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+/// Ping-pong column-buffer pair for one in-flight `forward_batch` call,
+/// checked out of the kernel's arena and returned when the call ends.
+/// Buffers grow monotonically and are never zeroed between uses — every
+/// read is preceded by the bias fill / input transpose of the same call.
+#[derive(Default)]
+struct Scratch {
+    a: Vec<f64>,
+    b: Vec<f64>,
+}
+
 /// One corner's batched execution kernel: the calibrated multiplier and
 /// activation grids plus the backend they were sampled from (kept for
 /// exact out-of-range fallbacks).  Weight-independent — the same kernel
@@ -273,8 +450,9 @@ pub struct BatchKernel {
     act: Activation,
     splines: usize,
     c: f64,
-    mul_grid: MulGrid,
-    act_grid: ActGrid,
+    mul_grid: Arc<MulGrid>,
+    act_grid: Arc<ActGrid>,
+    scratch: Mutex<Vec<Scratch>>,
 }
 
 impl fmt::Debug for BatchKernel {
@@ -300,8 +478,7 @@ impl BatchKernel {
         cfg: &GridConfig,
     ) -> BatchKernel {
         let mult = Multiplier::calibrate(provider.as_ref(), splines, c);
-        let mul_grid = MulGrid::build(provider.as_ref(), &mult, cfg);
-        let act_grid = ActGrid::build(provider.as_ref(), act, splines, cfg);
+        let (mul_grid, act_grid) = grids_for(provider.as_ref(), &mult, act, splines, cfg);
         BatchKernel {
             provider,
             mult,
@@ -310,6 +487,7 @@ impl BatchKernel {
             c,
             mul_grid,
             act_grid,
+            scratch: Mutex::new(Vec::new()),
         }
     }
 
@@ -337,8 +515,7 @@ impl BatchKernel {
         cfg: &GridConfig,
     ) -> BatchKernel {
         debug_assert_eq!(mult.s, splines, "multiplier/spline-count mismatch");
-        let mul_grid = MulGrid::build(provider.as_ref(), &mult, cfg);
-        let act_grid = ActGrid::build(provider.as_ref(), act, splines, cfg);
+        let (mul_grid, act_grid) = grids_for(provider.as_ref(), &mult, act, splines, cfg);
         BatchKernel {
             provider,
             mult,
@@ -347,13 +524,25 @@ impl BatchKernel {
             c,
             mul_grid,
             act_grid,
+            scratch: Mutex::new(Vec::new()),
         }
     }
 
     /// Stuck-at fault injection into the multiplier lookup grid (see
     /// [`MulGrid::inject_stuck`]); returns the write count.
+    ///
+    /// The grid may be shared through the process-wide cache, so the
+    /// injection copy-on-writes it (`Arc::make_mut`): this kernel gets a
+    /// private corrupted copy while the cached original — and every
+    /// sibling kernel holding it — stays pristine.
     pub fn inject_stuck_cells(&mut self, rng: &mut Rng, fraction: f64, value: f64) -> usize {
-        self.mul_grid.inject_stuck(rng, fraction, value)
+        Arc::make_mut(&mut self.mul_grid).inject_stuck(rng, fraction, value)
+    }
+
+    /// True when both lookup grids are the same shared allocations as
+    /// `other`'s (i.e. the cache deduplicated them).
+    pub fn shares_grids_with(&self, other: &BatchKernel) -> bool {
+        Arc::ptr_eq(&self.mul_grid, &other.mul_grid) && Arc::ptr_eq(&self.act_grid, &other.act_grid)
     }
 
     /// The multiplier calibration the grids were sampled with (identical
@@ -376,7 +565,7 @@ impl BatchKernel {
         self.c
     }
 
-    /// Evaluate eq. 40 over a whole batch.
+    /// Evaluate eq. 40 over a whole batch on the calling thread.
     ///
     /// * `x` — row-major `[batch × sizes[0]]` feature buffer (at least
     ///   `rows` rows; padded tail rows are never read),
@@ -392,17 +581,154 @@ impl BatchKernel {
         x: &[f32],
         rows: usize,
     ) -> Vec<f64> {
+        self.forward_batch_threads(sizes, weights, biases, x, rows, 1)
+    }
+
+    /// [`BatchKernel::forward_batch`] sharded row-wise over up to
+    /// `threads` slabs on the process-wide slab pool.  Bit-identical to
+    /// the serial kernel at any thread count: each row's accumulation
+    /// order is unchanged (weights ascending), and slabs touch disjoint
+    /// row ranges of every buffer.
+    pub fn forward_batch_threads(
+        &self,
+        sizes: &[usize],
+        weights: &[Vec<f64>],
+        biases: &[Vec<f64>],
+        x: &[f32],
+        rows: usize,
+        threads: usize,
+    ) -> Vec<f64> {
+        let mut logits = Vec::new();
+        self.forward_batch_into(sizes, weights, biases, x, rows, threads, &mut logits);
+        logits
+    }
+
+    /// [`BatchKernel::forward_batch_threads`] writing into a caller-owned
+    /// logits buffer (cleared and resized to `rows × sizes.last()`).
+    /// With a warm arena and a reused `logits` vector this is the
+    /// zero-allocation steady-state entry point.
+    pub fn forward_batch_into(
+        &self,
+        sizes: &[usize],
+        weights: &[Vec<f64>],
+        biases: &[Vec<f64>],
+        x: &[f32],
+        rows: usize,
+        threads: usize,
+        logits: &mut Vec<f64>,
+    ) {
         let _span = crate::util::trace::span("batch.forward");
+        let k_out = sizes[sizes.len() - 1];
+        logits.clear();
+        logits.resize(rows * k_out, 0.0);
+        if rows == 0 {
+            return;
+        }
+        debug_assert!(x.len() >= rows * sizes[0], "input batch shorter than rows");
+
+        let max_w = *sizes.iter().max().unwrap();
+        let mut scratch = self.checkout_scratch(max_w * rows);
+        let shards = effective_shards(threads, rows);
+        if shards > 1 {
+            PARALLEL_BATCHES.fetch_add(1, Ordering::Relaxed);
+            let buf_a = SendPtr(scratch.a.as_mut_ptr());
+            let buf_b = SendPtr(scratch.b.as_mut_ptr());
+            let out = SendPtr(logits.as_mut_ptr());
+            let base = rows / shards;
+            let extra = rows % shards;
+            // The slab pool is distinct from the router's request pool:
+            // router workers block right here waiting for slabs, so
+            // dispatching slabs onto their own pool could deadlock (see
+            // `util::pool` docs).
+            crate::util::pool::shared_pool().run_scoped(shards, |s| {
+                let _slab = crate::util::trace::span("batch.slab");
+                let r0 = s * base + s.min(extra);
+                let r1 = r0 + base + usize::from(s < extra);
+                self.forward_slab(
+                    sizes,
+                    weights,
+                    biases,
+                    x,
+                    rows,
+                    r0,
+                    r1,
+                    buf_a.get(),
+                    buf_b.get(),
+                    out.get(),
+                );
+            });
+        } else {
+            SERIAL_BATCHES.fetch_add(1, Ordering::Relaxed);
+            self.forward_slab(
+                sizes,
+                weights,
+                biases,
+                x,
+                rows,
+                0,
+                rows,
+                scratch.a.as_mut_ptr(),
+                scratch.b.as_mut_ptr(),
+                logits.as_mut_ptr(),
+            );
+        }
+        self.return_scratch(scratch);
+    }
+
+    /// Check a ping-pong buffer pair out of the arena, growing it to at
+    /// least `len` f64s per side.  Steady state (same shapes as an
+    /// earlier call) pops a ready pair without allocating.
+    fn checkout_scratch(&self, len: usize) -> Scratch {
+        let mut s = self.scratch.lock().unwrap().pop().unwrap_or_default();
+        if s.a.len() < len {
+            s.a.resize(len, 0.0);
+            s.b.resize(len, 0.0);
+        }
+        s
+    }
+
+    fn return_scratch(&self, s: Scratch) {
+        self.scratch.lock().unwrap().push(s);
+    }
+
+    /// Run the full layer pipeline over the contiguous row slab
+    /// `[r0, r1)`: input transpose, per-layer bias fill + weight-outer /
+    /// row-inner accumulation + activation, final row-major transpose
+    /// into `logits`.
+    ///
+    /// Determinism: per (row, output) the accumulation order is weights
+    /// ascending — exactly the serial kernel's — so slab partitioning
+    /// never reorders a float sum.  No inter-slab barrier is needed:
+    /// every read and write below lands in this slab's own `[r0, r1)`
+    /// rows of each column, which no other slab touches.
+    ///
+    /// Safety: `buf_a`/`buf_b` must each hold `max(sizes) × rows` f64s
+    /// and `logits` must hold `rows × sizes.last()`; callers pass each
+    /// pointer trio to at most one concurrent slab per row range.
+    #[allow(clippy::too_many_arguments)]
+    fn forward_slab(
+        &self,
+        sizes: &[usize],
+        weights: &[Vec<f64>],
+        biases: &[Vec<f64>],
+        x: &[f32],
+        rows: usize,
+        r0: usize,
+        r1: usize,
+        buf_a: *mut f64,
+        buf_b: *mut f64,
+        logits: *mut f64,
+    ) {
         let nl = sizes.len() - 1;
         let din = sizes[0];
-        debug_assert!(x.len() >= rows * din, "input batch shorter than rows");
+        let seg = r1 - r0;
         let p = self.provider.as_ref();
+        let (mut cur, mut nxt) = (buf_a, buf_b);
 
-        // columnar layout: h[i·rows + r] holds input i of row r
-        let mut h = vec![0.0f64; din * rows];
-        for r in 0..rows {
+        // columnar layout: cur[i·rows + r] holds input i of row r
+        for r in r0..r1 {
             for i in 0..din {
-                h[i * rows + r] = x[r * din + i] as f64;
+                unsafe { *cur.add(i * rows + r) = x[r * din + i] as f64 };
             }
         }
 
@@ -410,38 +736,44 @@ impl BatchKernel {
             let n_in = sizes[li];
             let n_out = sizes[li + 1];
             let w = &weights[li];
-            let mut out = vec![0.0f64; n_out * rows];
             for (k, &b) in biases[li].iter().enumerate() {
-                for v in &mut out[k * rows..(k + 1) * rows] {
+                let dst =
+                    unsafe { std::slice::from_raw_parts_mut(nxt.add(k * rows + r0), seg) };
+                for v in dst {
                     *v = b;
                 }
             }
             // weights outermost, rows innermost: one weight's grid bases
-            // are hoisted across the whole batch, and both the input
-            // column and the accumulator column are contiguous
+            // are hoisted across the whole slab, and both the input
+            // column segment and the accumulator segment are contiguous
             for i in 0..n_in {
-                let col = &h[i * rows..i * rows + rows];
+                let col = unsafe { std::slice::from_raw_parts(cur.add(i * rows + r0), seg) };
                 for k in 0..n_out {
-                    let dst = &mut out[k * rows..(k + 1) * rows];
+                    let dst =
+                        unsafe { std::slice::from_raw_parts_mut(nxt.add(k * rows + r0), seg) };
                     self.mul_grid
                         .accumulate(p, &self.mult, col, w[i * n_out + k], dst);
                 }
             }
             if li < nl - 1 {
-                self.act_grid.apply(p, &mut out, ACT_GAIN);
+                for k in 0..n_out {
+                    let seg_mut =
+                        unsafe { std::slice::from_raw_parts_mut(nxt.add(k * rows + r0), seg) };
+                    self.act_grid.apply(p, seg_mut, ACT_GAIN);
+                }
             }
-            h = out;
+            std::mem::swap(&mut cur, &mut nxt);
         }
 
-        // transpose back to the row-major contract of the runtime
+        // transpose back to the row-major contract of the runtime,
+        // iterating row-major over the destination so `logits` is
+        // written stride-1
         let k_out = sizes[nl];
-        let mut logits = vec![0.0f64; rows * k_out];
-        for k in 0..k_out {
-            for r in 0..rows {
-                logits[r * k_out + k] = h[k * rows + r];
+        for r in r0..r1 {
+            for k in 0..k_out {
+                unsafe { *logits.add(r * k_out + k) = *cur.add(k * rows + r) };
             }
         }
-        logits
     }
 
     /// [`BatchKernel::forward_batch`] with the shapes taken from a
@@ -642,5 +974,130 @@ mod tests {
         assert!(s.contains("BatchKernel") && s.contains("algorithmic"), "{s}");
         assert_eq!(kernel.activation(), Activation::Phi1);
         assert!(kernel.multiplier().scale.is_finite());
+    }
+
+    #[test]
+    fn effective_shards_honors_threshold() {
+        assert_eq!(effective_shards(8, 4), 1);
+        assert_eq!(effective_shards(8, 15), 1);
+        assert_eq!(effective_shards(8, 16), 2);
+        assert_eq!(effective_shards(4, 64), 4);
+        assert_eq!(effective_shards(1, 1000), 1);
+        assert_eq!(effective_shards(0, 64), 1);
+        assert_eq!(effective_shards(3, 1000), 3);
+    }
+
+    #[test]
+    fn parallel_forward_is_bit_identical_to_serial() {
+        let net = toy_net();
+        let kernel =
+            BatchKernel::for_net(Box::new(Algorithmic::relu()), &net, &GridConfig::default())
+                .unwrap();
+        let rows = 33;
+        let mut rng = Rng::new(11);
+        let x: Vec<f32> = (0..rows * 2).map(|_| rng.uniform_in(-1.0, 1.0) as f32).collect();
+        let serial = kernel.forward_net(&net, &x, rows);
+        for threads in [2, 3, 8] {
+            let par =
+                kernel.forward_batch_threads(&net.sizes, &net.weights, &net.biases, &x, rows, threads);
+            assert_eq!(par, serial, "threads={threads}");
+        }
+        // counters: this exercised both dispatch paths at least once
+        let (p, s) = batch_dispatch_counts();
+        assert!(p >= 1 && s >= 1, "parallel={p} serial={s}");
+    }
+
+    #[test]
+    fn forward_batch_into_reuses_caller_buffer() {
+        let net = toy_net();
+        let kernel =
+            BatchKernel::for_net(Box::new(Algorithmic::relu()), &net, &GridConfig::default())
+                .unwrap();
+        let x: Vec<f32> = vec![0.5, -0.5, -0.25, 0.75];
+        let want = kernel.forward_net(&net, &x, 2);
+        let mut logits = vec![9.0; 64]; // stale, oversized
+        kernel.forward_batch_into(&net.sizes, &net.weights, &net.biases, &x, 2, 1, &mut logits);
+        assert_eq!(logits, want);
+        kernel.forward_batch_into(&net.sizes, &net.weights, &net.biases, &x, 0, 4, &mut logits);
+        assert!(logits.is_empty());
+    }
+
+    #[test]
+    fn grid_cache_shares_across_kernels_and_cow_isolates_faults() {
+        let net = toy_net();
+        // unique GridConfig → unique cache key: immune to sibling tests
+        // touching the same process-wide cache
+        let cfg = GridConfig {
+            proto_range: 6.0,
+            proto_density: 733,
+            act_range: 8.0,
+            act_density: 97,
+        };
+        let before = grid_cache_stats();
+        let a = BatchKernel::for_net(Box::new(Algorithmic::relu()), &net, &cfg).unwrap();
+        let mut b = BatchKernel::for_net(Box::new(Algorithmic::relu()), &net, &cfg).unwrap();
+        let after = grid_cache_stats();
+        assert!(a.shares_grids_with(&b), "cache should deduplicate grids");
+        assert!(after.misses >= before.misses + 1, "first build is a miss");
+        assert!(after.hits >= before.hits + 1, "second build is a hit");
+
+        let x: Vec<f32> = vec![0.5, -0.5, -0.25, 0.75];
+        let pristine = a.forward_net(&net, &x, 2);
+        // dense injection into b copy-on-writes the shared grid: b detaches
+        // and perturbs, while a and the cached original stay pristine
+        let writes = b.inject_stuck_cells(&mut Rng::new(9), 0.2, 0.0);
+        assert!(writes > 0, "writes={writes}");
+        assert!(!a.shares_grids_with(&b), "injection must detach the grid");
+        assert_ne!(b.forward_net(&net, &x, 2), pristine);
+        assert_eq!(a.forward_net(&net, &x, 2), pristine);
+        let c = BatchKernel::for_net(Box::new(Algorithmic::relu()), &net, &cfg).unwrap();
+        assert!(c.shares_grids_with(&a), "cache copy must remain pristine");
+        assert_eq!(c.forward_net(&net, &x, 2), pristine);
+    }
+
+    #[test]
+    fn uncacheable_backend_builds_private_grids() {
+        let net = toy_net();
+        let cfg = GridConfig {
+            proto_range: 6.0,
+            proto_density: 731,
+            act_range: 8.0,
+            act_density: 93,
+        };
+        // CircuitCorner-style backends report no cache key; emulate with a
+        // wrapper that erases it
+        struct NoKey(Algorithmic);
+        impl HProvider for NoKey {
+            fn h(&self, x: &[f64], c: f64) -> f64 {
+                self.0.h(x, c)
+            }
+            fn h_raw(&self, x: &[f64], c: f64) -> f64 {
+                self.0.h_raw(x, c)
+            }
+            fn label(&self) -> String {
+                self.0.label()
+            }
+        }
+        let a = BatchKernel::new(
+            Box::new(NoKey(Algorithmic::relu())),
+            Activation::Phi1,
+            net.splines,
+            net.c,
+            &cfg,
+        );
+        let b = BatchKernel::new(
+            Box::new(NoKey(Algorithmic::relu())),
+            Activation::Phi1,
+            net.splines,
+            net.c,
+            &cfg,
+        );
+        assert!(!a.shares_grids_with(&b), "keyless backends must not share");
+        let entries = grid_cache_stats().entries;
+        let _cached = BatchKernel::for_net(Box::new(Algorithmic::relu()), &net, &cfg).unwrap();
+        assert!(
+            grid_cache_stats().entries > entries.saturating_sub(1),
+            "cache still usable"
+        );
     }
 }

@@ -14,6 +14,12 @@
 //! scheduling dependence is which *requests* land in the failing batches,
 //! which is why the chaos report's canonical form aggregates per-request
 //! outcomes into order-independent invariants (see `faults::chaos`).
+//!
+//! The gate sits *above* the kernel, so it is orthogonal to intra-batch
+//! row parallelism: a panic injected here unwinds out of the engine on
+//! the router worker before any slab is dispatched, and a batch that does
+//! reach the sharded kernel completes (or panics) identically at any
+//! `kernel_threads` setting — the chaos suite runs both ways.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;

@@ -215,8 +215,12 @@ impl Executable {
         self
     }
 
-    /// Raise intra-batch row parallelism (single-task paths only; the
-    /// router's worker pool already provides outer parallelism).
+    /// Raise intra-batch row parallelism (the `--threads`/`SAC_THREADS`
+    /// knob).  Scalar executors fan rows out over `pool::parallel_map`;
+    /// batched executors shard the columnar kernel into row slabs on the
+    /// process-wide slab pool (bit-identical results at any thread
+    /// count).  The router applies this per engine via
+    /// `RouterConfig::kernel_threads`.
     pub fn with_par_threads(mut self, n: usize) -> Executable {
         self.exec = self.exec.with_par_threads(n);
         self

@@ -106,11 +106,14 @@ pub struct NativeExec {
     /// `None` = scalar per-row execution.  `Arc` so cloned executors
     /// (router lanes) share the grids.
     kernel: Option<Arc<BatchKernel>>,
-    /// Row-parallelism inside one batch.  Defaults to 1: the serving
-    /// router already parallelizes across batches/tasks, and nesting
-    /// thread pools would oversubscribe the machine.  The single-task
-    /// CLI path raises this.  The batched kernel ignores it (its rows
-    /// are vectorized in one pass).
+    /// Row-parallelism inside one batch.  Defaults to `SAC_THREADS` when
+    /// set, else 1: the serving router already parallelizes across
+    /// batches/tasks, and raising this should be a deliberate choice
+    /// (`--threads` on the CLI, [`NativeExec::with_par_threads`]).  The
+    /// scalar path fans rows out over `pool::parallel_map`; the batched
+    /// kernel shards the columnar buffers into contiguous row slabs on
+    /// the process-wide slab pool with bit-identical results at any
+    /// thread count.
     pub par_threads: usize,
 }
 
@@ -122,7 +125,7 @@ impl NativeExec {
             mult: None,
             act: None,
             kernel: None,
-            par_threads: 1,
+            par_threads: pool::threads_from_env().unwrap_or(1),
         }
     }
 
@@ -155,7 +158,7 @@ impl NativeExec {
             mult: Some(mult),
             act: Some(act),
             kernel,
-            par_threads: 1,
+            par_threads: pool::threads_from_env().unwrap_or(1),
         })
     }
 
@@ -189,7 +192,7 @@ impl NativeExec {
             mult: Some(mult),
             act: Some(act),
             kernel: Some(kernel),
-            par_threads: 1,
+            par_threads: pool::threads_from_env().unwrap_or(1),
         })
     }
 
@@ -278,9 +281,16 @@ impl NativeExec {
         }
         if let Some(kernel) = &self.kernel {
             // Batched columnar path: whole-batch evaluation through the
-            // precomputed grids (rows are vectorized in one pass, so
-            // par_threads does not apply here).
-            let out = kernel.forward_batch(&spec.sizes, &weights, &biases, x, rows);
+            // precomputed grids, sharded into row slabs when par_threads
+            // asks for it (bit-identical to the serial kernel).
+            let out = kernel.forward_batch_threads(
+                &spec.sizes,
+                &weights,
+                &biases,
+                x,
+                rows,
+                self.par_threads,
+            );
             return Ok(out.into_iter().map(|v| v as f32).collect());
         }
         let net = TrainedNet {
@@ -480,6 +490,36 @@ mod tests {
             &GridConfig::default(),
         ));
         assert!(NativeExec::mlp_with_kernel(spec, s1_kernel).is_err());
+    }
+
+    #[test]
+    fn batched_mlp_parallel_threads_bit_identical() {
+        let spec = MlpSpec {
+            sizes: vec![2, 3, 2],
+            splines: 3,
+            c: 1.0,
+            activation: "phi1".into(),
+            batch: 64,
+        };
+        let serial = NativeExec::mlp_with_mode(spec.clone(), ExecMode::Batched)
+            .unwrap()
+            .with_par_threads(1);
+        let par = NativeExec::mlp_with_mode(spec, ExecMode::Batched)
+            .unwrap()
+            .with_par_threads(4);
+        let w1: Vec<f32> = vec![0.5, -0.25, 0.75, -0.5, 0.25, 0.5];
+        let b1: Vec<f32> = vec![-0.125, 0.0, 0.25];
+        let w2: Vec<f32> = vec![0.5, -0.5, 0.25, -0.25, -0.75, 0.75];
+        let b2: Vec<f32> = vec![0.0, 0.125];
+        let mut rng = crate::util::rng::Rng::new(21);
+        let x: Vec<f32> = (0..64 * 2).map(|_| rng.uniform_in(-1.0, 1.0) as f32).collect();
+        let bufs: Vec<&[f32]> = vec![&w1, &b1, &w2, &b2, &x];
+        assert_eq!(serial.run(&bufs).unwrap(), par.run(&bufs).unwrap());
+        // live-row restriction too (17 rows still shards at 4 threads)
+        assert_eq!(
+            serial.run_rows(&bufs, 17).unwrap(),
+            par.run_rows(&bufs, 17).unwrap()
+        );
     }
 
     #[test]

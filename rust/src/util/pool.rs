@@ -15,6 +15,19 @@
 //!   and are executed by whichever worker frees up first.  Shutdown is
 //!   graceful — on drop the pool finishes every queued job before joining,
 //!   so no accepted work is silently discarded.
+//!
+//! * [`WorkerPool::run_scoped`] — an *allocation-free* scoped broadcast on
+//!   top of the persistent pool: the caller publishes a stack-held shard
+//!   task, participates in draining the shard cursor alongside the
+//!   workers, and blocks until every claimed shard finished.  This is the
+//!   dispatch path of the batched kernel's row-slab parallelism
+//!   (`nn::batch`), where the steady state must not allocate.
+//!
+//! The batched kernel's slabs run on the process-wide [`shared_pool`],
+//! *not* on the router's pool: router workers block inside
+//! `Engine::run_batch` waiting on slab completion, so handing slabs to the
+//! same pool could deadlock once every worker is a waiter.  Two pools (and
+//! caller participation in `run_scoped`) make that cycle impossible.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -26,6 +39,35 @@ pub fn default_threads() -> usize {
     std::thread::available_parallelism()
         .map(|n| n.get().saturating_sub(1).max(1))
         .unwrap_or(4)
+}
+
+/// Kernel thread count requested through the `SAC_THREADS` environment
+/// variable, or `None` when unset/unparseable.  `0` clamps to `1` (serial),
+/// matching every other thread knob in the crate.
+pub fn threads_from_env() -> Option<usize> {
+    parse_threads(&std::env::var("SAC_THREADS").ok()?)
+}
+
+/// The parse behind [`threads_from_env`], split out so tests need not
+/// mutate process-global environment state.
+fn parse_threads(s: &str) -> Option<usize> {
+    s.trim().parse::<usize>().ok().map(|n| n.max(1))
+}
+
+/// Process-wide pool for the batched kernel's row-slab dispatch, created
+/// lazily at [`default_threads`] workers and shared by every
+/// `BatchKernel` for the process lifetime.  Deliberately distinct from
+/// any router [`WorkerPool`] — see the module docs for the deadlock
+/// argument.
+pub fn shared_pool() -> Arc<WorkerPool> {
+    static SLAB_POOL: Mutex<Option<Arc<WorkerPool>>> = Mutex::new(None);
+    let mut g = SLAB_POOL.lock().unwrap();
+    if let Some(p) = g.as_ref() {
+        return Arc::clone(p);
+    }
+    let p = Arc::new(WorkerPool::new(default_threads()));
+    *g = Some(Arc::clone(&p));
+    p
 }
 
 /// Run `f(i)` for every `i in 0..n` across `nthreads` workers, collecting
@@ -114,8 +156,68 @@ unsafe impl<T> Sync for SendPtr<T> {}
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+/// A stack-held scoped broadcast, published into the pool by
+/// [`WorkerPool::run_scoped`].  The closure is type-erased through a
+/// `(fn, data)` pair instead of a boxed trait object so publishing a task
+/// performs no allocation.
+struct ScopedTask {
+    /// Invokes the caller's closure: `call(data, shard)`.
+    call: unsafe fn(*const (), usize),
+    data: *const (),
+    /// Shard-claim cursor: `fetch_add(1)` hands out `0..shards`.
+    next: AtomicUsize,
+    shards: usize,
+    /// Workers currently inside the task (caller not counted).
+    active: AtomicUsize,
+    panicked: AtomicBool,
+    done_mx: Mutex<()>,
+    done_cv: Condvar,
+}
+
+/// Shared-slot pointer to a [`ScopedTask`].  Validity: the publishing
+/// caller clears the slot (under the pool lock) and waits for `active` to
+/// reach zero before its stack frame — and thus the task — goes away, so
+/// any worker that observed the slot non-empty under the lock may
+/// dereference until it decrements `active`.
+#[derive(Clone, Copy)]
+struct ScopedRef(*const ScopedTask);
+
+impl ScopedRef {
+    /// Whole-struct accessor (same edition-2021 capture note as [`SendPtr`]).
+    fn get(self) -> *const ScopedTask {
+        self.0
+    }
+}
+// SAFETY: see the validity argument on the type.
+unsafe impl Send for ScopedRef {}
+
+/// Claim and run shards off `task`'s cursor until it is exhausted.  A
+/// panicking shard is contained (flagged on the task) so the cursor always
+/// drains and the remaining shards still run.
+fn claim_scoped(task: &ScopedTask) {
+    loop {
+        let s = task.next.fetch_add(1, Ordering::Relaxed);
+        if s >= task.shards {
+            return;
+        }
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| unsafe {
+            (task.call)(task.data, s)
+        }));
+        if r.is_err() {
+            task.panicked.store(true, Ordering::SeqCst);
+        }
+    }
+}
+
+struct PoolState {
+    jobs: VecDeque<Job>,
+    /// At most one scoped broadcast is published at a time; a second
+    /// concurrent `run_scoped` runs serially on its caller instead.
+    scoped: Option<ScopedRef>,
+}
+
 struct PoolInner {
-    jobs: Mutex<VecDeque<Job>>,
+    state: Mutex<PoolState>,
     cv: Condvar,
     shutdown: AtomicBool,
 }
@@ -139,7 +241,10 @@ impl WorkerPool {
     /// Spawn `nthreads` named workers (`sac-worker-N`).
     pub fn new(nthreads: usize) -> WorkerPool {
         let inner = Arc::new(PoolInner {
-            jobs: Mutex::new(VecDeque::new()),
+            state: Mutex::new(PoolState {
+                jobs: VecDeque::new(),
+                scoped: None,
+            }),
             cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
         });
@@ -169,19 +274,91 @@ impl WorkerPool {
 
     /// Jobs accepted but not yet started.
     pub fn queued(&self) -> usize {
-        self.inner.jobs.lock().unwrap().len()
+        self.inner.state.lock().unwrap().jobs.len()
     }
 
     /// Number of worker threads.
     pub fn workers(&self) -> usize {
         self.handles.len()
     }
+
+    /// Run `f(s)` for every shard `s in 0..shards`, spread across the
+    /// pool's workers *and* the calling thread, returning once every shard
+    /// completed.  Shards are claimed through an atomic cursor, so each
+    /// runs exactly once; which thread runs which shard is unspecified.
+    ///
+    /// Allocation-free: the task lives on the caller's stack and the
+    /// closure is type-erased without boxing, which is what lets the
+    /// batched kernel's steady-state forward pass stay zero-alloc.
+    /// Caller participation guarantees progress even with zero free
+    /// workers, and a second concurrent `run_scoped` (the broadcast slot
+    /// holds one task) degrades to running serially on its caller.
+    ///
+    /// Panics if any shard panicked (after the cursor drained), so a
+    /// poisoned result buffer can never be read back as valid.
+    pub fn run_scoped<F: Fn(usize) + Sync>(&self, shards: usize, f: F) {
+        if shards <= 1 {
+            if shards == 1 {
+                f(0);
+            }
+            return;
+        }
+        unsafe fn call_shard<F: Fn(usize)>(data: *const (), s: usize) {
+            (*(data as *const F))(s)
+        }
+        let task = ScopedTask {
+            call: call_shard::<F>,
+            data: &f as *const F as *const (),
+            next: AtomicUsize::new(0),
+            shards,
+            active: AtomicUsize::new(0),
+            panicked: AtomicBool::new(false),
+            done_mx: Mutex::new(()),
+            done_cv: Condvar::new(),
+        };
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            if st.scoped.is_some() {
+                drop(st);
+                claim_scoped(&task);
+                if task.panicked.load(Ordering::SeqCst) {
+                    panic!("run_scoped: a shard panicked");
+                }
+                return;
+            }
+            st.scoped = Some(ScopedRef(&task));
+            self.inner.cv.notify_all();
+        }
+        // The caller drains the cursor alongside the workers.
+        claim_scoped(&task);
+        // Unpublish: workers that have not yet observed the slot (under
+        // the lock) will never enter the task...
+        self.inner.state.lock().unwrap().scoped = None;
+        // ...and those that did are counted in `active`; wait them out.
+        // The decrement happens under `done_mx`, so once we observe zero
+        // here no worker touches the task again and the stack frame may
+        // safely unwind.
+        {
+            let mut g = task.done_mx.lock().unwrap();
+            while task.active.load(Ordering::SeqCst) > 0 {
+                g = task.done_cv.wait(g).unwrap();
+            }
+        }
+        if task.panicked.load(Ordering::SeqCst) {
+            panic!("run_scoped: a shard panicked");
+        }
+    }
 }
 
 impl PoolHandle {
     /// Enqueue a job for the next free worker.
     pub fn execute<F: FnOnce() + Send + 'static>(&self, job: F) {
-        self.inner.jobs.lock().unwrap().push_back(Box::new(job));
+        self.inner
+            .state
+            .lock()
+            .unwrap()
+            .jobs
+            .push_back(Box::new(job));
         self.inner.cv.notify_one();
     }
 }
@@ -196,27 +373,53 @@ impl Drop for WorkerPool {
     }
 }
 
+enum Work {
+    Queued(Job),
+    Scoped(ScopedRef),
+}
+
 fn worker_loop(inner: &PoolInner) {
     loop {
-        let job = {
-            let mut q = inner.jobs.lock().unwrap();
+        let work = {
+            let mut st = inner.state.lock().unwrap();
             loop {
-                if let Some(j) = q.pop_front() {
-                    break Some(j);
+                if let Some(j) = st.jobs.pop_front() {
+                    break Some(Work::Queued(j));
+                }
+                if let Some(sc) = st.scoped {
+                    // SAFETY: the slot is published, so the task outlives
+                    // this critical section (the caller needs this same
+                    // lock to unpublish it); incrementing `active` while
+                    // still inside the lock extends that lifetime until
+                    // the matching decrement below.
+                    let task = unsafe { &*sc.get() };
+                    if task.next.load(Ordering::Relaxed) < task.shards {
+                        task.active.fetch_add(1, Ordering::SeqCst);
+                        break Some(Work::Scoped(sc));
+                    }
                 }
                 if inner.shutdown.load(Ordering::SeqCst) {
                     break None;
                 }
-                q = inner.cv.wait(q).unwrap();
+                st = inner.cv.wait(st).unwrap();
             }
         };
-        match job {
+        match work {
             // A panicking job must not kill the worker: the pool would
             // silently lose capacity for the rest of the process.  The
             // job's owner is responsible for reporting its own failures
             // (the router converts panics to failure records itself).
-            Some(j) => {
+            Some(Work::Queued(j)) => {
                 let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(j));
+            }
+            Some(Work::Scoped(sc)) => {
+                // SAFETY: `active` was incremented under the lock above,
+                // so the publishing caller is still waiting on us.
+                let task = unsafe { &*sc.get() };
+                claim_scoped(task);
+                let _g = task.done_mx.lock().unwrap();
+                task.active.fetch_sub(1, Ordering::SeqCst);
+                task.done_cv.notify_all();
             }
             None => return,
         }
@@ -299,5 +502,118 @@ mod tests {
         pool.execute(move || d.store(true, Ordering::SeqCst));
         drop(pool);
         assert!(done.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn run_scoped_covers_every_shard_exactly_once() {
+        let pool = WorkerPool::new(3);
+        let shards = 17;
+        let hits: Vec<AtomicUsize> = (0..shards).map(|_| AtomicUsize::new(0)).collect();
+        pool.run_scoped(shards, |s| {
+            hits[s].fetch_add(1, Ordering::SeqCst);
+        });
+        for (s, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 1, "shard {s}");
+        }
+    }
+
+    #[test]
+    fn run_scoped_single_shard_runs_inline() {
+        let pool = WorkerPool::new(2);
+        let tid = std::thread::current().id();
+        let same = Arc::new(AtomicBool::new(false));
+        let same2 = Arc::clone(&same);
+        pool.run_scoped(1, move |s| {
+            assert_eq!(s, 0);
+            same2.store(std::thread::current().id() == tid, Ordering::SeqCst);
+        });
+        assert!(
+            same.load(Ordering::SeqCst),
+            "single shard must run on the caller, never touch the pool"
+        );
+        pool.run_scoped(0, |_| panic!("zero shards must run nothing"));
+    }
+
+    #[test]
+    fn run_scoped_propagates_shard_panic_and_pool_survives() {
+        let pool = WorkerPool::new(2);
+        let ran = Arc::new(AtomicUsize::new(0));
+        let r2 = Arc::clone(&ran);
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run_scoped(8, |s| {
+                r2.fetch_add(1, Ordering::SeqCst);
+                if s == 3 {
+                    panic!("shard blew up");
+                }
+            });
+        }));
+        assert!(res.is_err(), "shard panic must propagate to the caller");
+        // the contained panic drained the cursor: every shard still ran
+        assert_eq!(ran.load(Ordering::SeqCst), 8);
+        // and the pool remains fully usable afterwards
+        let ok = Arc::new(AtomicUsize::new(0));
+        let o2 = Arc::clone(&ok);
+        pool.run_scoped(4, move |_| {
+            o2.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(ok.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn run_scoped_concurrent_callers_both_complete() {
+        let pool = Arc::new(WorkerPool::new(2));
+        let total = Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|scope| {
+            for _ in 0..3 {
+                let pool = Arc::clone(&pool);
+                let total = Arc::clone(&total);
+                scope.spawn(move || {
+                    for _ in 0..10 {
+                        let t = &total;
+                        pool.run_scoped(6, |_| {
+                            t.fetch_add(1, Ordering::SeqCst);
+                        });
+                    }
+                });
+            }
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 3 * 10 * 6);
+    }
+
+    #[test]
+    fn run_scoped_interleaves_with_queued_jobs() {
+        let pool = WorkerPool::new(2);
+        let jobs = Arc::new(AtomicUsize::new(0));
+        for _ in 0..32 {
+            let j = Arc::clone(&jobs);
+            pool.execute(move || {
+                j.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        let shards_run = Arc::new(AtomicUsize::new(0));
+        let s2 = Arc::clone(&shards_run);
+        pool.run_scoped(12, move |_| {
+            s2.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(shards_run.load(Ordering::SeqCst), 12);
+        drop(pool);
+        assert_eq!(jobs.load(Ordering::SeqCst), 32, "queued jobs were lost");
+    }
+
+    #[test]
+    fn parse_threads_clamps_and_rejects() {
+        assert_eq!(parse_threads("4"), Some(4));
+        assert_eq!(parse_threads(" 2 "), Some(2));
+        assert_eq!(parse_threads("0"), Some(1), "0 clamps to serial");
+        assert_eq!(parse_threads(""), None);
+        assert_eq!(parse_threads("many"), None);
+    }
+
+    #[test]
+    fn shared_pool_is_process_wide() {
+        let a = shared_pool();
+        let b = shared_pool();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert!(a.workers() >= 1);
     }
 }

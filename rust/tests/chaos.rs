@@ -20,6 +20,7 @@ fn small_cfg(trials: usize) -> ChaosConfig {
         trials,
         workers: 3,
         eval_rows: 24,
+        kernel_threads: None,
     }
 }
 

@@ -257,6 +257,7 @@ fn router_concurrent_serving_exactly_once_with_golden_outputs() {
             workers: 4,
             max_wait: Duration::from_millis(2),
             flush_tick: Duration::from_micros(200),
+            kernel_threads: None,
         },
         vec![
             ("alpha".into(), toy_engine(&nets[0], 4)),
@@ -347,6 +348,7 @@ fn router_deadline_flush_answers_tail_requests() {
             workers: 2,
             max_wait: Duration::from_millis(1),
             flush_tick: Duration::from_micros(200),
+            kernel_threads: None,
         },
         vec![("tail".into(), toy_engine(&net, 8))],
     );
@@ -487,6 +489,69 @@ fn batched_out_of_grid_features_fall_back_to_exact_cells() {
     }
 }
 
+/// Property test for the row-sharded kernel: at every table corner (and
+/// on the algorithmic tier), randomized layer shapes / row counts /
+/// weights must produce **bit-identical** logits whether the batch runs
+/// serially or sharded across 2, 3, or 8 slab threads.  Equality is
+/// `assert_eq!` on the raw f64s — no tolerance — because slab sharding
+/// preserves each row's accumulation order exactly (DESIGN.md §10).
+#[test]
+fn parallel_kernel_is_bit_identical_across_corners() {
+    // coarse grids keep corner calibration cheap: bit-identity between
+    // thread counts holds at any resolution, so resolution is not under
+    // test here (the corner-equivalence test above covers accuracy)
+    let cfg = GridConfig {
+        proto_range: 6.0,
+        proto_density: 192,
+        act_range: 16.0,
+        act_density: 96,
+    };
+    let tables = table_corners();
+    let mut rng = sac::util::rng::Rng::new(0xb17_1de2);
+    for ci in 0..=tables.len() {
+        let provider: Box<dyn HProvider + Send + Sync> = if ci == 0 {
+            Box::new(Algorithmic::relu())
+        } else {
+            Box::new(tables[ci - 1].clone())
+        };
+        let label = provider.label();
+        let kernel = BatchKernel::new(provider, sac::nn::Activation::Phi1, 3, 1.0, &cfg);
+        // randomized shapes: 2–3 layers, widths 2..=6, rows 1..=48
+        for case in 0..3 {
+            let nl = 2 + (rng.next_u64() % 2) as usize;
+            let sizes: Vec<usize> = (0..=nl).map(|_| 2 + (rng.next_u64() % 5) as usize).collect();
+            let rows = 1 + (rng.next_u64() % 48) as usize;
+            let mut weights = Vec::with_capacity(nl);
+            let mut biases = Vec::with_capacity(nl);
+            for li in 0..nl {
+                weights.push(
+                    (0..sizes[li] * sizes[li + 1])
+                        .map(|_| rng.uniform_in(-0.9, 0.9))
+                        .collect::<Vec<f64>>(),
+                );
+                biases.push(
+                    (0..sizes[li + 1])
+                        .map(|_| rng.uniform_in(-0.2, 0.2))
+                        .collect::<Vec<f64>>(),
+                );
+            }
+            let x: Vec<f32> = (0..rows * sizes[0])
+                .map(|_| rng.uniform_in(-1.0, 1.0) as f32)
+                .collect();
+            let serial = kernel.forward_batch_threads(&sizes, &weights, &biases, &x, rows, 1);
+            for threads in [2usize, 3, 8] {
+                let par =
+                    kernel.forward_batch_threads(&sizes, &weights, &biases, &x, rows, threads);
+                assert_eq!(
+                    serial, par,
+                    "corner {label} case {case} (sizes {sizes:?}, rows {rows}): \
+                     logits diverged at {threads} threads"
+                );
+            }
+        }
+    }
+}
+
 /// The golden serving test on the batched engine: the full concurrent
 /// router path with batched executables must reproduce the scalar golden
 /// forward's logits within `BATCH_TOL` and its predicted labels exactly
@@ -508,6 +573,7 @@ fn batched_router_serving_matches_scalar_golden() {
             workers: 4,
             max_wait: Duration::from_millis(2),
             flush_tick: Duration::from_micros(200),
+            kernel_threads: None,
         },
         vec![
             ("balpha".into(), mk_engine(&nets[0], 4)),
@@ -608,6 +674,7 @@ fn router_submit_after_shutdown_is_rejected() {
             workers: 2,
             max_wait: Duration::from_millis(2),
             flush_tick: Duration::from_micros(200),
+            kernel_threads: None,
         },
         vec![("shut".into(), toy_engine(&net, 8))],
     );
@@ -635,6 +702,7 @@ fn router_zero_pending_flush_is_noop() {
             workers: 1,
             max_wait: Duration::from_millis(2),
             flush_tick: Duration::from_micros(200),
+            kernel_threads: None,
         },
         vec![("idle".into(), toy_engine(&net, 4))],
     );
@@ -675,6 +743,7 @@ fn router_per_task_metrics_aggregate_under_concurrency() {
             workers: 4,
             max_wait: Duration::from_millis(2),
             flush_tick: Duration::from_micros(200),
+            kernel_threads: None,
         },
         engines,
     );

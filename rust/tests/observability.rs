@@ -31,8 +31,8 @@ use std::sync::{Arc, Barrier, Mutex, MutexGuard};
 use std::time::Duration;
 
 use sac::coordinator::{
-    metrics_file_json, prometheus_exposition, synthetic_engine, MetricsSnapshot, Router,
-    RouterConfig, ServeMetrics, StageSnapshot,
+    metrics_file_json, prometheus_exposition, synthetic_engine, KernelSnapshot, MetricsSnapshot,
+    Router, RouterConfig, ServeMetrics, StageSnapshot,
 };
 use sac::faults::{
     chaos_corners, chaos_net, run_corner_with_metrics, run_infra_with_metrics, AnalogFault,
@@ -119,6 +119,12 @@ fn golden_snapshot() -> MetricsSnapshot {
         },
         lanes: vec![("alpha".into(), alpha), ("beta".into(), beta)],
         aggregate,
+        kernel: KernelSnapshot {
+            parallel_batches: 4,
+            serial_batches: 2,
+            grid_cache_hits: 3,
+            grid_cache_misses: 1,
+        },
         trace: TraceStats {
             enabled: true,
             capacity: 64,
@@ -166,7 +172,7 @@ fn golden_json_exposition_is_stable() {
     // the canonical text round-trips through the parser unchanged
     let back = json::parse(&text).unwrap();
     assert_eq!(back.to_string(), text);
-    assert_eq!(back.get("schema").unwrap().as_str().unwrap(), "sac-metrics/v1");
+    assert_eq!(back.get("schema").unwrap().as_str().unwrap(), "sac-metrics/v2");
     let snap_json = &back.get("snapshots").unwrap().as_arr().unwrap()[0];
     assert_eq!(snap_json.get("router").unwrap().as_str().unwrap(), "golden");
 }
@@ -360,6 +366,69 @@ fn enabled_tracing_steady_state_allocates_nothing() {
     trace::disable();
 }
 
+/// ISSUE-8 acceptance: once the scratch arena and the caller's logits
+/// buffer are warm, `forward_batch_into` performs **zero** heap
+/// allocations on the calling thread — serial and row-sharded alike.
+/// The ping-pong arena buffers are checked out/returned without
+/// reallocation, `run_scoped` publishes its task on the caller's stack,
+/// and disabled spans are free (asserted separately above).
+#[test]
+fn warm_forward_batch_into_allocates_nothing() {
+    let _g = trace_lock();
+    trace::disable();
+    // a private grid resolution so this test's cache entry never collides
+    // with another test's (the cache is process-global)
+    let cfg = sac::nn::batch::GridConfig {
+        proto_range: 6.0,
+        proto_density: 259,
+        act_range: 16.0,
+        act_density: 131,
+    };
+    let kernel = sac::nn::batch::BatchKernel::new(
+        Box::new(sac::cells::Algorithmic::relu()),
+        sac::nn::Activation::Phi1,
+        3,
+        1.0,
+        &cfg,
+    );
+    let sizes = vec![6usize, 8, 4];
+    let mut rng = sac::util::rng::Rng::new(88);
+    let mut weights: Vec<Vec<f64>> = Vec::new();
+    let mut biases: Vec<Vec<f64>> = Vec::new();
+    for li in 0..sizes.len() - 1 {
+        weights.push(
+            (0..sizes[li] * sizes[li + 1])
+                .map(|_| rng.uniform_in(-0.8, 0.8))
+                .collect(),
+        );
+        biases.push((0..sizes[li + 1]).map(|_| rng.uniform_in(-0.2, 0.2)).collect());
+    }
+    // 32 rows: enough for 4 full slabs above the small-batch threshold
+    let rows = 32;
+    let x: Vec<f32> = (0..rows * sizes[0])
+        .map(|_| rng.uniform_in(-1.0, 1.0) as f32)
+        .collect();
+    let mut logits = Vec::new();
+    // warm-up outside the measured window: grows the arena, initializes
+    // the lazy process-wide slab pool, sizes the logits buffer
+    for threads in [1usize, 4, 1, 4] {
+        kernel.forward_batch_into(&sizes, &weights, &biases, &x, rows, threads, &mut logits);
+    }
+    let want = logits.clone();
+    for threads in [1usize, 4] {
+        let before = thread_allocs();
+        for _ in 0..50 {
+            kernel.forward_batch_into(&sizes, &weights, &biases, &x, rows, threads, &mut logits);
+        }
+        assert_eq!(
+            thread_allocs() - before,
+            0,
+            "steady-state forward_batch_into allocated at {threads} threads"
+        );
+        assert_eq!(logits, want, "warm path changed the logits at {threads} threads");
+    }
+}
+
 // ---------------------------------------------------------------------
 // tentpole: stage counters through the live router pipeline
 // ---------------------------------------------------------------------
@@ -466,6 +535,7 @@ fn corner_histograms_count_every_delivered_request() {
         trials: 2,
         workers: 3,
         eval_rows: 24,
+        kernel_threads: None,
     };
     for (node, regime) in chaos_corners() {
         let (report, snap) = run_corner_with_metrics(node, regime, &net, &plan, &cfg).unwrap();
@@ -526,6 +596,7 @@ fn latency_injection_shows_up_in_the_histograms() {
         trials: 1,
         workers: 3,
         eval_rows: 8,
+        kernel_threads: None,
     };
     let (report, snap) = run_infra_with_metrics(&plan, &cfg).unwrap();
     assert!(report.resolved_exactly_once);
@@ -588,7 +659,7 @@ fn bench_serve_metrics_out_counts_match_delivered_requests() {
     assert!(status.success());
 
     let j = json::parse_file(&out).unwrap();
-    assert_eq!(j.get("schema").unwrap().as_str().unwrap(), "sac-metrics/v1");
+    assert_eq!(j.get("schema").unwrap().as_str().unwrap(), "sac-metrics/v2");
     let snaps = j.get("snapshots").unwrap().as_arr().unwrap();
     assert_eq!(snaps.len(), 1);
     let snap = &snaps[0];
@@ -649,7 +720,7 @@ fn metrics_cli_emits_parseable_canonical_json() {
     );
     let stdout = String::from_utf8(output.stdout).unwrap();
     let j = json::parse(stdout.trim()).unwrap();
-    assert_eq!(j.get("schema").unwrap().as_str().unwrap(), "sac-metrics/v1");
+    assert_eq!(j.get("schema").unwrap().as_str().unwrap(), "sac-metrics/v2");
     let snap = &j.get("snapshots").unwrap().as_arr().unwrap()[0];
     assert_eq!(snap.get("router").unwrap().as_str().unwrap(), "metrics");
     let agg = snap.get("aggregate").unwrap();
@@ -679,6 +750,8 @@ fn metrics_cli_prometheus_exposition_is_wellformed() {
         "sac_batches_total",
         "sac_busy_seconds_total",
         "sac_stage_total",
+        "sac_kernel_batches_total",
+        "sac_grid_cache_total",
         "sac_trace_recorded_total",
         "sac_trace_dropped_total",
         "sac_batch_latency_seconds",
