@@ -65,6 +65,17 @@ impl DynamicBatcher {
         Some(self.materialize(self.batch_size))
     }
 
+    /// Remove and return the oldest queued request's id, without
+    /// materializing it into a batch.  Deadline-aware shedding: the
+    /// router resolves the shed id as failed instead of executing it.
+    pub fn shed_front(&mut self) -> Option<u64> {
+        if self.queue.is_empty() {
+            None
+        } else {
+            Some(self.queue.remove(0).id)
+        }
+    }
+
     /// Drain everything, padding the final partial batch.
     pub fn flush(&mut self) -> Vec<Batch> {
         let mut out = Vec::new();
@@ -135,6 +146,24 @@ mod tests {
     fn rejects_wrong_dim() {
         let mut b = DynamicBatcher::new(2, 3);
         b.submit(vec![1.0]);
+    }
+
+    #[test]
+    fn shed_front_removes_oldest_and_preserves_the_rest() {
+        let mut b = DynamicBatcher::new(4, 1);
+        for i in 0..3 {
+            b.submit(vec![i as f32]);
+        }
+        assert_eq!(b.shed_front(), Some(0));
+        assert_eq!(b.shed_front(), Some(1));
+        assert_eq!(b.pending(), 1);
+        let batches = b.flush();
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].ids, vec![2]);
+        assert_eq!(batches[0].data[0], 2.0);
+        assert_eq!(b.shed_front(), None);
+        // ids keep advancing after a shed — no reuse
+        assert_eq!(b.submit(vec![9.0]), 3);
     }
 
     #[test]

@@ -1,0 +1,304 @@
+//! Lane health-state machine for the self-healing router (DESIGN.md §11).
+//!
+//! Every lane tracks a three-state machine driven by windowed canary
+//! probe scores:
+//!
+//! ```text
+//!             verdict > degrade_above              verdict > quarantine_above
+//!   Healthy ────────────────────────► Degraded ────────────────────────► Quarantined
+//!      ▲                                 │  ▲                                 │
+//!      │   recover_after clean verdicts  │  │  patience degraded verdicts     │
+//!      └─────────────────────────────────┘  └───────────(escalation)──────────┘
+//!      ▲                                                                      │
+//!      └───────────────────── rebuilt() after grid re-calibration ────────────┘
+//! ```
+//!
+//! A *verdict* is the mean canary disagreement fraction over one full
+//! window of probe rounds.  The two thresholds default to the paper's
+//! chaos envelopes (`faults::chaos`): mean 0.15 / worst 0.40.  Entering
+//! `Quarantined` always passes through `Degraded` first, so the timeline
+//! records the full escalation even on a single catastrophic verdict.
+//! `Quarantined` is sticky: no verdict leaves it — only a successful
+//! engine rebuild ([`LaneHealth::rebuilt`]) returns the lane to
+//! `Healthy`.  Sustained `Degraded` (disagreement between the two
+//! envelopes for `patience` consecutive verdicts) escalates to
+//! `Quarantined` too, so a lane never idles in a degraded steady state.
+
+use crate::faults::{MEAN_DEGRADATION_ENVELOPE, WORST_DEGRADATION_ENVELOPE};
+use crate::util::json::Json;
+
+/// One lane's serving health, as decided by the canary detector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HealthState {
+    /// canary agreement inside the paper envelope
+    Healthy,
+    /// windowed disagreement above the mean envelope — still serving,
+    /// under observation
+    Degraded,
+    /// disagreement above the collapse envelope (or sustained
+    /// degradation): drained, traffic failed over, awaiting rebuild
+    Quarantined,
+}
+
+impl HealthState {
+    /// Stable lowercase name (telemetry label / JSON value).
+    pub fn name(self) -> &'static str {
+        match self {
+            HealthState::Healthy => "healthy",
+            HealthState::Degraded => "degraded",
+            HealthState::Quarantined => "quarantined",
+        }
+    }
+
+    /// Prometheus gauge encoding (0 = healthy, 1 = degraded,
+    /// 2 = quarantined).
+    pub fn gauge(self) -> u64 {
+        match self {
+            HealthState::Healthy => 0,
+            HealthState::Degraded => 1,
+            HealthState::Quarantined => 2,
+        }
+    }
+}
+
+/// Detector knobs.  Defaults bind the state machine to the chaos suite's
+/// paper envelopes.
+#[derive(Clone, Copy, Debug)]
+pub struct HealthConfig {
+    /// probe rounds per verdict (scores are averaged over the window)
+    pub window: usize,
+    /// verdict above this mean disagreement ⇒ at least `Degraded`
+    /// (default [`MEAN_DEGRADATION_ENVELOPE`])
+    pub degrade_above: f64,
+    /// verdict above this mean disagreement ⇒ `Quarantined`
+    /// (default [`WORST_DEGRADATION_ENVELOPE`])
+    pub quarantine_above: f64,
+    /// consecutive degraded verdicts before escalating to `Quarantined`
+    pub patience: usize,
+    /// consecutive clean verdicts before `Degraded` recovers on its own
+    pub recover_after: usize,
+}
+
+impl Default for HealthConfig {
+    fn default() -> Self {
+        HealthConfig {
+            window: 2,
+            degrade_above: MEAN_DEGRADATION_ENVELOPE,
+            quarantine_above: WORST_DEGRADATION_ENVELOPE,
+            patience: 2,
+            recover_after: 2,
+        }
+    }
+}
+
+/// One recorded transition, for the health timeline artifact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HealthEvent {
+    /// lane (task) name
+    pub lane: String,
+    pub from: HealthState,
+    pub to: HealthState,
+    /// completed-batch count on the lane when the transition fired
+    pub at_batch: u64,
+}
+
+impl HealthEvent {
+    /// Canonical JSON form (alphabetical keys).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("at_batch", Json::Num(self.at_batch as f64)),
+            ("from", Json::Str(self.from.name().into())),
+            ("lane", Json::Str(self.lane.clone())),
+            ("to", Json::Str(self.to.name().into())),
+        ])
+    }
+}
+
+/// The per-lane detector: accumulates probe scores into windows and
+/// advances the state machine on each full window.
+#[derive(Clone, Debug)]
+pub struct LaneHealth {
+    cfg: HealthConfig,
+    state: HealthState,
+    /// scores of the in-progress window
+    scores: Vec<f64>,
+    degraded_streak: usize,
+    clean_streak: usize,
+}
+
+impl LaneHealth {
+    pub fn new(cfg: HealthConfig) -> LaneHealth {
+        LaneHealth {
+            cfg: HealthConfig {
+                window: cfg.window.max(1),
+                patience: cfg.patience.max(1),
+                recover_after: cfg.recover_after.max(1),
+                ..cfg
+            },
+            state: HealthState::Healthy,
+            scores: Vec::new(),
+            degraded_streak: 0,
+            clean_streak: 0,
+        }
+    }
+
+    pub fn state(&self) -> HealthState {
+        self.state
+    }
+
+    /// Record one probe round's disagreement fraction (`0.0` = perfect
+    /// agreement).  Returns the states newly entered, in order — empty
+    /// until a window fills or while the verdict confirms the current
+    /// state.  `Quarantined` ignores further scores until
+    /// [`LaneHealth::rebuilt`].
+    pub fn observe(&mut self, disagreement: f64) -> Vec<HealthState> {
+        if self.state == HealthState::Quarantined {
+            return Vec::new();
+        }
+        self.scores.push(disagreement.clamp(0.0, 1.0));
+        if self.scores.len() < self.cfg.window {
+            return Vec::new();
+        }
+        let verdict = self.scores.iter().sum::<f64>() / self.scores.len() as f64;
+        self.scores.clear();
+        let mut entered = Vec::new();
+        if verdict > self.cfg.degrade_above {
+            self.clean_streak = 0;
+            self.degraded_streak += 1;
+            if self.state == HealthState::Healthy {
+                self.state = HealthState::Degraded;
+                entered.push(HealthState::Degraded);
+            }
+            let collapse = verdict > self.cfg.quarantine_above;
+            if collapse || self.degraded_streak >= self.cfg.patience {
+                self.state = HealthState::Quarantined;
+                entered.push(HealthState::Quarantined);
+            }
+        } else {
+            self.degraded_streak = 0;
+            if self.state == HealthState::Degraded {
+                self.clean_streak += 1;
+                if self.clean_streak >= self.cfg.recover_after {
+                    self.clean_streak = 0;
+                    self.state = HealthState::Healthy;
+                    entered.push(HealthState::Healthy);
+                }
+            }
+        }
+        entered
+    }
+
+    /// A quarantined engine was rebuilt and passed its post-rebuild probe:
+    /// return to `Healthy`.  Returns `false` (and stays put) when the lane
+    /// was not quarantined.
+    pub fn rebuilt(&mut self) -> bool {
+        if self.state != HealthState::Quarantined {
+            return false;
+        }
+        self.state = HealthState::Healthy;
+        self.scores.clear();
+        self.degraded_streak = 0;
+        self.clean_streak = 0;
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick() -> LaneHealth {
+        LaneHealth::new(HealthConfig {
+            window: 2,
+            patience: 2,
+            recover_after: 2,
+            ..HealthConfig::default()
+        })
+    }
+
+    #[test]
+    fn clean_scores_never_leave_healthy() {
+        let mut h = quick();
+        for _ in 0..50 {
+            assert!(h.observe(0.0).is_empty());
+            assert_eq!(h.state(), HealthState::Healthy);
+        }
+        // scores at the envelope boundary are still clean (strictly-above
+        // trips, the paper envelope itself passes)
+        for _ in 0..10 {
+            assert!(h.observe(MEAN_DEGRADATION_ENVELOPE).is_empty());
+        }
+        assert_eq!(h.state(), HealthState::Healthy);
+    }
+
+    #[test]
+    fn collapse_verdict_passes_through_degraded() {
+        let mut h = quick();
+        assert!(h.observe(0.9).is_empty(), "window not full yet");
+        let entered = h.observe(0.9);
+        assert_eq!(
+            entered,
+            vec![HealthState::Degraded, HealthState::Quarantined],
+            "a collapse must record the full escalation"
+        );
+        assert_eq!(h.state(), HealthState::Quarantined);
+        // quarantine is sticky under further scores, even clean ones
+        for _ in 0..10 {
+            assert!(h.observe(0.0).is_empty());
+        }
+        assert_eq!(h.state(), HealthState::Quarantined);
+        assert!(h.rebuilt());
+        assert_eq!(h.state(), HealthState::Healthy);
+        assert!(!h.rebuilt(), "rebuilt() is a no-op when not quarantined");
+    }
+
+    #[test]
+    fn sustained_degradation_escalates_after_patience() {
+        let mut h = quick();
+        // disagreement between the envelopes: degraded, not collapsed
+        h.observe(0.25);
+        assert_eq!(h.observe(0.25), vec![HealthState::Degraded]);
+        assert_eq!(h.state(), HealthState::Degraded);
+        h.observe(0.25);
+        assert_eq!(
+            h.observe(0.25),
+            vec![HealthState::Quarantined],
+            "second degraded verdict must escalate (patience = 2)"
+        );
+    }
+
+    #[test]
+    fn degraded_recovers_after_clean_verdicts() {
+        let mut h = quick();
+        h.observe(0.25);
+        h.observe(0.25); // verdict 1: degraded
+        h.observe(0.0);
+        assert!(h.observe(0.0).is_empty()); // clean verdict 1 of 2
+        h.observe(0.0);
+        assert_eq!(h.observe(0.0), vec![HealthState::Healthy]);
+        assert_eq!(h.state(), HealthState::Healthy);
+        // and the degraded streak was reset by the clean verdicts
+        h.observe(0.25);
+        assert_eq!(h.observe(0.25), vec![HealthState::Degraded]);
+    }
+
+    #[test]
+    fn names_and_gauges_are_stable() {
+        assert_eq!(HealthState::Healthy.name(), "healthy");
+        assert_eq!(HealthState::Degraded.name(), "degraded");
+        assert_eq!(HealthState::Quarantined.name(), "quarantined");
+        assert_eq!(HealthState::Healthy.gauge(), 0);
+        assert_eq!(HealthState::Degraded.gauge(), 1);
+        assert_eq!(HealthState::Quarantined.gauge(), 2);
+        let e = HealthEvent {
+            lane: "alpha".into(),
+            from: HealthState::Healthy,
+            to: HealthState::Degraded,
+            at_batch: 12,
+        };
+        assert_eq!(
+            e.to_json().to_string(),
+            "{\"at_batch\":12,\"from\":\"healthy\",\"lane\":\"alpha\",\"to\":\"degraded\"}"
+        );
+    }
+}

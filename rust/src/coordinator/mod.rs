@@ -19,6 +19,7 @@
 //! tests.  Python is never on this path.
 
 pub mod batcher;
+pub mod health;
 pub mod metrics;
 pub mod router;
 pub mod telemetry;
@@ -28,11 +29,12 @@ use std::time::Instant;
 use anyhow::{anyhow, Result};
 
 pub use batcher::{Batch, DynamicBatcher};
+pub use health::{HealthConfig, HealthEvent, HealthState, LaneHealth};
 pub use metrics::ServeMetrics;
-pub use router::{RequestId, Response, Router, RouterConfig};
+pub use router::{LaneSpec, RebuildFn, RequestId, Response, Router, RouterConfig};
 pub use telemetry::{
-    kernel_stats, metrics_file_json, prometheus_exposition, KernelSnapshot, LatencyHistogram,
-    MetricsSnapshot, StageCounters, StageSnapshot, METRICS_SCHEMA,
+    kernel_stats, metrics_file_json, prometheus_exposition, HealthSnapshot, KernelSnapshot,
+    LatencyHistogram, MetricsSnapshot, StageCounters, StageSnapshot, METRICS_SCHEMA,
 };
 
 use crate::data::TrainedNet;

@@ -1,51 +1,62 @@
 //! Multi-task serving router: N task engines behind a single submit API,
 //! batches dispatched to a shared worker pool, deadline-based flushing so
-//! tail requests are never stranded.
+//! tail requests are never stranded — plus the self-healing layer:
+//! supervised requeue, canary drift detection, engine quarantine/rebuild,
+//! and deadline-aware load shedding (DESIGN.md §11).
 //!
 //! ```text
-//!             submit(task, features)
+//!             submit(task, features)  ──► admission bound (max_queue)
 //!                      │
 //!          ┌───────────▼───────────┐   per-task lane
 //!          │  Mutex<LaneBatcher>   │   (DynamicBatcher + enqueue times)
 //!          └───────────┬───────────┘
 //!        full batch ───┤                 ┌──────────────┐
-//!                      ├──◄── flusher ───┤ every tick:  │
+//!                      ├──◄── flusher ───┤ every tick:  │ + deadline shed
 //!                      │   (partial      │ age ≥ max_wait│
 //!          ┌───────────▼────────┐  batch)└──────────────┘
-//!          │ WorkerPool (shared)│  each job: Engine::run_batch (lock-free)
-//!          └───────────┬────────┘
+//!          │ WorkerPool (shared)│  each job: Engine::run_batch
+//!          └───────────┬────────┘  + transient retry + canary probe
 //!          ┌───────────▼───────────┐
 //!          │ Mutex<results: id→…>  │ ← wait()/try_take() remove exactly once
 //!          └───────────────────────┘
 //! ```
 //!
-//! Invariants (tested below and in `tests/integration.rs`):
+//! Invariants (tested below and in `tests/integration.rs` /
+//! `tests/recovery.rs`):
 //!
 //!  * every submitted request is answered exactly once — batches are only
-//!    materialized under the lane lock, and each materialized batch is
-//!    handed to exactly one worker;
+//!    materialized under the lane lock, each materialized batch is handed
+//!    to exactly one worker, and a worker death mid-delivery requeues its
+//!    in-flight batch exactly once (the `RequeueGuard`);
 //!  * a partial batch waits at most `max_wait` (+ one flusher tick) before
 //!    execution — the deadline flush;
-//!  * engines run without locks (`Engine::run_batch(&self, …)`), so
-//!    batches of the *same* task execute concurrently on many workers;
+//!  * engines run without write locks (`RwLock` read + stateless
+//!    `Engine::run_batch(&self, …)`), so batches of the *same* task
+//!    execute concurrently on many workers; the write lock is taken only
+//!    to swap in a rebuilt engine, which drains in-flight readers;
 //!  * an engine failure resolves every request of its batch with the
 //!    error ([`Router::wait`] reports it immediately; [`Router::drain`]
 //!    and [`Router::failures`] surface it), never a silent timeout;
+//!  * shedding (per-request deadline, bounded admission queue) only ever
+//!    rejects — it resolves requests as failed with a `shed:`-prefixed
+//!    message, preserving exactly-once accounting;
 //!  * metrics are recorded per task and can be aggregated across tasks.
 
 use std::collections::{HashMap, VecDeque};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::thread;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
 use super::batcher::{Batch, DynamicBatcher};
+use super::health::{HealthConfig, HealthEvent, HealthState, LaneHealth};
 use super::metrics::ServeMetrics;
-use super::telemetry::{MetricsSnapshot, StageCounters, StageSnapshot};
-use super::Engine;
+use super::telemetry::{HealthSnapshot, MetricsSnapshot, StageCounters, StageSnapshot};
+use super::{Answer, Engine};
 use crate::util::pool::{PoolHandle, WorkerPool};
+use crate::util::rng::Rng;
 use crate::util::trace;
 
 /// Handle to one submitted request: the task lane plus the per-lane
@@ -64,6 +75,10 @@ pub struct Response {
     pub logits: Vec<f32>,
 }
 
+/// Maximum in-place retries of a transient (panic-class) batch failure.
+/// Backoff doubles per retry (jittered exponential).
+const MAX_TRANSIENT_RETRIES: u32 = 2;
+
 /// Router tuning knobs.
 #[derive(Clone, Debug)]
 pub struct RouterConfig {
@@ -79,6 +94,26 @@ pub struct RouterConfig {
     /// setting.  Slab work runs on the process-wide slab pool, not the
     /// router's worker pool, and results are bit-identical at any value.
     pub kernel_threads: Option<usize>,
+    /// per-request deadline: a request still unexecuted this long after
+    /// submit is shed (resolved as failed with a `shed:` error) instead
+    /// of run — bounded-latency rejection under overload.  `None` never
+    /// sheds.
+    pub deadline: Option<Duration>,
+    /// bounded admission queue: reject new submits while roughly this
+    /// many accepted requests are unresolved (queued + in flight).
+    /// `None` admits without bound.
+    pub max_queue: Option<usize>,
+    /// run the canary probe set through a lane's engine every this many
+    /// completed batches; `0` disables drift detection entirely (no
+    /// probes, no fallback engines are built)
+    pub canary_every: u64,
+    /// health-state machine knobs (window, envelopes, patience)
+    pub health: HealthConfig,
+    /// retry a transient (panic-class) batch failure in place, after a
+    /// jittered exponential backoff, up to `MAX_TRANSIENT_RETRIES` times
+    pub retry_transient: bool,
+    /// base backoff before the first transient retry (doubles per retry)
+    pub retry_backoff: Duration,
 }
 
 impl Default for RouterConfig {
@@ -88,12 +123,59 @@ impl Default for RouterConfig {
             max_wait: Duration::from_millis(2),
             flush_tick: Duration::from_micros(500),
             kernel_threads: None,
+            deadline: None,
+            max_queue: None,
+            canary_every: 0,
+            health: HealthConfig::default(),
+            retry_transient: true,
+            retry_backoff: Duration::from_micros(500),
         }
     }
 }
 
+/// Rebuild recipe for a quarantined lane: produce a fresh [`Engine`]
+/// (same batch shape) from the *current* provider state — re-calibration
+/// under drift.  Runs on a router worker, outside any lock.
+pub type RebuildFn = Arc<dyn Fn() -> Result<Engine> + Send + Sync>;
+
+/// Everything needed to host one task lane.  [`Router::new`] wraps plain
+/// `(name, engine)` pairs; [`Router::with_specs`] exposes the full
+/// self-healing surface.
+pub struct LaneSpec {
+    pub name: String,
+    pub engine: Engine,
+    /// golden probe set: feature rows plus the expected argmax labels
+    /// (from a nominal reference engine).  `None` with canaries enabled
+    /// self-captures labels from the lane's own engine at build time.
+    pub probe: Option<(Vec<Vec<f32>>, Vec<usize>)>,
+    /// engine rebuild recipe for the quarantine path; `None` rebuilds a
+    /// clean native executable from the lane's own net (same mode)
+    pub rebuild: Option<RebuildFn>,
+}
+
+impl LaneSpec {
+    pub fn new(name: impl Into<String>, engine: Engine) -> LaneSpec {
+        LaneSpec {
+            name: name.into(),
+            engine,
+            probe: None,
+            rebuild: None,
+        }
+    }
+
+    pub fn with_probe(mut self, rows: Vec<Vec<f32>>, labels: Vec<usize>) -> LaneSpec {
+        self.probe = Some((rows, labels));
+        self
+    }
+
+    pub fn with_rebuild(mut self, rebuild: RebuildFn) -> LaneSpec {
+        self.rebuild = Some(rebuild);
+        self
+    }
+}
+
 /// Per-task batcher plus the enqueue timestamp of every pending request
-/// (front = oldest), driving the deadline flush.
+/// (front = oldest), driving the deadline flush and queue-side shedding.
 struct LaneBatcher {
     batcher: DynamicBatcher,
     enqueued_at: VecDeque<Instant>,
@@ -153,6 +235,26 @@ impl LaneBatcher {
         (out, deadline_fired)
     }
 
+    /// Pop the ids of queued requests already past `deadline` off the
+    /// front (FIFO: the front is always the oldest).
+    fn shed_overdue(&mut self, deadline: Duration) -> Vec<u64> {
+        let mut shed = Vec::new();
+        while self
+            .enqueued_at
+            .front()
+            .is_some_and(|t0| t0.elapsed() >= deadline)
+        {
+            match self.batcher.shed_front() {
+                Some(id) => {
+                    self.enqueued_at.pop_front();
+                    shed.push(id);
+                }
+                None => break,
+            }
+        }
+        shed
+    }
+
     fn pending(&self) -> usize {
         self.batcher.pending()
     }
@@ -167,9 +269,31 @@ struct LaneResults {
     failed: HashMap<u64, String>,
 }
 
+/// The canary probe set: one pre-materialized batch of golden rows plus
+/// the expected argmax labels.
+struct ProbeSet {
+    batch: Batch,
+    labels: Vec<usize>,
+}
+
 struct Lane {
     name: String,
-    engine: Engine,
+    /// the serving engine; read-locked per batch, write-locked only to
+    /// swap in a rebuilt engine (which thereby drains in-flight readers)
+    engine: RwLock<Engine>,
+    /// batch shape, cached so `submit` never touches the engine lock
+    /// (rebuilds preserve it — enforced before every swap)
+    dim: usize,
+    batch_size: usize,
+    /// scalar exact-cell failover engine serving while quarantined
+    /// (built only when canaries are enabled)
+    fallback: Option<Engine>,
+    use_fallback: AtomicBool,
+    rebuild: Option<RebuildFn>,
+    probe: Option<ProbeSet>,
+    health: Mutex<LaneHealth>,
+    /// batches resolved on this lane (canary cadence clock)
+    batches_done: AtomicU64,
     queue: Mutex<LaneBatcher>,
     /// Cheap idle hint so the flusher skips lanes without taking the
     /// queue lock; only ever written while holding the queue lock.
@@ -179,8 +303,25 @@ struct Lane {
     metrics: Mutex<ServeMetrics>,
 }
 
+/// Self-healing counters (telemetry `sac-metrics/v3` health block).
+#[derive(Default)]
+struct HealthCounters {
+    probes: AtomicU64,
+    probe_disagreements: AtomicU64,
+    to_degraded: AtomicU64,
+    to_quarantined: AtomicU64,
+    recovered: AtomicU64,
+    rebuilds: AtomicU64,
+    rebuild_ns_total: AtomicU64,
+    shed_deadline: AtomicU64,
+    shed_queue: AtomicU64,
+    requeues: AtomicU64,
+    retries: AtomicU64,
+}
+
 struct Shared {
     lanes: Vec<Lane>,
+    cfg: RouterConfig,
     /// batches enqueued on the pool or executing
     inflight: Mutex<usize>,
     idle_cv: Condvar,
@@ -193,6 +334,10 @@ struct Shared {
     flush_cv: Condvar,
     /// lock-free pipeline stage counters (telemetry, DESIGN.md §9)
     stages: StageCounters,
+    /// self-healing counters (telemetry, DESIGN.md §11)
+    health: HealthCounters,
+    /// health-state transition timeline (CI artifact surface)
+    timeline: Mutex<Vec<HealthEvent>>,
 }
 
 /// The multi-task serving router.  See the module docs for the dataflow.
@@ -207,18 +352,50 @@ impl Router {
     /// Host one lane per `(name, engine)` task behind `cfg.workers` shared
     /// workers, and start the deadline flusher.
     pub fn new(cfg: RouterConfig, tasks: Vec<(String, Engine)>) -> Router {
-        assert!(!tasks.is_empty(), "router needs at least one task");
-        let lanes = tasks
+        Router::with_specs(
+            cfg,
+            tasks
+                .into_iter()
+                .map(|(name, engine)| LaneSpec::new(name, engine))
+                .collect(),
+        )
+    }
+
+    /// [`Router::new`] with the full self-healing lane surface: golden
+    /// probes and rebuild recipes per lane.
+    pub fn with_specs(cfg: RouterConfig, specs: Vec<LaneSpec>) -> Router {
+        assert!(!specs.is_empty(), "router needs at least one task");
+        let canary_on = cfg.canary_every > 0;
+        let lanes = specs
             .into_iter()
-            .map(|(name, engine)| {
+            .map(|spec| {
                 let engine = match cfg.kernel_threads {
-                    Some(n) => engine.with_par_threads(n),
-                    None => engine,
+                    Some(n) => spec.engine.with_par_threads(n),
+                    None => spec.engine,
                 };
-                let queue = Mutex::new(LaneBatcher::new(engine.batch_size, engine.dim));
+                let dim = engine.dim;
+                let batch_size = engine.batch_size;
+                let fallback = if canary_on { scalar_fallback(&engine) } else { None };
+                let probe = if canary_on {
+                    build_probe(&engine, spec.probe)
+                } else {
+                    None
+                };
+                let rebuild = spec.rebuild.or_else(|| {
+                    canary_on.then(|| default_rebuild(&engine))
+                });
+                let queue = Mutex::new(LaneBatcher::new(batch_size, dim));
                 Lane {
-                    name,
-                    engine,
+                    name: spec.name,
+                    engine: RwLock::new(engine),
+                    dim,
+                    batch_size,
+                    fallback,
+                    use_fallback: AtomicBool::new(false),
+                    rebuild,
+                    probe,
+                    health: Mutex::new(LaneHealth::new(cfg.health)),
+                    batches_done: AtomicU64::new(0),
                     queue,
                     has_pending: AtomicBool::new(false),
                     results: Mutex::new(LaneResults::default()),
@@ -229,6 +406,7 @@ impl Router {
             .collect();
         let shared = Arc::new(Shared {
             lanes,
+            cfg: cfg.clone(),
             inflight: Mutex::new(0),
             idle_cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
@@ -236,6 +414,8 @@ impl Router {
             flush_signal: Mutex::new(false),
             flush_cv: Condvar::new(),
             stages: StageCounters::default(),
+            health: HealthCounters::default(),
+            timeline: Mutex::new(Vec::new()),
         });
         let pool = WorkerPool::new(cfg.workers);
         let pool_handle = pool.handle();
@@ -288,6 +468,10 @@ impl Router {
                                 // "in limbo" outside both the queue and the
                                 // inflight counter (drain correctness).
                                 let mut q = lane.queue.lock().unwrap();
+                                if let Some(dl) = shared.cfg.deadline {
+                                    let shed = q.shed_overdue(dl);
+                                    resolve_shed(&shared, li, &shed, dl);
+                                }
                                 let (batches, deadline_fired) = q.take_overdue(max_wait);
                                 if deadline_fired {
                                     StageCounters::bump(&shared.stages.deadline_flushes);
@@ -334,7 +518,8 @@ impl Router {
 
     /// Submit one request to a task lane; returns its handle.  The batch
     /// dispatches immediately when full, otherwise within
-    /// `max_wait + flush_tick`.
+    /// `max_wait + flush_tick`.  Rejects (without side effects) when the
+    /// router is shut down or the admission queue is full.
     pub fn submit(&self, task: usize, features: Vec<f32>) -> Result<RequestId> {
         let _span = trace::span("router.submit");
         if self.shared.shutdown.load(Ordering::SeqCst) {
@@ -348,17 +533,35 @@ impl Router {
                 bail!("no task lane #{task}");
             }
         };
-        if features.len() != lane.engine.dim {
+        if features.len() != lane.dim {
             StageCounters::bump(&self.shared.stages.rejected);
             bail!(
                 "task {:?}: feature dim {} != {}",
                 lane.name,
                 features.len(),
-                lane.engine.dim
+                lane.dim
             );
         }
-        StageCounters::bump(&self.shared.stages.submitted);
         let mut q = lane.queue.lock().unwrap();
+        if let Some(maxq) = self.shared.cfg.max_queue {
+            // approximate unresolved depth: materialized batches in
+            // flight (router-wide) × this lane's batch size, plus this
+            // lane's queue.  Coarse, but bounds queue growth under storm.
+            let backlog =
+                *self.shared.inflight.lock().unwrap() * lane.batch_size + q.pending();
+            if backlog >= maxq {
+                self.shared
+                    .health
+                    .shed_queue
+                    .fetch_add(1, Ordering::Relaxed);
+                StageCounters::bump(&self.shared.stages.rejected);
+                bail!(
+                    "task {:?}: shed: admission queue full ({backlog} unresolved >= {maxq})",
+                    lane.name
+                );
+            }
+        }
+        StageCounters::bump(&self.shared.stages.submitted);
         let id = q.submit(features);
         for b in q.pop_fulls() {
             enqueue_batch(&self.shared, &self.pool_handle, task, b);
@@ -516,8 +719,54 @@ impl Router {
         self.shared.stages.snapshot()
     }
 
+    /// Current health state of every lane, in lane order.
+    pub fn health_states(&self) -> Vec<(String, HealthState)> {
+        self.shared
+            .lanes
+            .iter()
+            .map(|l| (l.name.clone(), l.health.lock().unwrap().state()))
+            .collect()
+    }
+
+    /// Health-state transition timeline so far (CI artifact surface).
+    pub fn health_timeline(&self) -> Vec<HealthEvent> {
+        self.shared.timeline.lock().unwrap().clone()
+    }
+
+    /// The `sac-metrics/v3` health block: lane states plus every
+    /// self-healing counter, including the worker pool's respawn count.
+    pub fn health_snapshot(&self) -> HealthSnapshot {
+        let h = &self.shared.health;
+        HealthSnapshot {
+            lanes: self
+                .shared
+                .lanes
+                .iter()
+                .map(|l| {
+                    (
+                        l.name.clone(),
+                        l.health.lock().unwrap().state().name().to_string(),
+                    )
+                })
+                .collect(),
+            probes: h.probes.load(Ordering::Relaxed),
+            probe_disagreements: h.probe_disagreements.load(Ordering::Relaxed),
+            to_degraded: h.to_degraded.load(Ordering::Relaxed),
+            to_quarantined: h.to_quarantined.load(Ordering::Relaxed),
+            recovered: h.recovered.load(Ordering::Relaxed),
+            rebuilds: h.rebuilds.load(Ordering::Relaxed),
+            rebuild_ns_total: h.rebuild_ns_total.load(Ordering::Relaxed),
+            shed_deadline: h.shed_deadline.load(Ordering::Relaxed),
+            shed_queue: h.shed_queue.load(Ordering::Relaxed),
+            requeues: h.requeues.load(Ordering::Relaxed),
+            retries: h.retries.load(Ordering::Relaxed),
+            respawns: self.pool.respawns(),
+        }
+    }
+
     /// Full telemetry snapshot under `name`: stage counters, per-lane
-    /// and aggregate metrics, and the trace-sink stats at capture time.
+    /// and aggregate metrics, the health block, and the trace-sink stats
+    /// at capture time.
     pub fn metrics_snapshot(&self, name: &str) -> MetricsSnapshot {
         let lanes: Vec<(String, ServeMetrics)> = self
             .shared
@@ -536,6 +785,7 @@ impl Router {
             aggregate,
             kernel: crate::coordinator::telemetry::kernel_stats(),
             trace: trace::stats(),
+            health: self.health_snapshot(),
         }
     }
 
@@ -584,78 +834,501 @@ impl Drop for Router {
     }
 }
 
+/// Build the scalar exact-cell failover engine for a lane (the bottom of
+/// the `ExecMode` fallback chain: no grids, no calibration drift).
+fn scalar_fallback(engine: &Engine) -> Option<Engine> {
+    use crate::runtime::{ExecMode, Executable};
+    let exe =
+        Executable::native_mlp_with_mode(&engine.net, engine.batch_size, ExecMode::Scalar).ok()?;
+    Engine::from_parts(engine.net.clone(), exe).ok()
+}
+
+/// Default rebuild recipe: a clean native executable from the lane's own
+/// net, same mode — recovers from in-memory corruption (e.g. poisoned
+/// grids), though not from provider drift (supply [`LaneSpec::rebuild`]
+/// to re-calibrate against the live provider).
+fn default_rebuild(engine: &Engine) -> RebuildFn {
+    use crate::runtime::Executable;
+    let net = engine.net.clone();
+    let batch_size = engine.batch_size;
+    let mode = engine.mode();
+    Arc::new(move || {
+        let exe = Executable::native_mlp_with_mode(&net, batch_size, mode)?;
+        Engine::from_parts(net.clone(), exe)
+    })
+}
+
+/// Materialize the probe rows into one padded batch (ids are local to the
+/// probe — probe batches never touch the results map).
+fn probe_batch(rows: &[Vec<f32>], dim: usize, batch_size: usize) -> Batch {
+    let mut data = vec![0.0f32; batch_size * dim];
+    for (r, row) in rows.iter().enumerate() {
+        data[r * dim..(r + 1) * dim].copy_from_slice(row);
+    }
+    Batch {
+        ids: (0..rows.len() as u64).collect(),
+        data,
+        live: rows.len(),
+    }
+}
+
+/// Assemble a lane's canary probe set.  Supplied golden rows/labels are
+/// validated against the engine shape; with none supplied, deterministic
+/// rows are generated and labels self-captured from the engine at build
+/// time (zero false positives on a drift-free engine by construction).
+/// Returns `None` (canaries off for this lane) on any mismatch.
+fn build_probe(
+    engine: &Engine,
+    supplied: Option<(Vec<Vec<f32>>, Vec<usize>)>,
+) -> Option<ProbeSet> {
+    match supplied {
+        Some((rows, labels)) => {
+            if rows.is_empty()
+                || rows.len() != labels.len()
+                || rows.len() > engine.batch_size
+                || rows.iter().any(|r| r.len() != engine.dim)
+                || labels.iter().any(|&l| l >= engine.n_classes)
+            {
+                return None;
+            }
+            let batch = probe_batch(&rows, engine.dim, engine.batch_size);
+            Some(ProbeSet { batch, labels })
+        }
+        None => {
+            let n = engine.batch_size.min(8).max(1);
+            let mut rng = Rng::new(0x5AC_CA9A);
+            let rows: Vec<Vec<f32>> = (0..n)
+                .map(|_| {
+                    (0..engine.dim)
+                        .map(|_| rng.uniform_in(-1.0, 1.0) as f32)
+                        .collect()
+                })
+                .collect();
+            let batch = probe_batch(&rows, engine.dim, engine.batch_size);
+            let labels = engine
+                .run_batch(&batch)
+                .ok()?
+                .iter()
+                .map(|&(_, pred, _)| pred)
+                .collect();
+            Some(ProbeSet { batch, labels })
+        }
+    }
+}
+
+/// Resolve a set of queue-shed request ids as failed with a bounded
+/// `shed:` error, so waiters terminate immediately.
+fn resolve_shed(shared: &Arc<Shared>, li: usize, shed: &[u64], deadline: Duration) {
+    if shed.is_empty() {
+        return;
+    }
+    let lane = &shared.lanes[li];
+    shared
+        .health
+        .shed_deadline
+        .fetch_add(shed.len() as u64, Ordering::Relaxed);
+    let mut res = lane.results.lock().unwrap();
+    for &id in shed {
+        res.failed.insert(
+            id,
+            format!("shed: deadline {deadline:?} exceeded before execution"),
+        );
+    }
+    drop(res);
+    lane.results_cv.notify_all();
+}
+
 /// Hand one materialized batch to the worker pool.  Must be called with
 /// the originating lane's queue lock held (see the flusher comment).
 fn enqueue_batch(shared: &Arc<Shared>, pool: &PoolHandle, li: usize, batch: Batch) {
     StageCounters::bump(&shared.stages.batches_enqueued);
     *shared.inflight.lock().unwrap() += 1;
-    let shared = Arc::clone(shared);
+    dispatch_batch(Arc::clone(shared), pool.clone(), li, batch, Instant::now(), 0);
+}
+
+/// Enqueue one execution attempt of a batch.  `attempt` 0 is the first
+/// execution; 1 is the single supervised requeue after a worker died
+/// mid-delivery.  The inflight count is held across attempts and released
+/// exactly once, when the batch resolves.
+fn dispatch_batch(
+    shared: Arc<Shared>,
+    pool: PoolHandle,
+    li: usize,
+    batch: Batch,
+    enqueued: Instant,
+    attempt: u8,
+) {
+    let job_pool = pool.clone();
     pool.execute(move || {
-        let lane = &shared.lanes[li];
-        let t0 = Instant::now();
-        // Contain panics from the engine (e.g. a poisoned artifact): the
-        // inflight decrement below must always run, or drain() would hang
-        // forever, and the batch's waiters must still be resolved.
-        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            lane.engine.run_batch(&batch)
-        }))
-        .unwrap_or_else(|p| {
-            let msg = p
-                .downcast_ref::<&str>()
-                .map(|s| s.to_string())
-                .or_else(|| p.downcast_ref::<String>().cloned())
-                .unwrap_or_else(|| "engine panicked".to_string());
-            Err(anyhow!("engine panicked: {msg}"))
-        });
-        match outcome {
-            Ok(rows) => {
-                StageCounters::bump(&shared.stages.batches_completed);
-                shared
-                    .stages
-                    .rows_delivered
-                    .fetch_add(batch.live as u64, std::sync::atomic::Ordering::Relaxed);
-                lane.metrics
-                    .lock()
-                    .unwrap()
-                    .record_batch(batch.live, t0.elapsed());
-                let _deliver = trace::span("router.deliver");
-                let mut res = lane.results.lock().unwrap();
-                for (id, pred, logits) in rows {
-                    if res.ready.insert(id, Response { id, pred, logits }).is_some() {
-                        shared
-                            .failures
-                            .lock()
-                            .unwrap()
-                            .push(format!("duplicate response id {id} on lane {li}"));
-                    }
-                }
-                drop(res);
-                lane.results_cv.notify_all();
-            }
-            Err(e) => {
-                StageCounters::bump(&shared.stages.batches_failed);
-                // resolve every request of the failed batch so waiters get
-                // the engine error immediately, not a timeout
-                let msg = format!("{e:#}");
-                let mut res = lane.results.lock().unwrap();
-                for &id in &batch.ids {
-                    res.failed.insert(id, msg.clone());
-                }
-                drop(res);
-                shared
-                    .failures
-                    .lock()
-                    .unwrap()
-                    .push(format!("lane {:?}: {msg}", lane.name));
-                lane.results_cv.notify_all();
-            }
-        }
+        // Supervision: engine panics are contained below, but if this
+        // worker dies anywhere *past* that containment (a poisoned lock,
+        // a delivery bug), the guard's Drop requeues the in-flight batch
+        // exactly once while the pool's sentinel respawns the worker; a
+        // second death resolves the batch as failed.  Normal completion
+        // disarms the guard.
+        let mut guard = RequeueGuard {
+            shared,
+            pool: job_pool,
+            li,
+            batch: Some(batch),
+            enqueued,
+            attempt,
+        };
+        run_and_deliver(
+            &guard.shared,
+            li,
+            guard.batch.as_ref().expect("guard holds the batch"),
+            enqueued,
+            attempt,
+        );
+        guard.batch = None; // disarm: resolved normally
+        let shared = &guard.shared;
         let mut n = shared.inflight.lock().unwrap();
         *n -= 1;
         if *n == 0 {
             shared.idle_cv.notify_all();
         }
     });
+}
+
+/// Worker-death supervision guard (see [`dispatch_batch`]).  All lock
+/// accesses are fallible: this runs during unwind, and a double panic
+/// would abort the process.
+struct RequeueGuard {
+    shared: Arc<Shared>,
+    pool: PoolHandle,
+    li: usize,
+    batch: Option<Batch>,
+    enqueued: Instant,
+    attempt: u8,
+}
+
+impl Drop for RequeueGuard {
+    fn drop(&mut self) {
+        let Some(batch) = self.batch.take() else { return };
+        // reached only while unwinding — normal completion disarmed us
+        if self.attempt == 0 {
+            self.shared.health.requeues.fetch_add(1, Ordering::SeqCst);
+            dispatch_batch(
+                Arc::clone(&self.shared),
+                self.pool.clone(),
+                self.li,
+                batch,
+                self.enqueued,
+                1,
+            );
+            return;
+        }
+        // second death on the same batch: resolve as failed and give up
+        let lane = &self.shared.lanes[self.li];
+        StageCounters::bump(&self.shared.stages.batches_failed);
+        if let Ok(mut res) = lane.results.lock() {
+            for &id in &batch.ids {
+                res.failed
+                    .insert(id, "worker died twice executing this batch".into());
+            }
+        }
+        lane.results_cv.notify_all();
+        if let Ok(mut fails) = self.shared.failures.lock() {
+            fails.push(format!(
+                "lane {:?}: worker died twice on one batch",
+                lane.name
+            ));
+        }
+        if let Ok(mut n) = self.shared.inflight.lock() {
+            *n -= 1;
+            if *n == 0 {
+                self.shared.idle_cv.notify_all();
+            }
+        }
+    }
+}
+
+/// Whether a batch failure came from a contained engine panic (the
+/// transient class eligible for in-place retry).
+fn is_panic_class(e: &anyhow::Error) -> bool {
+    e.to_string().contains("panicked")
+}
+
+/// One engine execution with panic containment.  Quarantined lanes are
+/// served by the scalar fallback when one exists; otherwise the (possibly
+/// degraded) live engine keeps serving until the rebuild swap.
+fn run_engine_once(lane: &Lane, batch: &Batch) -> Result<Vec<Answer>> {
+    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        if lane.use_fallback.load(Ordering::SeqCst) {
+            if let Some(fb) = &lane.fallback {
+                return fb.run_batch(batch);
+            }
+        }
+        // read lock: concurrent with other batches; a panic under a read
+        // guard does not poison the RwLock (only writers poison)
+        lane.engine.read().unwrap().run_batch(batch)
+    }))
+    .unwrap_or_else(|p| {
+        let msg = p
+            .downcast_ref::<&str>()
+            .map(|s| s.to_string())
+            .or_else(|| p.downcast_ref::<String>().cloned())
+            .unwrap_or_else(|| "engine panicked".to_string());
+        Err(anyhow!("engine panicked: {msg}"))
+    })
+}
+
+/// The worker job body: deadline shed, engine execution with transient
+/// retry, result delivery, and the canary cadence.
+fn run_and_deliver(shared: &Arc<Shared>, li: usize, batch: &Batch, enqueued: Instant, attempt: u8) {
+    let lane = &shared.lanes[li];
+    let cfg = &shared.cfg;
+    // Deadline-aware shedding at execution time: every request in this
+    // batch was submitted before the batch materialized, so each has
+    // waited at least `enqueued.elapsed()` — if the batch itself is past
+    // deadline, every one of its requests is too.  Reject with bounded
+    // latency instead of computing answers nobody is waiting for.
+    if let Some(dl) = cfg.deadline {
+        if enqueued.elapsed() > dl {
+            shared
+                .health
+                .shed_deadline
+                .fetch_add(batch.live as u64, Ordering::Relaxed);
+            StageCounters::bump(&shared.stages.batches_failed);
+            let mut res = lane.results.lock().unwrap();
+            for &id in &batch.ids {
+                res.failed.insert(
+                    id,
+                    format!("shed: deadline {dl:?} exceeded before execution"),
+                );
+            }
+            drop(res);
+            lane.results_cv.notify_all();
+            return;
+        }
+    }
+    let t0 = Instant::now();
+    let mut outcome = run_engine_once(lane, batch);
+    // Transient (panic-class) failures get in-place retries under a
+    // jittered exponential backoff: injected `panicking_window` faults
+    // and real transient panics recover here; deterministic failures
+    // exhaust the retries and fall through to the failure path.
+    if cfg.retry_transient && attempt == 0 {
+        let mut backoff = cfg.retry_backoff.max(Duration::from_micros(50));
+        // deterministic jitter, seeded off the batch identity
+        let mut rng = Rng::new(0x5AC7_E772 ^ batch.ids.first().copied().unwrap_or(0));
+        let mut tries = 0u32;
+        while tries < MAX_TRANSIENT_RETRIES
+            && matches!(&outcome, Err(e) if is_panic_class(e))
+        {
+            shared.health.retries.fetch_add(1, Ordering::Relaxed);
+            let jitter = Duration::from_micros(rng.below(backoff.as_micros().max(1) as usize) as u64);
+            thread::sleep(backoff + jitter);
+            backoff = backoff.saturating_mul(2);
+            tries += 1;
+            outcome = run_engine_once(lane, batch);
+        }
+    }
+    match outcome {
+        Ok(rows) => {
+            StageCounters::bump(&shared.stages.batches_completed);
+            shared
+                .stages
+                .rows_delivered
+                .fetch_add(batch.live as u64, std::sync::atomic::Ordering::Relaxed);
+            lane.metrics
+                .lock()
+                .unwrap()
+                .record_batch(batch.live, t0.elapsed());
+            let _deliver = trace::span("router.deliver");
+            let mut res = lane.results.lock().unwrap();
+            for (id, pred, logits) in rows {
+                if res.ready.insert(id, Response { id, pred, logits }).is_some() {
+                    shared
+                        .failures
+                        .lock()
+                        .unwrap()
+                        .push(format!("duplicate response id {id} on lane {li}"));
+                }
+            }
+            drop(res);
+            lane.results_cv.notify_all();
+        }
+        Err(e) => {
+            StageCounters::bump(&shared.stages.batches_failed);
+            // resolve every request of the failed batch so waiters get
+            // the engine error immediately, not a timeout
+            let msg = format!("{e:#}");
+            let mut res = lane.results.lock().unwrap();
+            for &id in &batch.ids {
+                res.failed.insert(id, msg.clone());
+            }
+            drop(res);
+            shared
+                .failures
+                .lock()
+                .unwrap()
+                .push(format!("lane {:?}: {msg}", lane.name));
+            lane.results_cv.notify_all();
+        }
+    }
+    // canary cadence: drift detection observes failures too (a lane that
+    // can only fail must trip quarantine, not hide from it)
+    let done = lane.batches_done.fetch_add(1, Ordering::SeqCst) + 1;
+    if cfg.canary_every > 0 && done % cfg.canary_every == 0 {
+        run_canary(shared, li, done);
+    }
+}
+
+/// Thread the lane's golden probe rows through the live engine and feed
+/// the disagreement fraction to the health-state machine, escalating to
+/// quarantine + rebuild when the windowed verdict leaves the paper
+/// envelope.  Runs inline on a worker; the healthy-path cost is gated in
+/// `benches/hotpath.rs` (hot spot 11).
+fn run_canary(shared: &Arc<Shared>, li: usize, at_batch: u64) {
+    let lane = &shared.lanes[li];
+    let Some(probe) = &lane.probe else { return };
+    if lane.use_fallback.load(Ordering::SeqCst) {
+        return; // already quarantined and failed over
+    }
+    let _span = trace::span("router.canary");
+    let n = probe.labels.len();
+    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        lane.engine.read().unwrap().run_batch(&probe.batch)
+    }));
+    let disagree = match &outcome {
+        Ok(Ok(answers)) => answers
+            .iter()
+            .zip(&probe.labels)
+            .filter(|((_, pred, _), &want)| *pred != want)
+            .count(),
+        // an erroring or panicking engine disagrees with everything
+        _ => n,
+    };
+    shared.health.probes.fetch_add(n as u64, Ordering::Relaxed);
+    shared
+        .health
+        .probe_disagreements
+        .fetch_add(disagree as u64, Ordering::Relaxed);
+    let frac = disagree as f64 / n.max(1) as f64;
+    let (events, quarantined_now) = {
+        let mut h = lane.health.lock().unwrap();
+        let mut from = h.state();
+        let entered = h.observe(frac);
+        let mut events = Vec::new();
+        let mut quarantined_now = false;
+        for to in entered {
+            match to {
+                HealthState::Degraded => {
+                    shared.health.to_degraded.fetch_add(1, Ordering::Relaxed);
+                }
+                HealthState::Quarantined => {
+                    shared.health.to_quarantined.fetch_add(1, Ordering::Relaxed);
+                    quarantined_now = true;
+                }
+                HealthState::Healthy => {
+                    shared.health.recovered.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            events.push(HealthEvent {
+                lane: lane.name.clone(),
+                from,
+                to,
+                at_batch,
+            });
+            from = to;
+        }
+        (events, quarantined_now)
+    };
+    if !events.is_empty() {
+        shared.timeline.lock().unwrap().extend(events);
+    }
+    if quarantined_now {
+        quarantine_and_rebuild(shared, li, at_batch);
+    }
+}
+
+/// The quarantine path: fail traffic over to the scalar fallback, rebuild
+/// the engine from the current provider (re-calibration under drift),
+/// verify the rebuilt engine against the golden probes, and swap it in
+/// under the write lock — which drains in-flight readers first.  Any
+/// rebuild failure leaves the lane quarantined on the fallback and is
+/// surfaced via [`Router::failures`].
+fn quarantine_and_rebuild(shared: &Arc<Shared>, li: usize, at_batch: u64) {
+    let lane = &shared.lanes[li];
+    let _span = trace::span("router.rebuild");
+    if lane.fallback.is_some() {
+        lane.use_fallback.store(true, Ordering::SeqCst);
+    }
+    let Some(rebuild) = &lane.rebuild else { return };
+    let t0 = Instant::now();
+    let built = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| rebuild()))
+        .unwrap_or_else(|_| Err(anyhow!("rebuild panicked")));
+    shared.health.rebuilds.fetch_add(1, Ordering::Relaxed);
+    shared
+        .health
+        .rebuild_ns_total
+        .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    let new_engine = match built {
+        Ok(e) if e.dim == lane.dim && e.batch_size == lane.batch_size => {
+            match shared.cfg.kernel_threads {
+                Some(n) => e.with_par_threads(n),
+                None => e,
+            }
+        }
+        Ok(e) => {
+            shared.failures.lock().unwrap().push(format!(
+                "lane {:?}: rebuilt engine shape mismatch (dim {}, batch {})",
+                lane.name, e.dim, e.batch_size
+            ));
+            return;
+        }
+        Err(e) => {
+            shared
+                .failures
+                .lock()
+                .unwrap()
+                .push(format!("lane {:?}: rebuild failed: {e:#}", lane.name));
+            return;
+        }
+    };
+    // Post-rebuild verification: a rebuild that did not fix the drift
+    // must not return to service.
+    if let Some(probe) = &lane.probe {
+        let n = probe.labels.len().max(1);
+        match new_engine.run_batch(&probe.batch) {
+            Ok(answers) => {
+                let bad = answers
+                    .iter()
+                    .zip(&probe.labels)
+                    .filter(|((_, pred, _), &want)| *pred != want)
+                    .count();
+                if bad as f64 / n as f64 > shared.cfg.health.degrade_above {
+                    shared.failures.lock().unwrap().push(format!(
+                        "lane {:?}: rebuilt engine still outside envelope ({bad}/{n} probes disagree)",
+                        lane.name
+                    ));
+                    return;
+                }
+            }
+            Err(e) => {
+                shared.failures.lock().unwrap().push(format!(
+                    "lane {:?}: rebuilt engine failed probes: {e:#}",
+                    lane.name
+                ));
+                return;
+            }
+        }
+    }
+    // swap in: the write lock waits out in-flight readers (drain), then
+    // traffic leaves the fallback
+    *lane.engine.write().unwrap() = new_engine;
+    lane.use_fallback.store(false, Ordering::SeqCst);
+    if lane.health.lock().unwrap().rebuilt() {
+        shared.health.recovered.fetch_add(1, Ordering::Relaxed);
+        shared.timeline.lock().unwrap().push(HealthEvent {
+            lane: lane.name.clone(),
+            from: HealthState::Quarantined,
+            to: HealthState::Healthy,
+            at_batch,
+        });
+    }
 }
 
 #[cfg(test)]
@@ -668,7 +1341,7 @@ mod tests {
             workers,
             max_wait: Duration::from_millis(2),
             flush_tick: Duration::from_micros(200),
-            kernel_threads: None,
+            ..RouterConfig::default()
         }
     }
 
@@ -956,5 +1629,210 @@ mod tests {
         assert_eq!(router.task_index("beta"), Some(1));
         assert_eq!(router.task_names(), vec!["alpha", "beta"]);
         assert!(router.workers() >= 1);
+    }
+
+    // ----- self-healing layer ------------------------------------------
+
+    #[test]
+    fn canary_has_zero_false_positives_on_nominal_engines() {
+        let cfg = RouterConfig {
+            canary_every: 1, // probe after every batch
+            ..quick_cfg(2)
+        };
+        let router = Router::new(
+            cfg,
+            vec![
+                ("alpha".into(), synthetic_engine(11, &[3, 4, 2], 4).unwrap()),
+                ("beta".into(), synthetic_engine(12, &[2, 3, 3], 3).unwrap()),
+            ],
+        );
+        let mut reqs = Vec::new();
+        for i in 0..40 {
+            let t = i % 2;
+            let dim = if t == 0 { 3 } else { 2 };
+            reqs.push(router.submit(t, vec![0.03 * i as f32; dim]).unwrap());
+        }
+        router.drain(Duration::from_secs(20)).unwrap();
+        for &req in &reqs {
+            assert!(router.try_take(req).unwrap().is_some());
+        }
+        let h = router.health_snapshot();
+        assert!(h.probes > 0, "canaries must have run");
+        assert_eq!(h.probe_disagreements, 0, "false positive on nominal engine");
+        assert_eq!(h.to_degraded, 0);
+        assert_eq!(h.to_quarantined, 0);
+        assert!(router.health_timeline().is_empty());
+        for (_, state) in router.health_states() {
+            assert_eq!(state, HealthState::Healthy);
+        }
+    }
+
+    #[test]
+    fn transient_panic_is_retried_and_answered() {
+        use crate::runtime::FaultyExec;
+        // batch ordinal 0 panics once; the in-place retry's re-run lands
+        // past the window and succeeds, so every request is answered and
+        // no failure is recorded
+        let engine = synthetic_engine(17, &[3, 4, 2], 4)
+            .unwrap()
+            .with_faults(Arc::new(FaultyExec::panicking_window(0, 1)));
+        let router = Router::new(quick_cfg(1), vec![("flaky".into(), engine)]);
+        let mut reqs = Vec::new();
+        for i in 0..4 {
+            reqs.push(router.submit(0, vec![0.1 * i as f32; 3]).unwrap());
+        }
+        router.drain(Duration::from_secs(10)).unwrap();
+        for &req in &reqs {
+            assert!(router.try_take(req).unwrap().is_some(), "lost to a transient panic");
+        }
+        let h = router.health_snapshot();
+        assert!(h.retries >= 1, "retry path never exercised");
+        assert!(router.failures().is_empty(), "{:?}", router.failures());
+    }
+
+    #[test]
+    fn admission_bound_sheds_overload_without_losing_accepted_work() {
+        use crate::runtime::FaultyExec;
+        let engine = synthetic_engine(19, &[3, 4, 2], 2)
+            .unwrap()
+            .with_faults(Arc::new(FaultyExec::slow(Duration::from_millis(20))));
+        let cfg = RouterConfig {
+            max_queue: Some(4),
+            ..quick_cfg(1)
+        };
+        let router = Router::new(cfg, vec![("jam".into(), engine)]);
+        let mut accepted = Vec::new();
+        let mut rejected = 0usize;
+        for i in 0..40 {
+            match router.submit(0, vec![0.02 * i as f32; 3]) {
+                Ok(req) => accepted.push(req),
+                Err(e) => {
+                    assert!(e.to_string().contains("admission queue full"), "{e}");
+                    rejected += 1;
+                }
+            }
+        }
+        assert!(rejected > 0, "storm never hit the admission bound");
+        assert!(!accepted.is_empty());
+        router.drain(Duration::from_secs(30)).unwrap();
+        for &req in &accepted {
+            assert!(
+                router.try_take(req).unwrap().is_some(),
+                "accepted request lost under shed pressure"
+            );
+        }
+        let h = router.health_snapshot();
+        assert_eq!(h.shed_queue as usize, rejected);
+    }
+
+    #[test]
+    fn deadline_sheds_only_overdue_requests() {
+        use crate::runtime::FaultyExec;
+        // one worker, a 300 ms engine stall, and a 150 ms deadline: the
+        // first request starts fresh (age ≈ 0) and completes; requests
+        // submitted during the stall exceed the deadline while queued
+        // behind it and must be shed, not executed
+        let engine = synthetic_engine(23, &[3, 4, 2], 1)
+            .unwrap()
+            .with_faults(Arc::new(FaultyExec::slow(Duration::from_millis(300))));
+        let cfg = RouterConfig {
+            deadline: Some(Duration::from_millis(150)),
+            ..quick_cfg(1)
+        };
+        let router = Router::new(cfg, vec![("slow".into(), engine)]);
+        let first = router.submit(0, vec![0.1, 0.2, 0.3]).unwrap();
+        thread::sleep(Duration::from_millis(50)); // first batch is now in flight
+        let late = router.submit(0, vec![0.4, 0.5, 0.6]).unwrap();
+        let r = router.wait(first, Duration::from_secs(10)).unwrap();
+        assert_eq!(r.id, first.id, "fresh request must not be shed");
+        let err = router.wait(late, Duration::from_secs(10)).unwrap_err();
+        assert!(err.to_string().contains("shed"), "expected a shed, got: {err}");
+        let h = router.health_snapshot();
+        assert!(h.shed_deadline >= 1, "shed counter not bumped");
+        // shedding is not an engine failure: drain stays clean
+        router.drain(Duration::from_secs(10)).unwrap();
+    }
+
+    #[test]
+    fn quarantine_rebuild_restores_health() {
+        use crate::runtime::FaultyExec;
+        let clean = synthetic_engine(29, &[3, 4, 2], 4).unwrap();
+        // golden probes: rows with labels captured from the clean engine
+        let rows: Vec<Vec<f32>> = (0..4)
+            .map(|i| vec![0.2 * i as f32 - 0.3, 0.1, -0.15 * i as f32])
+            .collect();
+        let batch = probe_batch(&rows, 3, 4);
+        let labels: Vec<usize> = clean
+            .run_batch(&batch)
+            .unwrap()
+            .iter()
+            .map(|&(_, pred, _)| pred)
+            .collect();
+        // the live engine fails every batch (canary probes error out →
+        // full disagreement → collapse verdict → quarantine)
+        let broken = clean
+            .clone()
+            .with_faults(Arc::new(FaultyExec::failing(0)));
+        let rebuilt = clean.clone();
+        let cfg = RouterConfig {
+            canary_every: 1,
+            retry_transient: false, // clean failures are not panic-class anyway
+            health: HealthConfig {
+                window: 1,
+                patience: 1,
+                ..HealthConfig::default()
+            },
+            ..quick_cfg(1)
+        };
+        let spec = LaneSpec::new("healme", broken)
+            .with_probe(rows, labels)
+            .with_rebuild(Arc::new(move || Ok(rebuilt.clone())));
+        let router = Router::with_specs(cfg, vec![spec]);
+        // first batch fails in the broken engine, which trips the canary,
+        // the collapse verdict, quarantine, rebuild, and recovery
+        let mut sacrificial = Vec::new();
+        for i in 0..4 {
+            sacrificial.push(router.submit(0, vec![0.05 * i as f32; 3]).unwrap());
+        }
+        let t0 = Instant::now();
+        loop {
+            let healthy_again = router.health_snapshot().recovered >= 1;
+            if healthy_again {
+                break;
+            }
+            assert!(
+                t0.elapsed() < Duration::from_secs(20),
+                "lane never recovered; timeline: {:?}",
+                router.health_timeline()
+            );
+            thread::sleep(Duration::from_millis(5));
+        }
+        // sacrificial requests were resolved (as failures), exactly once
+        for &req in &sacrificial {
+            assert!(router.try_take(req).unwrap_err().to_string().contains("failed"));
+        }
+        // the lane serves clean traffic again
+        let mut after = Vec::new();
+        for i in 0..4 {
+            after.push(router.submit(0, vec![0.07 * i as f32; 3]).unwrap());
+        }
+        for &req in &after {
+            router.wait(req, Duration::from_secs(10)).unwrap();
+        }
+        let h = router.health_snapshot();
+        assert_eq!(h.rebuilds, 1);
+        assert!(h.recovered >= 1);
+        assert_eq!(h.to_quarantined, 1);
+        let states = router.health_states();
+        assert_eq!(states[0].1, HealthState::Healthy);
+        // the timeline records the full escalation and the recovery
+        let seq: Vec<(HealthState, HealthState)> = router
+            .health_timeline()
+            .iter()
+            .map(|e| (e.from, e.to))
+            .collect();
+        assert!(seq.contains(&(HealthState::Healthy, HealthState::Degraded)));
+        assert!(seq.contains(&(HealthState::Degraded, HealthState::Quarantined)));
+        assert!(seq.contains(&(HealthState::Quarantined, HealthState::Healthy)));
     }
 }

@@ -17,8 +17,11 @@ use crate::util::json::Json;
 use crate::util::trace::TraceStats;
 
 /// Schema tag stamped on every metrics snapshot file.  v2 added the
-/// `kernel` block (batched-kernel dispatch + grid-cache counters).
-pub const METRICS_SCHEMA: &str = "sac-metrics/v2";
+/// `kernel` block (batched-kernel dispatch + grid-cache counters); v3
+/// added the `health` block (self-healing router: canary probes, health
+/// transitions, shed/retry/requeue counts, rebuild durations, worker
+/// respawns — DESIGN.md §11).
+pub const METRICS_SCHEMA: &str = "sac-metrics/v3";
 
 /// Sub-bucket resolution: each octave is split into `2^SUB_BITS` buckets.
 pub const SUB_BITS: u32 = 5;
@@ -335,6 +338,88 @@ impl KernelSnapshot {
     }
 }
 
+/// The `sac-metrics/v3` health block: per-lane health states plus every
+/// self-healing counter of one router (DESIGN.md §11).  Unlike the
+/// kernel block these are per-router, not process-wide.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct HealthSnapshot {
+    /// `(task, state)` per lane, in lane order; state is the stable
+    /// lowercase name (`healthy` / `degraded` / `quarantined`).
+    pub lanes: Vec<(String, String)>,
+    /// Canary probe rows threaded through live engines.
+    pub probes: u64,
+    /// Probe rows whose prediction disagreed with the golden label.
+    pub probe_disagreements: u64,
+    /// Transitions into `Degraded`.
+    pub to_degraded: u64,
+    /// Transitions into `Quarantined`.
+    pub to_quarantined: u64,
+    /// Transitions back to `Healthy` (self-recovery or rebuild).
+    pub recovered: u64,
+    /// Engine rebuild attempts from the quarantine path.
+    pub rebuilds: u64,
+    /// Total wall time spent in rebuild attempts.
+    pub rebuild_ns_total: u64,
+    /// Requests shed for exceeding their deadline before execution.
+    pub shed_deadline: u64,
+    /// Submits rejected by the bounded admission queue.
+    pub shed_queue: u64,
+    /// Batches requeued exactly once after a worker died mid-delivery.
+    pub requeues: u64,
+    /// In-place retries of transient (panic-class) batch failures.
+    pub retries: u64,
+    /// Worker threads respawned by the pool supervisor.
+    pub respawns: u64,
+}
+
+impl HealthSnapshot {
+    /// Canonical JSON form (alphabetical keys).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "lanes",
+                Json::Arr(
+                    self.lanes
+                        .iter()
+                        .map(|(task, state)| {
+                            Json::obj(vec![
+                                ("state", Json::Str(state.clone())),
+                                ("task", Json::Str(task.clone())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "probe_disagreements",
+                Json::Num(self.probe_disagreements as f64),
+            ),
+            ("probes", Json::Num(self.probes as f64)),
+            ("rebuild_ns_total", Json::Num(self.rebuild_ns_total as f64)),
+            ("rebuilds", Json::Num(self.rebuilds as f64)),
+            ("recovered", Json::Num(self.recovered as f64)),
+            ("requeues", Json::Num(self.requeues as f64)),
+            ("respawns", Json::Num(self.respawns as f64)),
+            ("retries", Json::Num(self.retries as f64)),
+            ("shed_deadline", Json::Num(self.shed_deadline as f64)),
+            ("shed_queue", Json::Num(self.shed_queue as f64)),
+            ("to_degraded", Json::Num(self.to_degraded as f64)),
+            ("to_quarantined", Json::Num(self.to_quarantined as f64)),
+        ])
+    }
+}
+
+/// Prometheus gauge encoding of a health-state name (0 = healthy,
+/// 1 = degraded, 2 = quarantined; unknown names read as quarantined so
+/// a label drift is loud, not silently healthy).
+fn health_state_gauge(state: &str) -> u64 {
+    match state {
+        "healthy" => 0,
+        "degraded" => 1,
+        _ => 2,
+    }
+}
+
 /// One self-contained metrics snapshot: a named router (or campaign
 /// stage), its stage counters, per-lane and aggregate `ServeMetrics`,
 /// the kernel counters, and the trace-sink stats at capture time.
@@ -352,6 +437,8 @@ pub struct MetricsSnapshot {
     pub kernel: KernelSnapshot,
     /// Trace sink state at capture time.
     pub trace: TraceStats,
+    /// Self-healing health block (lane states + recovery counters).
+    pub health: HealthSnapshot,
 }
 
 impl MetricsSnapshot {
@@ -359,6 +446,7 @@ impl MetricsSnapshot {
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("aggregate", self.aggregate.to_json()),
+            ("health", self.health.to_json()),
             ("kernel", self.kernel.to_json()),
             (
                 "lanes",
@@ -567,6 +655,143 @@ pub fn prometheus_exposition(snapshots: &[MetricsSnapshot]) -> String {
 
     let _ = writeln!(
         out,
+        "# HELP sac_health_state Lane health (0 = healthy, 1 = degraded, 2 = quarantined)."
+    );
+    let _ = writeln!(out, "# TYPE sac_health_state gauge");
+    for s in snapshots {
+        let r = prom_escape(&s.name);
+        for (task, state) in &s.health.lanes {
+            let t = prom_escape(task);
+            let _ = writeln!(
+                out,
+                "sac_health_state{{router=\"{r}\",task=\"{t}\"}} {}",
+                health_state_gauge(state)
+            );
+        }
+    }
+
+    let _ = writeln!(
+        out,
+        "# HELP sac_health_transitions_total Health-state transitions by destination state."
+    );
+    let _ = writeln!(out, "# TYPE sac_health_transitions_total counter");
+    for s in snapshots {
+        let r = prom_escape(&s.name);
+        let _ = writeln!(
+            out,
+            "sac_health_transitions_total{{router=\"{r}\",to=\"degraded\"}} {}",
+            s.health.to_degraded
+        );
+        let _ = writeln!(
+            out,
+            "sac_health_transitions_total{{router=\"{r}\",to=\"quarantined\"}} {}",
+            s.health.to_quarantined
+        );
+        let _ = writeln!(
+            out,
+            "sac_health_transitions_total{{router=\"{r}\",to=\"healthy\"}} {}",
+            s.health.recovered
+        );
+    }
+
+    let _ = writeln!(
+        out,
+        "# HELP sac_canary_probes_total Canary probe rows by outcome."
+    );
+    let _ = writeln!(out, "# TYPE sac_canary_probes_total counter");
+    for s in snapshots {
+        let r = prom_escape(&s.name);
+        let _ = writeln!(
+            out,
+            "sac_canary_probes_total{{router=\"{r}\",outcome=\"agree\"}} {}",
+            s.health.probes.saturating_sub(s.health.probe_disagreements)
+        );
+        let _ = writeln!(
+            out,
+            "sac_canary_probes_total{{router=\"{r}\",outcome=\"disagree\"}} {}",
+            s.health.probe_disagreements
+        );
+    }
+
+    let _ = writeln!(
+        out,
+        "# HELP sac_shed_total Requests shed by reason (deadline / bounded admission queue)."
+    );
+    let _ = writeln!(out, "# TYPE sac_shed_total counter");
+    for s in snapshots {
+        let r = prom_escape(&s.name);
+        let _ = writeln!(
+            out,
+            "sac_shed_total{{router=\"{r}\",reason=\"deadline\"}} {}",
+            s.health.shed_deadline
+        );
+        let _ = writeln!(
+            out,
+            "sac_shed_total{{router=\"{r}\",reason=\"queue_full\"}} {}",
+            s.health.shed_queue
+        );
+    }
+
+    let _ = writeln!(
+        out,
+        "# HELP sac_requeues_total Batches requeued after a worker died mid-delivery."
+    );
+    let _ = writeln!(out, "# TYPE sac_requeues_total counter");
+    for s in snapshots {
+        let r = prom_escape(&s.name);
+        let _ = writeln!(out, "sac_requeues_total{{router=\"{r}\"}} {}", s.health.requeues);
+    }
+
+    let _ = writeln!(
+        out,
+        "# HELP sac_retries_total In-place retries of transient batch failures."
+    );
+    let _ = writeln!(out, "# TYPE sac_retries_total counter");
+    for s in snapshots {
+        let r = prom_escape(&s.name);
+        let _ = writeln!(out, "sac_retries_total{{router=\"{r}\"}} {}", s.health.retries);
+    }
+
+    let _ = writeln!(
+        out,
+        "# HELP sac_rebuilds_total Engine rebuild attempts from the quarantine path."
+    );
+    let _ = writeln!(out, "# TYPE sac_rebuilds_total counter");
+    for s in snapshots {
+        let r = prom_escape(&s.name);
+        let _ = writeln!(out, "sac_rebuilds_total{{router=\"{r}\"}} {}", s.health.rebuilds);
+    }
+
+    let _ = writeln!(
+        out,
+        "# HELP sac_rebuild_seconds_total Wall time spent rebuilding quarantined engines."
+    );
+    let _ = writeln!(out, "# TYPE sac_rebuild_seconds_total counter");
+    for s in snapshots {
+        let r = prom_escape(&s.name);
+        let _ = writeln!(
+            out,
+            "sac_rebuild_seconds_total{{router=\"{r}\"}} {}",
+            ns_as_seconds(s.health.rebuild_ns_total)
+        );
+    }
+
+    let _ = writeln!(
+        out,
+        "# HELP sac_worker_respawns_total Worker threads respawned by the pool supervisor."
+    );
+    let _ = writeln!(out, "# TYPE sac_worker_respawns_total counter");
+    for s in snapshots {
+        let r = prom_escape(&s.name);
+        let _ = writeln!(
+            out,
+            "sac_worker_respawns_total{{router=\"{r}\"}} {}",
+            s.health.respawns
+        );
+    }
+
+    let _ = writeln!(
+        out,
         "# HELP sac_trace_recorded_total Spans recorded by the trace ring."
     );
     let _ = writeln!(out, "# TYPE sac_trace_recorded_total counter");
@@ -765,6 +990,47 @@ mod tests {
         let live = kernel_stats();
         assert!(live.parallel_batches + live.serial_batches + live.grid_cache_misses
             >= KernelSnapshot::default().grid_cache_misses);
+    }
+
+    #[test]
+    fn health_snapshot_json_is_canonical() {
+        let h = HealthSnapshot {
+            lanes: vec![
+                ("alpha".into(), "degraded".into()),
+                ("beta".into(), "healthy".into()),
+            ],
+            probes: 6,
+            probe_disagreements: 2,
+            to_degraded: 1,
+            to_quarantined: 1,
+            recovered: 1,
+            rebuilds: 1,
+            rebuild_ns_total: 2_097_152,
+            shed_deadline: 3,
+            shed_queue: 1,
+            requeues: 1,
+            retries: 1,
+            respawns: 1,
+        };
+        assert_eq!(
+            h.to_json().to_string(),
+            "{\"lanes\":[{\"state\":\"degraded\",\"task\":\"alpha\"},\
+             {\"state\":\"healthy\",\"task\":\"beta\"}],\
+             \"probe_disagreements\":2,\"probes\":6,\
+             \"rebuild_ns_total\":2097152,\"rebuilds\":1,\"recovered\":1,\
+             \"requeues\":1,\"respawns\":1,\"retries\":1,\
+             \"shed_deadline\":3,\"shed_queue\":1,\
+             \"to_degraded\":1,\"to_quarantined\":1}"
+        );
+        // an empty default serializes every counter as zero
+        let j = HealthSnapshot::default().to_json().to_string();
+        assert!(j.contains("\"lanes\":[]"));
+        assert!(j.contains("\"respawns\":0"));
+        // gauge encoding is stable, and unknown states read as worst
+        assert_eq!(health_state_gauge("healthy"), 0);
+        assert_eq!(health_state_gauge("degraded"), 1);
+        assert_eq!(health_state_gauge("quarantined"), 2);
+        assert_eq!(health_state_gauge("gibberish"), 2);
     }
 
     #[test]

@@ -35,7 +35,8 @@ use anyhow::{anyhow, Result};
 use crate::cells::multiplier::Multiplier;
 use crate::cells::HProvider;
 use crate::coordinator::{
-    synthetic_engine, Engine, MetricsSnapshot, Response, Router, RouterConfig,
+    synthetic_engine, Batch, Engine, HealthConfig, HealthEvent, HealthState, LaneSpec,
+    MetricsSnapshot, Response, Router, RouterConfig,
 };
 use crate::data::TrainedNet;
 use crate::device::MismatchModel;
@@ -68,6 +69,29 @@ pub const WORST_DEGRADATION_ENVELOPE: f64 = 0.40;
 /// Drain bound for the infrastructure campaign [s] — generous versus the
 /// ~ms of injected latency, so only a genuine liveness bug trips it.
 pub const DRAIN_BOUND_SECS: u64 = 30;
+
+/// Bound on the detect → quarantine → rebuild → healthy loop in the
+/// recovery campaign [s].
+pub const RECOVERY_BOUND_SECS: u64 = 60;
+
+/// Typed envelope-violation error.  The chaos/recovery CLI wraps its
+/// violation list in this so `main` can exit 1 for an envelope breach
+/// while every other error (IO, parse, invalid plan) exits 2.
+#[derive(Clone, Debug)]
+pub struct EnvelopeViolation(pub Vec<String>);
+
+impl std::fmt::Display for EnvelopeViolation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} envelope violation(s): {}",
+            self.0.len(),
+            self.0.join("; ")
+        )
+    }
+}
+
+impl std::error::Error for EnvelopeViolation {}
 
 /// Drain bound for the analog campaign [s] (many lanes, table-backed).
 const ANALOG_DRAIN_SECS: u64 = 120;
@@ -651,6 +675,508 @@ pub fn run_chaos_with_metrics(
             infra,
         },
         snapshots,
+    ))
+}
+
+// ---------------------------------------------------------------------------
+// Recovery campaign: detect → quarantine → rebuild → healthy
+// ---------------------------------------------------------------------------
+
+/// The self-healing recovery campaign result (`sac chaos --recover`).
+///
+/// Canonical fields are booleans plus one agreement number, each a
+/// deterministic function of the plan: health transitions are driven by
+/// canary verdicts on fixed probe rows through deterministic engines, the
+/// storm invariants are scheduling-independent, and the shed scenario
+/// leaves hundreds of milliseconds of margin around every timing edge.
+/// The timeline and counters *are* scheduling-dependent and are exported
+/// only through [`RecoveryReport::health_json`] — the diagnostic artifact
+/// the CI `chaos-recovery` job uploads when the campaign fails.
+#[derive(Clone, Debug)]
+pub struct RecoveryReport {
+    pub plan: FaultPlan,
+    /// the drifted lane left `Healthy` on a canary verdict
+    pub drift_detected: bool,
+    /// the drifted lane reached `Quarantined`
+    pub quarantined: bool,
+    /// the drifted lane returned to `Healthy` through an engine rebuild
+    pub rebuilt_healthy: bool,
+    /// detect → quarantine → rebuild → healthy within
+    /// [`RECOVERY_BOUND_SECS`]
+    pub recovered_in_bound: bool,
+    /// post-rebuild label agreement with the nominal lane ∈ [0, 1]
+    pub post_rebuild_agreement: f64,
+    /// the nominal lane never left `Healthy` (canary zero-false-positive)
+    pub no_false_positives: bool,
+    /// storm across all lanes: answered + failed == submitted, no strands
+    /// or double deliveries
+    pub resolved_exactly_once: bool,
+    /// the panic-window lane's batch was retried in place and no
+    /// panic-class failure leaked to a caller
+    pub transient_panic_retried: bool,
+    /// every shed request was past its deadline; nothing else was shed
+    pub sheds_only_overdue: bool,
+    /// the in-deadline request on the shedding router was answered
+    pub fresh_request_answered: bool,
+    // -- diagnostics (scheduling-dependent; excluded from `to_json`) --
+    pub timeline: Vec<HealthEvent>,
+    pub probes: u64,
+    pub probe_disagreements: u64,
+    pub rebuilds: u64,
+    pub retries: u64,
+    pub requeues: u64,
+    pub respawns: u64,
+    pub shed_deadline: u64,
+    pub recovery_ms: f64,
+}
+
+impl RecoveryReport {
+    /// Invariant breaches (empty = pass).
+    pub fn violations(&self) -> Vec<String> {
+        let mut v = Vec::new();
+        if !self.drift_detected {
+            v.push("recovery: canary never flagged the drifted lane".into());
+        }
+        if !self.quarantined {
+            v.push("recovery: drifted lane was never quarantined".into());
+        }
+        if !self.rebuilt_healthy {
+            v.push("recovery: quarantined lane never returned to healthy via rebuild".into());
+        }
+        if !self.recovered_in_bound {
+            v.push(format!(
+                "recovery: detect-to-rebuild loop exceeded the {RECOVERY_BOUND_SECS}s bound"
+            ));
+        }
+        let floor = 1.0 - MEAN_DEGRADATION_ENVELOPE;
+        if self.post_rebuild_agreement < floor {
+            v.push(format!(
+                "recovery: post-rebuild agreement {:.4} below envelope floor {:.2}",
+                self.post_rebuild_agreement, floor
+            ));
+        }
+        if !self.no_false_positives {
+            v.push("recovery: canary false positive on the nominal lane".into());
+        }
+        if !self.resolved_exactly_once {
+            v.push("recovery: storm requests not resolved exactly once".into());
+        }
+        if !self.transient_panic_retried {
+            v.push("recovery: transient engine panic was not retried to success".into());
+        }
+        if !self.sheds_only_overdue {
+            v.push("recovery: shedding hit a request that was not past its deadline".into());
+        }
+        if !self.fresh_request_answered {
+            v.push("recovery: in-deadline request on the shedding router went unanswered".into());
+        }
+        v
+    }
+
+    pub fn pass(&self) -> bool {
+        self.violations().is_empty()
+    }
+
+    /// Deterministic serialization — a pure function of the plan.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("plan", self.plan.to_json()),
+            (
+                "agreement_floor",
+                Json::Num(1.0 - MEAN_DEGRADATION_ENVELOPE),
+            ),
+            ("drift_detected", Json::Bool(self.drift_detected)),
+            ("quarantined", Json::Bool(self.quarantined)),
+            ("rebuilt_healthy", Json::Bool(self.rebuilt_healthy)),
+            ("recovered_in_bound", Json::Bool(self.recovered_in_bound)),
+            (
+                "post_rebuild_agreement",
+                Json::Num(self.post_rebuild_agreement),
+            ),
+            ("no_false_positives", Json::Bool(self.no_false_positives)),
+            (
+                "resolved_exactly_once",
+                Json::Bool(self.resolved_exactly_once),
+            ),
+            (
+                "transient_panic_retried",
+                Json::Bool(self.transient_panic_retried),
+            ),
+            ("sheds_only_overdue", Json::Bool(self.sheds_only_overdue)),
+            (
+                "fresh_request_answered",
+                Json::Bool(self.fresh_request_answered),
+            ),
+            (
+                "violations",
+                Json::Arr(self.violations().into_iter().map(Json::Str).collect()),
+            ),
+            ("pass", Json::Bool(self.pass())),
+        ])
+    }
+
+    pub fn canonical_json(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    /// The health-timeline diagnostic artifact (CI uploads this on
+    /// failure): every state transition plus the supervision counters.
+    /// Scheduling-dependent — not part of the replay contract.
+    pub fn health_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "timeline",
+                Json::Arr(self.timeline.iter().map(|e| e.to_json()).collect()),
+            ),
+            ("probes", Json::Num(self.probes as f64)),
+            (
+                "probe_disagreements",
+                Json::Num(self.probe_disagreements as f64),
+            ),
+            ("rebuilds", Json::Num(self.rebuilds as f64)),
+            ("retries", Json::Num(self.retries as f64)),
+            ("requeues", Json::Num(self.requeues as f64)),
+            ("respawns", Json::Num(self.respawns as f64)),
+            ("shed_deadline", Json::Num(self.shed_deadline as f64)),
+            ("recovery_ms", Json::Num(self.recovery_ms)),
+            ("report", self.to_json()),
+        ])
+    }
+}
+
+/// High-margin canary rows: lightly-noised scaled prototypes.  Any
+/// correctly calibrated engine classifies these perfectly — the chaos
+/// net's logit margins dwarf in-envelope analog perturbation — so the
+/// golden probes produce zero false positives on healthy lanes and a
+/// rebuilt engine re-enters `Healthy` without flapping.
+pub fn recovery_probe_rows(seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed).fork(0xCA9A);
+    (0..CHAOS_BATCH)
+        .map(|r| {
+            let p = &PROTOS[r % PROTOS.len()];
+            p.iter()
+                .map(|&pi| (0.75 * pi + rng.uniform_in(-0.05, 0.05)) as f32)
+                .collect()
+        })
+        .collect()
+}
+
+/// Zero-padded one-shot batch over `rows` in the compiled engine shape
+/// (used to label probes through the nominal engine's circuit path).
+fn manual_batch(rows: &[Vec<f32>], dim: usize, batch_size: usize) -> Batch {
+    let mut data = vec![0.0f32; batch_size * dim];
+    for (r, row) in rows.iter().enumerate() {
+        data[r * dim..r * dim + dim].copy_from_slice(row);
+    }
+    Batch {
+        ids: (0..rows.len() as u64).collect(),
+        data,
+        live: rows.len(),
+    }
+}
+
+/// Run the recovery campaign: replay the plan's drift step against a lane
+/// whose calibration has gone stale, and assert the self-healing loop
+/// end to end — canary detection, quarantine, grid-cache invalidation +
+/// rebuild at the current operating point, exactly-once delivery under a
+/// storm with a transient panic, and deadline shedding that only hits
+/// past-deadline requests.
+pub fn run_recovery(plan: &FaultPlan, cfg: &ChaosConfig) -> Result<RecoveryReport> {
+    Ok(run_recovery_with_metrics(plan, cfg)?.0)
+}
+
+/// [`run_recovery`] plus the recovery router's telemetry snapshot
+/// (includes the `sac-metrics/v3` health block).
+pub fn run_recovery_with_metrics(
+    plan: &FaultPlan,
+    cfg: &ChaosConfig,
+) -> Result<(RecoveryReport, MetricsSnapshot)> {
+    let _span = crate::util::trace::span("chaos.recovery");
+    let t0 = Instant::now();
+    let grid = chaos_grid();
+    let net = chaos_net();
+    let act = net.activation_kind()?;
+    let (node, regime) = (&CMOS180, Regime::WeakInversion);
+
+    let (dkind, from_c, to_c_plan, steps) = plan
+        .drift()
+        .unwrap_or((DriftKind::Step, NOMINAL_T_C, NOMINAL_T_C + 33.0, 2));
+    let to_c = *temperature_schedule(dkind, from_c, to_c_plan, steps)
+        .last()
+        .expect("temperature schedule is never empty");
+
+    // Nominal lane: surrogate and multiplier both calibrated at the
+    // pre-drift temperature — a healthy chip.
+    let nominal_table = TableModel::calibrate(node, regime, from_c);
+    let mult = Multiplier::calibrate(&nominal_table, net.splines, net.c);
+    let nominal_kernel = BatchKernel::with_multiplier(
+        Box::new(nominal_table.clone()),
+        mult.clone(),
+        act,
+        net.splines,
+        net.c,
+        &grid,
+    );
+    let nominal = engine_with_kernel(&net, nominal_kernel)?;
+
+    // Drifted lane: the physics have stepped to `to_c` but the multiplier
+    // calibration is stale, mirror mismatch is amplified past the plan's
+    // sigma, and a heavy stuck-cell burst kills a large slice of the
+    // multiplier grid.  Far outside the paper envelope by construction —
+    // the canary must trip.
+    let mut rng = Rng::new(plan.seed).fork(0x4EC0);
+    let mm = MismatchModel::new(node);
+    let sigma = (plan.sigma_scale() * 3.0).max(3.0);
+    let gains = mm.sample_mirror_gains(regime, to_c, GAIN_BRANCHES, sigma, &mut rng);
+    let drifted_provider: Box<dyn HProvider + Send + Sync> = Box::new(MismatchedProvider::new(
+        Box::new(TableModel::calibrate(node, regime, to_c)),
+        gains,
+    ));
+    let mut drifted_kernel = BatchKernel::with_multiplier(
+        drifted_provider,
+        mult.clone(),
+        act,
+        net.splines,
+        net.c,
+        &grid,
+    );
+    // floor the stuck fraction at half the grid: the drifted lane must be
+    // unambiguously outside the envelope so detection is deterministic
+    let (stuck_frac, stuck_value) = plan.stuck().unwrap_or((0.5, 0.0));
+    drifted_kernel.inject_stuck_cells(&mut rng, stuck_frac.clamp(0.5, 1.0), stuck_value);
+    let drifted = engine_with_kernel(&net, drifted_kernel)?;
+
+    // Transient-panic lane: nominal physics; the first executed batch
+    // panics exactly once, so the retry path must answer it.
+    let flaky = nominal
+        .clone()
+        .with_faults(Arc::new(FaultyExec::panicking_window(0, 1)));
+
+    // Golden probes, labelled through the nominal engine's circuit path.
+    let probe_rows = recovery_probe_rows(plan.seed);
+    let probe_labels: Vec<usize> = nominal
+        .run_batch(&manual_batch(&probe_rows, nominal.dim, nominal.batch_size))?
+        .iter()
+        .map(|&(_, pred, _)| pred)
+        .collect();
+
+    // Rebuild recipe for the quarantined lane: drop every cached grid
+    // sampled from this corner (they are keyed to the stale calibration),
+    // then re-derive the whole kernel from the *current* operating point —
+    // fresh surrogate at `to_c`, fresh multiplier calibration, clean grid.
+    let rebuild_net = net.clone();
+    let stale_fragment = format!("table/{}/{}/", node.name, regime);
+    let rebuild: crate::coordinator::RebuildFn = Arc::new(move || {
+        crate::nn::batch::grid_cache_invalidate(&stale_fragment);
+        let table = TableModel::calibrate(node, regime, to_c);
+        let fresh_mult = Multiplier::calibrate(&table, rebuild_net.splines, rebuild_net.c);
+        let kernel = BatchKernel::with_multiplier(
+            Box::new(table),
+            fresh_mult,
+            act,
+            rebuild_net.splines,
+            rebuild_net.c,
+            &grid,
+        );
+        engine_with_kernel(&rebuild_net, kernel)
+    });
+
+    let router = Router::with_specs(
+        RouterConfig {
+            workers: cfg.workers.max(2),
+            kernel_threads: cfg.kernel_threads,
+            canary_every: 1,
+            health: HealthConfig {
+                window: 1,
+                patience: 1,
+                ..HealthConfig::default()
+            },
+            ..RouterConfig::default()
+        },
+        vec![
+            LaneSpec::new("nominal", nominal.clone())
+                .with_probe(probe_rows.clone(), probe_labels.clone()),
+            LaneSpec::new("drifted", drifted)
+                .with_probe(probe_rows.clone(), probe_labels.clone())
+                .with_rebuild(rebuild),
+            LaneSpec::new("flaky", flaky).with_probe(probe_rows, probe_labels),
+        ],
+    );
+    let feats = eval_features(plan.seed, cfg.eval_rows.max(CHAOS_BATCH));
+
+    // Phase A — detection and recovery.  Two batches through the drifted
+    // lane: the first canary verdict either collapses straight through
+    // Healthy → Degraded → Quarantined or parks the lane in Degraded for
+    // the second verdict to escalate (patience = 1).  The rebuild runs
+    // inline on the quarantining worker, so it completes before the
+    // drain returns; canaries after the swap probe the rebuilt engine
+    // and stay clean, so exactly one rebuild ever happens.
+    for f in feats.iter().take(2 * CHAOS_BATCH) {
+        router.submit(1, f.clone())?;
+    }
+    router.drain(Duration::from_secs(RECOVERY_BOUND_SECS))?;
+    let recovery_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let recovered_in_bound = t0.elapsed() <= Duration::from_secs(RECOVERY_BOUND_SECS);
+
+    // Phase B — post-rebuild agreement: the same eval rows through the
+    // nominal lane and the rebuilt lane.
+    let mut nom_ids = Vec::with_capacity(feats.len());
+    let mut reb_ids = Vec::with_capacity(feats.len());
+    for f in &feats {
+        nom_ids.push(router.submit(0, f.clone())?);
+        reb_ids.push(router.submit(1, f.clone())?);
+    }
+    router.drain(Duration::from_secs(DRAIN_BOUND_SECS))?;
+    let mut agree = 0usize;
+    for (&n, &r) in nom_ids.iter().zip(&reb_ids) {
+        let nom = router
+            .try_take(n)?
+            .ok_or_else(|| anyhow!("recovery: nominal request stranded after drain"))?;
+        let reb = router
+            .try_take(r)?
+            .ok_or_else(|| anyhow!("recovery: rebuilt-lane request stranded after drain"))?;
+        if nom.pred == reb.pred {
+            agree += 1;
+        }
+    }
+    let post_rebuild_agreement = agree as f64 / nom_ids.len().max(1) as f64;
+
+    // Phase C — submit storm across all three lanes (the flaky lane's
+    // first batch panics once and must be retried in place).
+    let (submitters, requests) = plan.storm().unwrap_or((4, 96));
+    let reqs: Vec<crate::coordinator::RequestId> = std::thread::scope(|s| {
+        let router = &router;
+        let feats = &feats;
+        let mut handles = Vec::with_capacity(submitters);
+        for t in 0..submitters {
+            let quota = requests / submitters + usize::from(t < requests % submitters);
+            handles.push(s.spawn(move || {
+                let mut mine = Vec::with_capacity(quota);
+                for i in 0..quota {
+                    let lane = (t + i) % 3;
+                    let row = feats[(t * 31 + i) % feats.len()].clone();
+                    if let Ok(id) = router.submit(lane, row) {
+                        mine.push(id);
+                    }
+                }
+                mine
+            }));
+        }
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("storm submitter panicked"))
+            .collect()
+    });
+    let submitted = reqs.len();
+    router.drain(Duration::from_secs(DRAIN_BOUND_SECS)).ok();
+    let (mut answered, mut failed, mut stranded, mut double_delivery) = (0, 0, 0, 0);
+    for &req in &reqs {
+        match router.try_take(req) {
+            Ok(Some(_)) => answered += 1,
+            Ok(None) => stranded += 1,
+            Err(_) => failed += 1,
+        }
+        if let Ok(Some(_)) = router.try_take(req) {
+            double_delivery += 1;
+        }
+    }
+    let resolved_exactly_once =
+        stranded == 0 && double_delivery == 0 && answered + failed == submitted;
+    let panic_leaked = router.failures().iter().any(|m| m.contains("panicked"));
+
+    let timeline = router.health_timeline();
+    let health = router.health_snapshot();
+    let states = router.health_states();
+    let snapshot = router.metrics_snapshot("chaos.recovery");
+    router.shutdown();
+
+    let lane_final = |name: &str| {
+        states
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, s)| *s)
+            .unwrap_or(HealthState::Healthy)
+    };
+    let drift_detected = timeline
+        .iter()
+        .any(|e| e.lane == "drifted" && e.from == HealthState::Healthy);
+    let quarantined = timeline
+        .iter()
+        .any(|e| e.lane == "drifted" && e.to == HealthState::Quarantined);
+    let rebuilt_healthy = timeline.iter().any(|e| {
+        e.lane == "drifted"
+            && e.from == HealthState::Quarantined
+            && e.to == HealthState::Healthy
+    }) && lane_final("drifted") == HealthState::Healthy;
+    let no_false_positives = !timeline.iter().any(|e| e.lane == "nominal")
+        && lane_final("nominal") == HealthState::Healthy;
+    let transient_panic_retried = health.retries >= 1 && !panic_leaked;
+
+    // Phase D — deadline shedding on a dedicated single-worker router: a
+    // slow engine holds the lane for 400 ms, so requests submitted behind
+    // the first batch are ~340 ms past enqueue when the worker reaches
+    // them — far beyond the 250 ms deadline — while the first batch
+    // enters execution at age ~0 and must be answered.
+    let slow = nominal
+        .clone()
+        .with_faults(Arc::new(FaultyExec::slow(Duration::from_millis(400))));
+    let shed_router = Router::new(
+        RouterConfig {
+            workers: 1,
+            kernel_threads: cfg.kernel_threads,
+            deadline: Some(Duration::from_millis(250)),
+            ..RouterConfig::default()
+        },
+        vec![("shed".into(), slow)],
+    );
+    let first = shed_router.submit(0, feats[0].clone())?;
+    std::thread::sleep(Duration::from_millis(60));
+    let mut late = Vec::with_capacity(3);
+    for f in feats.iter().skip(1).take(3) {
+        late.push(shed_router.submit(0, f.clone())?);
+    }
+    let fresh_request_answered = shed_router.wait(first, Duration::from_secs(10)).is_ok();
+    shed_router.drain(Duration::from_secs(DRAIN_BOUND_SECS)).ok();
+    let mut sheds_only_overdue = fresh_request_answered;
+    let mut sheds_seen = 0u64;
+    for id in late {
+        match shed_router.try_take(id) {
+            Err(e) if e.to_string().contains("shed") => sheds_seen += 1,
+            _ => sheds_only_overdue = false,
+        }
+    }
+    let shed_health = shed_router.health_snapshot();
+    shed_router.shutdown();
+    // every shed the router recorded must correspond to an overdue
+    // request from the backlog above
+    if shed_health.shed_deadline != sheds_seen {
+        sheds_only_overdue = false;
+    }
+
+    Ok((
+        RecoveryReport {
+            plan: plan.clone(),
+            drift_detected,
+            quarantined,
+            rebuilt_healthy,
+            recovered_in_bound,
+            post_rebuild_agreement,
+            no_false_positives,
+            resolved_exactly_once,
+            transient_panic_retried,
+            sheds_only_overdue,
+            fresh_request_answered,
+            timeline,
+            probes: health.probes,
+            probe_disagreements: health.probe_disagreements,
+            rebuilds: health.rebuilds,
+            retries: health.retries,
+            requeues: health.requeues,
+            respawns: health.respawns,
+            shed_deadline: shed_health.shed_deadline,
+            recovery_ms,
+        },
+        snapshot,
     ))
 }
 

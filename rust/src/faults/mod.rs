@@ -19,12 +19,13 @@ pub mod drift;
 pub mod plan;
 
 pub use chaos::{
-    chaos_corners, chaos_grid, chaos_net, eval_features, run_chaos, run_chaos_with_metrics,
-    run_corner, run_corner_with_metrics, run_infra, run_infra_with_metrics, ChaosConfig,
-    ChaosReport, CornerReport, InfraReport, DRAIN_BOUND_SECS, MEAN_DEGRADATION_ENVELOPE,
-    WORST_DEGRADATION_ENVELOPE,
+    chaos_corners, chaos_grid, chaos_net, eval_features, recovery_probe_rows, run_chaos,
+    run_chaos_with_metrics, run_corner, run_corner_with_metrics, run_infra,
+    run_infra_with_metrics, run_recovery, run_recovery_with_metrics, ChaosConfig, ChaosReport,
+    CornerReport, EnvelopeViolation, InfraReport, RecoveryReport, DRAIN_BOUND_SECS,
+    MEAN_DEGRADATION_ENVELOPE, RECOVERY_BOUND_SECS, WORST_DEGRADATION_ENVELOPE,
 };
 pub use drift::{
     stage_for_progress, temperature_schedule, DriftingHProvider, MismatchedProvider,
 };
-pub use plan::{AnalogFault, DriftKind, FaultPlan, InfraFault};
+pub use plan::{AnalogFault, DriftKind, FaultPlan, InfraFault, PlanError};

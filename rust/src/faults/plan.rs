@@ -16,6 +16,35 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::util::json::{self, Json};
 
+/// Typed fault-plan validation error.  Carried inside `anyhow` so the
+/// CLI can distinguish a malformed plan (exit 2, like any IO/parse
+/// error) from an envelope violation (exit 1) by downcasting.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PlanError(pub String);
+
+impl std::fmt::Display for PlanError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "invalid fault plan: {}", self.0)
+    }
+}
+
+impl std::error::Error for PlanError {}
+
+fn plan_err<T>(msg: String) -> Result<T> {
+    Err(PlanError(msg).into())
+}
+
+/// Read a non-negative integer field, rejecting NaN / infinite /
+/// negative / fractional values *before* the f64 → integer cast (which
+/// would silently saturate them).
+fn plan_uint(j: &Json, key: &str) -> Result<u64> {
+    let v = j.get(key)?.as_f64()?;
+    if !v.is_finite() || v < 0.0 || v.fract() != 0.0 || v >= 9_007_199_254_740_992.0 {
+        return plan_err(format!("field {key:?} must be a non-negative integer, got {v}"));
+    }
+    Ok(v as u64)
+}
+
 /// Temperature drift trajectory shape (Sec. VI's temperature sweeps).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DriftKind {
@@ -117,7 +146,7 @@ impl AnalogFault {
                 kind: DriftKind::parse(j.get("drift")?.as_str()?)?,
                 from_c: j.get("from_c")?.as_f64()?,
                 to_c: j.get("to_c")?.as_f64()?,
-                steps: j.get("steps")?.as_usize()?,
+                steps: plan_uint(j, "steps")? as usize,
             }),
             "stuck_cells" => Ok(AnalogFault::StuckCells {
                 fraction: j.get("fraction")?.as_f64()?,
@@ -153,14 +182,14 @@ impl InfraFault {
     fn from_json(j: &Json) -> Result<InfraFault> {
         match j.get("kind")?.as_str()? {
             "engine_panic" => Ok(InfraFault::EnginePanic {
-                after_batches: j.get("after_batches")?.as_usize()? as u64,
+                after_batches: plan_uint(j, "after_batches")?,
             }),
             "slow_engine" => Ok(InfraFault::SlowEngine {
-                delay_us: j.get("delay_us")?.as_usize()? as u64,
+                delay_us: plan_uint(j, "delay_us")?,
             }),
             "submit_storm" => Ok(InfraFault::SubmitStorm {
-                submitters: j.get("submitters")?.as_usize()?,
-                requests: j.get("requests")?.as_usize()?,
+                submitters: plan_uint(j, "submitters")? as usize,
+                requests: plan_uint(j, "requests")? as usize,
             }),
             other => Err(anyhow!("unknown infra fault kind {other:?}")),
         }
@@ -223,8 +252,8 @@ impl FaultPlan {
     }
 
     pub fn from_json(j: &Json) -> Result<FaultPlan> {
-        Ok(FaultPlan {
-            seed: j.get("seed")?.as_usize()? as u64,
+        let plan = FaultPlan {
+            seed: plan_uint(j, "seed")?,
             analog: j
                 .get("analog")?
                 .as_arr()?
@@ -237,7 +266,80 @@ impl FaultPlan {
                 .iter()
                 .map(InfraFault::from_json)
                 .collect::<Result<_>>()?,
-        })
+        };
+        plan.validate()?;
+        Ok(plan)
+    }
+
+    /// Reject physically meaningless or replay-ambiguous plans with a
+    /// typed [`PlanError`].  Runs on every load/parse; callers building
+    /// plans programmatically can invoke it directly.
+    pub fn validate(&self) -> Result<()> {
+        let mut seen_analog = [0u32; 3];
+        for f in &self.analog {
+            match f {
+                AnalogFault::Mismatch { sigma_scale } => {
+                    seen_analog[0] += 1;
+                    if !sigma_scale.is_finite() || *sigma_scale < 0.0 {
+                        return plan_err(format!(
+                            "mismatch sigma_scale must be finite and >= 0, got {sigma_scale}"
+                        ));
+                    }
+                }
+                AnalogFault::TempDrift {
+                    from_c, to_c, steps, ..
+                } => {
+                    seen_analog[1] += 1;
+                    if !from_c.is_finite() || !to_c.is_finite() {
+                        return plan_err(format!(
+                            "temp_drift temperatures must be finite, got {from_c} -> {to_c}"
+                        ));
+                    }
+                    if *steps == 0 {
+                        return plan_err("temp_drift needs at least one step".into());
+                    }
+                }
+                AnalogFault::StuckCells { fraction, value } => {
+                    seen_analog[2] += 1;
+                    if !(0.0..=1.0).contains(fraction) {
+                        return plan_err(format!(
+                            "stuck_cells fraction must be in [0, 1], got {fraction}"
+                        ));
+                    }
+                    if !value.is_finite() {
+                        return plan_err(format!("stuck_cells value must be finite, got {value}"));
+                    }
+                }
+            }
+        }
+        // The accessors (`drift()`, `sigma_scale()`, …) read the *first*
+        // fault of each kind: duplicates would make the replayed schedule
+        // order-ambiguous, so an out-of-order/duplicated schedule is an
+        // error, not a silent pick.
+        if seen_analog.iter().any(|&n| n > 1) {
+            return plan_err(
+                "duplicate analog faults of the same kind make the schedule ambiguous".into(),
+            );
+        }
+        let mut seen_infra = [0u32; 3];
+        for f in &self.infra {
+            match f {
+                InfraFault::EnginePanic { .. } => seen_infra[0] += 1,
+                InfraFault::SlowEngine { .. } => seen_infra[1] += 1,
+                InfraFault::SubmitStorm { submitters, .. } => {
+                    seen_infra[2] += 1;
+                    if *submitters == 0 {
+                        return plan_err("submit_storm needs at least one submitter".into());
+                    }
+                }
+            }
+        }
+        if seen_infra.iter().any(|&n| n > 1) {
+            return plan_err(
+                "duplicate infra faults of the same kind make the schedule ambiguous".into(),
+            );
+        }
+        Ok(())
     }
 
     /// Parse from JSON text.
@@ -362,6 +464,61 @@ mod tests {
         )
         .is_err());
         assert!(DriftKind::parse("sawtooth").is_err());
+    }
+
+    #[test]
+    fn malformed_plans_are_rejected_with_a_typed_error() {
+        // NaN latency duration
+        let e = FaultPlan::parse(
+            r#"{"seed": 1, "analog": [], "infra": [{"kind": "slow_engine", "delay_us": NaN}]}"#,
+        );
+        assert!(e.is_err());
+        // negative latency duration
+        let e = FaultPlan::parse(
+            r#"{"seed": 1, "analog": [], "infra": [{"kind": "slow_engine", "delay_us": -5}]}"#,
+        )
+        .unwrap_err();
+        assert!(
+            e.downcast_ref::<PlanError>().is_some(),
+            "expected a typed PlanError, got: {e:#}"
+        );
+        // fractional batch ordinal
+        assert!(FaultPlan::parse(
+            r#"{"seed": 1, "analog": [], "infra": [{"kind": "engine_panic", "after_batches": 2.5}]}"#
+        )
+        .is_err());
+        // zero-step drift schedule
+        let e = FaultPlan::parse(
+            r#"{"seed": 1, "analog": [{"kind": "temp_drift", "drift": "ramp",
+                 "from_c": 27.0, "to_c": 60.0, "steps": 0}], "infra": []}"#,
+        )
+        .unwrap_err();
+        assert!(e.downcast_ref::<PlanError>().is_some(), "{e:#}");
+        // out-of-order (duplicated) drift schedule
+        let e = FaultPlan::parse(
+            r#"{"seed": 1, "analog": [
+                 {"kind": "temp_drift", "drift": "ramp", "from_c": 27.0, "to_c": 60.0, "steps": 2},
+                 {"kind": "temp_drift", "drift": "step", "from_c": 60.0, "to_c": 27.0, "steps": 2}
+               ], "infra": []}"#,
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("ambiguous"), "{e:#}");
+        // stuck fraction outside [0, 1]
+        assert!(FaultPlan::parse(
+            r#"{"seed": 1, "analog": [{"kind": "stuck_cells", "fraction": 1.5, "value": 0.0}], "infra": []}"#
+        )
+        .is_err());
+        // negative mismatch sigma via validate() on a built plan
+        let bad = FaultPlan {
+            seed: 1,
+            analog: vec![AnalogFault::Mismatch { sigma_scale: -1.0 }],
+            infra: vec![],
+        };
+        let e = bad.validate().unwrap_err();
+        assert!(e.downcast_ref::<PlanError>().is_some());
+        assert!(e.to_string().starts_with("invalid fault plan:"));
+        // the default plan is, of course, valid
+        FaultPlan::default_plan(7).validate().unwrap();
     }
 
     #[test]

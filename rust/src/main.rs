@@ -14,7 +14,7 @@
 // Same lint posture as the library crate (see src/lib.rs).
 #![allow(clippy::needless_range_loop, clippy::manual_clamp)]
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, ensure, Result};
@@ -26,7 +26,10 @@ use sac::coordinator::{
     metrics_file_json, synthetic_engine_with_mode, Engine, MetricsSnapshot, Router, RouterConfig,
 };
 use sac::data::Dataset;
-use sac::faults::{run_chaos, run_chaos_with_metrics, ChaosConfig, FaultPlan};
+use sac::faults::{
+    run_chaos, run_chaos_with_metrics, run_recovery, run_recovery_with_metrics, ChaosConfig,
+    EnvelopeViolation, FaultPlan,
+};
 use sac::pdk::{regime::Regime, ProcessNode};
 use sac::repro::{self, ReproOpts};
 use sac::runtime::{default_artifacts_dir, ExecMode, Runtime};
@@ -40,15 +43,17 @@ sac — shape-based analog computing framework (TCSI 2022 reproduction)
 USAGE:
   sac repro <id|all> [--out results] [--limit N] [--threads N] [--mc-trials N]
   sac serve <task> [--artifacts DIR] [--requests N] [--workers N] [--engine scalar|batched]
-                   [--threads N] [--metrics-out FILE]
+                   [--threads N] [--deadline-ms MS] [--max-queue N] [--canary-every B]
+                   [--metrics-out FILE]
   sac bench-serve [--tasks K] [--workers N] [--submitters N] [--requests N] [--batch B]
-                  [--engine scalar|batched] [--threads N] [--metrics-out FILE]
+                  [--engine scalar|batched] [--threads N] [--deadline-ms MS] [--max-queue N]
+                  [--canary-every B] [--metrics-out FILE]
   sac metrics [--tasks K] [--requests N] [--workers N] [--batch B] [--seed S]
               [--format prom|json|both] [--out FILE]
   sac characterize <cell> [--node NAME] [--regime WI|MI|SI] [--temp C] [--out results]
   sac mc <cell> [--node NAME] [--trials N]
   sac chaos [--plan FILE | --seed S] [--trials N] [--workers N] [--threads N] [--out results]
-            [--check] [--metrics-out FILE]
+            [--check] [--recover] [--metrics-out FILE]
   sac info [--artifacts DIR]
 
 engines: batched (default; columnar lookup-grid engine) | scalar (per-row GMP solves)
@@ -57,6 +62,11 @@ env: SAC_MC_TRIALS / SAC_MC_SEED override the mc campaign defaults (flags win)
      results are bit-identical at any thread count
      SAC_TRACE=1 enables span tracing (SAC_TRACE_CAPACITY sizes the ring);
      --metrics-out / sac metrics emit Prometheus + canonical JSON telemetry
+serving resilience (DESIGN.md §11): --deadline-ms sheds requests still unexecuted
+     past their deadline, --max-queue bounds the admission queue, --canary-every B
+     probes each lane's health every B batches and quarantines + rebuilds on drift
+chaos exit codes: 0 pass | 1 envelope/invariant violation | 2 IO, parse or plan error;
+     --recover replays the self-healing loop (detect, quarantine, rebuild, shed)
 
 ids: fig1 fig2a fig3 fig4 fig5 fig7 fig8 fig10 fig12 fig13 fig15
      table1 table2 table3 table4 table5 | all
@@ -73,7 +83,18 @@ fn main() {
     sac::util::trace::init_from_env();
     if let Err(e) = dispatch(&argv) {
         eprintln!("error: {e:#}");
-        std::process::exit(1);
+        // exit-code contract for `sac chaos`: envelope / invariant
+        // violations exit 1; IO, parse and invalid-plan errors exit 2
+        let code = if argv[0] == "chaos" {
+            if e.downcast_ref::<EnvelopeViolation>().is_some() {
+                1
+            } else {
+                2
+            }
+        } else {
+            1
+        };
+        std::process::exit(code);
     }
 }
 
@@ -87,8 +108,22 @@ fn kernel_threads_arg(args: &Args) -> Result<Option<usize>> {
     }
 }
 
+/// Self-healing knobs shared by `serve` and `bench-serve`
+/// (`--deadline-ms`, `--max-queue`, `--canary-every`).
+fn resilience_args(args: &Args, mut cfg: RouterConfig) -> Result<RouterConfig> {
+    if args.get("deadline-ms").is_some() {
+        let ms = args.get_usize("deadline-ms", 0)?.max(1) as u64;
+        cfg.deadline = Some(Duration::from_millis(ms));
+    }
+    if args.get("max-queue").is_some() {
+        cfg.max_queue = Some(args.get_usize("max-queue", 0)?.max(1));
+    }
+    cfg.canary_every = args.get_usize("canary-every", 0)? as u64;
+    Ok(cfg)
+}
+
 fn dispatch(argv: &[String]) -> Result<()> {
-    let args = Args::parse(argv, &["verbose", "check"])?;
+    let args = Args::parse(argv, &["verbose", "check", "recover"])?;
     match args.command.as_str() {
         "repro" => cmd_repro(&args),
         "serve" => cmd_serve(&args),
@@ -160,37 +195,62 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     let ds = Dataset::load_sacd(&artifacts.join(format!("{task}_test.bin")))?;
     let n = n_req.min(ds.n);
-    let router = Router::new(
+    let cfg = resilience_args(
+        args,
         RouterConfig {
             workers,
             kernel_threads,
             ..RouterConfig::default()
         },
-        vec![(task.to_string(), engine)],
-    );
+    )?;
+    let resilient =
+        cfg.deadline.is_some() || cfg.max_queue.is_some() || cfg.canary_every > 0;
+    let router = Router::new(cfg, vec![(task.to_string(), engine)]);
     let t0 = Instant::now();
     let mut reqs = Vec::with_capacity(n);
+    let mut rejected = 0usize;
     for i in 0..n {
-        reqs.push(router.submit(0, ds.row(i).to_vec())?);
+        match router.submit(0, ds.row(i).to_vec()) {
+            Ok(id) => reqs.push((i, id)),
+            // bounded admission queue: overload rejections are expected
+            Err(e) if e.to_string().contains("shed") => rejected += 1,
+            Err(e) => return Err(e),
+        }
     }
     router.drain(Duration::from_secs(600))?;
     let wall = t0.elapsed().as_secs_f64();
-    let mut correct = 0;
-    for (i, req) in reqs.iter().enumerate() {
-        let r = router
-            .try_take(*req)?
-            .ok_or_else(|| anyhow!("request {i} unanswered"))?;
-        if r.pred == ds.y[i] as usize {
-            correct += 1;
+    let (mut correct, mut answered, mut shed) = (0usize, 0usize, 0usize);
+    for &(i, req) in &reqs {
+        match router.try_take(req) {
+            Ok(Some(r)) => {
+                answered += 1;
+                if r.pred == ds.y[i] as usize {
+                    correct += 1;
+                }
+            }
+            Ok(None) => bail!("request {i} unanswered"),
+            Err(e) if e.to_string().contains("shed") => shed += 1,
+            Err(e) => return Err(e),
         }
     }
     println!(
         "accuracy {}/{} = {:.1}%  |  {}",
         correct,
-        n,
-        correct as f64 / n as f64 * 100.0,
+        answered,
+        correct as f64 / answered.max(1) as f64 * 100.0,
         router.metrics(0).report()
     );
+    if resilient {
+        let h = router.health_snapshot();
+        println!(
+            "  resilience: {} admitted, {rejected} rejected, {shed} shed past deadline; \
+             lane health {}, {} retries, {} requeues",
+            reqs.len(),
+            router.health_states().first().map(|(_, s)| s.name()).unwrap_or("healthy"),
+            h.retries,
+            h.requeues
+        );
+    }
     println!(
         "end-to-end: {:.2}s wall = {:.0} req/s through the router",
         wall,
@@ -243,30 +303,43 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
             ))
         })
         .collect::<Result<Vec<_>>>()?;
-    let router = Router::new(
+    let cfg = resilience_args(
+        args,
         RouterConfig {
             workers,
             kernel_threads,
             ..RouterConfig::default()
         },
-        engines,
-    );
+    )?;
+    let resilient =
+        cfg.deadline.is_some() || cfg.max_queue.is_some() || cfg.canary_every > 0;
+    let router = Router::new(cfg, engines);
     let t0 = Instant::now();
-    std::thread::scope(|scope| {
+    let admitted: usize = std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(submitters);
         for s in 0..submitters {
             let router = &router;
-            scope.spawn(move || {
+            handles.push(scope.spawn(move || {
                 let mut rng = Rng::new(900 + s as u64);
                 let per = requests / submitters
                     + usize::from(s < requests % submitters);
+                let mut ok = 0usize;
                 for k in 0..per {
                     let task = (s + k) % tasks;
                     let feats: Vec<f32> =
                         (0..DIM).map(|_| rng.uniform_in(-1.0, 1.0) as f32).collect();
-                    router.submit(task, feats).expect("submit");
+                    // with --max-queue, overload rejections are expected
+                    if router.submit(task, feats).is_ok() {
+                        ok += 1;
+                    }
                 }
-            });
+                ok
+            }));
         }
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("submitter thread panicked"))
+            .sum()
     });
     router.drain(Duration::from_secs(600))?;
     let wall = t0.elapsed().as_secs_f64();
@@ -279,11 +352,20 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
         write_metrics_file(path, &[router.metrics_snapshot("bench-serve")])?;
     }
     let agg = router.aggregate_metrics();
-    ensure!(
-        agg.total_requests() == requests,
-        "answered {} of {requests} requests",
-        agg.total_requests()
-    );
+    if resilient {
+        let h = router.health_snapshot();
+        println!(
+            "  resilience: {admitted}/{requests} admitted, {} shed past deadline, \
+             {} rejected at admission, {} canary probes ({} disagreed), {} retries",
+            h.shed_deadline, h.shed_queue, h.probes, h.probe_disagreements, h.retries
+        );
+    } else {
+        ensure!(
+            agg.total_requests() == requests,
+            "answered {} of {requests} requests",
+            agg.total_requests()
+        );
+    }
     println!("  aggregate: {}", agg.report());
     println!(
         "end-to-end: {requests} requests in {wall:.2}s = {:.0} req/s",
@@ -432,6 +514,9 @@ fn cmd_chaos(args: &Args) -> Result<()> {
         cfg.trials,
         cfg.workers
     );
+    if args.has("recover") {
+        return cmd_chaos_recover(args, &plan, &cfg, &out);
+    }
     let t0 = Instant::now();
     let (report, snapshots) = run_chaos_with_metrics(&plan, &cfg)?;
     let wall = t0.elapsed().as_secs_f64();
@@ -471,9 +556,68 @@ fn cmd_chaos(args: &Args) -> Result<()> {
         for v in &violations {
             eprintln!("VIOLATION: {v}");
         }
-        bail!("{} chaos violation(s)", violations.len());
+        return Err(EnvelopeViolation(violations).into());
     }
     println!("chaos pass in {wall:.1}s");
+    Ok(())
+}
+
+/// `sac chaos --recover`: replay the plan through the self-healing
+/// router and enforce the recovery invariants end to end — canary drift
+/// detection, quarantine, grid-cache invalidation + rebuild at the
+/// current operating point, exactly-once delivery under a storm with a
+/// transient panic, and deadline shedding that only hits past-deadline
+/// requests (DESIGN.md §11).
+fn cmd_chaos_recover(args: &Args, plan: &FaultPlan, cfg: &ChaosConfig, out: &Path) -> Result<()> {
+    let t0 = Instant::now();
+    let (report, snapshot) = run_recovery_with_metrics(plan, cfg)?;
+    let wall = t0.elapsed().as_secs_f64();
+    if let Some(path) = args.get("metrics-out") {
+        write_metrics_file(path, std::slice::from_ref(&snapshot))?;
+    }
+    println!(
+        "  recovery: detected {}, quarantined {}, rebuilt-healthy {}, \
+         post-rebuild agreement {:.4} ({:.0} ms, {} rebuild(s))",
+        report.drift_detected,
+        report.quarantined,
+        report.rebuilt_healthy,
+        report.post_rebuild_agreement,
+        report.recovery_ms,
+        report.rebuilds
+    );
+    println!(
+        "  storm: exactly-once {}, transient panic retried {} ({} retries); \
+         shed: only-overdue {}, in-deadline answered {}",
+        report.resolved_exactly_once,
+        report.transient_panic_retried,
+        report.retries,
+        report.sheds_only_overdue,
+        report.fresh_request_answered
+    );
+    if args.has("check") {
+        let replay = run_recovery(plan, cfg)?;
+        ensure!(
+            replay.canonical_json() == report.canonical_json(),
+            "recovery replay of seed {} diverged from the first run — determinism contract broken",
+            plan.seed
+        );
+        println!("  replay check: bit-identical");
+    }
+    // health-timeline diagnostic lands before any violation bail so a
+    // failing campaign leaves its artifact behind (CI uploads it)
+    let health_path = out.join("chaos_health.json");
+    std::fs::write(&health_path, report.health_json().to_string())?;
+    let report_path = out.join("chaos_recovery.json");
+    std::fs::write(&report_path, report.canonical_json())?;
+    println!("wrote {} and {}", report_path.display(), health_path.display());
+    let violations = report.violations();
+    if !violations.is_empty() {
+        for v in &violations {
+            eprintln!("VIOLATION: {v}");
+        }
+        return Err(EnvelopeViolation(violations).into());
+    }
+    println!("recovery pass in {wall:.1}s");
     Ok(())
 }
 

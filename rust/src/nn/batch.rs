@@ -303,12 +303,16 @@ pub struct GridCacheStats {
     pub misses: u64,
     /// Grid pairs currently held by the cache.
     pub entries: usize,
+    /// Entries evicted by targeted invalidation
+    /// ([`grid_cache_invalidate`] — quarantine/rebuild path).
+    pub invalidations: u64,
 }
 
 static GRID_CACHE: Mutex<Option<HashMap<String, (Arc<MulGrid>, Arc<ActGrid>)>>> =
     Mutex::new(None);
 static GRID_CACHE_HITS: AtomicU64 = AtomicU64::new(0);
 static GRID_CACHE_MISSES: AtomicU64 = AtomicU64::new(0);
+static GRID_CACHE_INVALIDATIONS: AtomicU64 = AtomicU64::new(0);
 
 /// Current grid-cache counters.
 pub fn grid_cache_stats() -> GridCacheStats {
@@ -321,6 +325,7 @@ pub fn grid_cache_stats() -> GridCacheStats {
         hits: GRID_CACHE_HITS.load(Ordering::Relaxed),
         misses: GRID_CACHE_MISSES.load(Ordering::Relaxed),
         entries,
+        invalidations: GRID_CACHE_INVALIDATIONS.load(Ordering::Relaxed),
     }
 }
 
@@ -331,6 +336,23 @@ pub fn grid_cache_clear() {
     if let Some(m) = GRID_CACHE.lock().unwrap().as_mut() {
         m.clear();
     }
+}
+
+/// Evict every cached grid pair whose key contains `fragment`, returning
+/// the number evicted.  The self-healing router's quarantine path calls
+/// this with the stale backend's [`HProvider::cache_key`] before
+/// re-calibrating, so the rebuilt kernel samples fresh grids from the
+/// *current* provider instead of resurrecting drifted tables.  Live
+/// kernels keep their `Arc`s — only future constructions see the
+/// eviction.  An empty `fragment` matches (and evicts) everything.
+pub fn grid_cache_invalidate(fragment: &str) -> usize {
+    let mut g = GRID_CACHE.lock().unwrap();
+    let Some(map) = g.as_mut() else { return 0 };
+    let before = map.len();
+    map.retain(|k, _| !k.contains(fragment));
+    let evicted = before - map.len();
+    GRID_CACHE_INVALIDATIONS.fetch_add(evicted as u64, Ordering::Relaxed);
+    evicted
 }
 
 /// Fetch-or-build the grid pair for one kernel.  Cache key =
@@ -1053,6 +1075,36 @@ mod tests {
         let c = BatchKernel::for_net(Box::new(Algorithmic::relu()), &net, &cfg).unwrap();
         assert!(c.shares_grids_with(&a), "cache copy must remain pristine");
         assert_eq!(c.forward_net(&net, &x, 2), pristine);
+    }
+
+    #[test]
+    fn targeted_invalidation_forces_a_fresh_build() {
+        let net = toy_net();
+        // unique GridConfig → unique cache key, disjoint from every other
+        // test touching the process-wide cache
+        let cfg = GridConfig {
+            proto_range: 6.0,
+            proto_density: 739,
+            act_range: 8.0,
+            act_density: 101,
+        };
+        let a = BatchKernel::for_net(Box::new(Algorithmic::relu()), &net, &cfg).unwrap();
+        let b = BatchKernel::for_net(Box::new(Algorithmic::relu()), &net, &cfg).unwrap();
+        assert!(a.shares_grids_with(&b));
+        // the cache key embeds the exact GridConfig bits — evict by the
+        // density fragment unique to this test
+        let before = grid_cache_stats();
+        let evicted = grid_cache_invalidate("pd=739");
+        assert_eq!(evicted, 1, "exactly this test's entry is evicted");
+        let after = grid_cache_stats();
+        // (no entry-count assertion: sibling tests insert concurrently)
+        assert_eq!(after.invalidations, before.invalidations + 1);
+        // live kernels are unaffected; the next construction re-samples
+        let c = BatchKernel::for_net(Box::new(Algorithmic::relu()), &net, &cfg).unwrap();
+        assert!(a.shares_grids_with(&b), "live kernels keep their grids");
+        assert!(!c.shares_grids_with(&a), "rebuild must sample fresh grids");
+        // a fragment matching nothing evicts nothing
+        assert_eq!(grid_cache_invalidate("no-such-key-fragment"), 0);
     }
 
     #[test]

@@ -33,6 +33,9 @@ pub struct FaultyExec {
     delay: Option<Duration>,
     /// panic on batch ordinals `>= k` (0 = every batch panics)
     panic_after: Option<u64>,
+    /// upper bound on the panic window: ordinals `>= u` run clean again
+    /// (`None` = panic forever once triggered)
+    panic_until: Option<u64>,
     /// return an error on batch ordinals `>= k`
     fail_after: Option<u64>,
     /// batches started so far (shared across executable clones)
@@ -52,6 +55,18 @@ impl FaultyExec {
     pub fn panicking(after: u64) -> FaultyExec {
         FaultyExec {
             panic_after: Some(after),
+            ..FaultyExec::default()
+        }
+    }
+
+    /// Panic on batch ordinals in `[after, after + count)` only — a
+    /// *transient* panic window.  The self-healing router's retry path is
+    /// exercised with this trigger: the retry's re-run lands past the
+    /// window and succeeds.
+    pub fn panicking_window(after: u64, count: u64) -> FaultyExec {
+        FaultyExec {
+            panic_after: Some(after),
+            panic_until: Some(after.saturating_add(count)),
             ..FaultyExec::default()
         }
     }
@@ -83,7 +98,7 @@ impl FaultyExec {
             std::thread::sleep(d);
         }
         if let Some(k) = self.panic_after {
-            if n >= k {
+            if n >= k && self.panic_until.is_none_or(|u| n < u) {
                 panic!("fault injection: engine panic on batch {n} (trigger: after {k})");
             }
         }
@@ -124,6 +139,21 @@ mod tests {
         let f = FaultyExec::panicking(0);
         let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f.before_run()));
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn panic_window_is_transient() {
+        let f = FaultyExec::panicking_window(2, 2);
+        // ordinals 0,1 clean — 2,3 panic — 4.. clean again
+        assert!(f.before_run().is_ok());
+        assert!(f.before_run().is_ok());
+        for _ in 0..2 {
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f.before_run()));
+            assert!(r.is_err(), "ordinal inside the window must panic");
+        }
+        assert!(f.before_run().is_ok(), "past the window runs clean");
+        assert!(f.before_run().is_ok());
+        assert_eq!(f.calls(), 6);
     }
 
     #[test]

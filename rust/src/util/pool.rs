@@ -30,7 +30,7 @@
 //! caller participation in `run_scoped`) make that cycle impossible.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 
@@ -220,6 +220,12 @@ struct PoolInner {
     state: Mutex<PoolState>,
     cv: Condvar,
     shutdown: AtomicBool,
+    /// Workers respawned by the supervisor after a panic killed one.
+    respawns: AtomicU64,
+    /// Join handles of respawned workers (drained by `Drop`; a
+    /// replacement can itself die and push another handle, so the drop
+    /// loop drains until empty).
+    respawned: Mutex<Vec<thread::JoinHandle<()>>>,
 }
 
 /// A persistent pool of worker threads executing boxed jobs from a shared
@@ -238,7 +244,9 @@ pub struct PoolHandle {
 }
 
 impl WorkerPool {
-    /// Spawn `nthreads` named workers (`sac-worker-N`).
+    /// Spawn `nthreads` named workers (`sac-worker-N`), each supervised:
+    /// a worker killed by a panicking job is detected and replaced (see
+    /// [`RespawnSentinel`]).
     pub fn new(nthreads: usize) -> WorkerPool {
         let inner = Arc::new(PoolInner {
             state: Mutex::new(PoolState {
@@ -247,13 +255,15 @@ impl WorkerPool {
             }),
             cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
+            respawns: AtomicU64::new(0),
+            respawned: Mutex::new(Vec::new()),
         });
         let handles = (0..nthreads.max(1))
             .map(|i| {
                 let inner = Arc::clone(&inner);
                 thread::Builder::new()
                     .name(format!("sac-worker-{i}"))
-                    .spawn(move || worker_loop(&inner))
+                    .spawn(move || supervised_worker(inner))
                     .expect("spawn worker thread")
             })
             .collect();
@@ -280,6 +290,13 @@ impl WorkerPool {
     /// Number of worker threads.
     pub fn workers(&self) -> usize {
         self.handles.len()
+    }
+
+    /// Workers respawned by the supervisor after a panicking job killed
+    /// one.  The pool's capacity is invariant under panics: every death
+    /// is matched by a replacement (until shutdown).
+    pub fn respawns(&self) -> u64 {
+        self.inner.respawns.load(Ordering::SeqCst)
     }
 
     /// Run `f(s)` for every shard `s in 0..shards`, spread across the
@@ -370,12 +387,66 @@ impl Drop for WorkerPool {
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
+        // Respawned workers join last — and a replacement dying mid-drain
+        // spawns another replacement, so loop until the list stays empty.
+        loop {
+            let batch: Vec<thread::JoinHandle<()>> = match self.inner.respawned.lock() {
+                Ok(mut v) => v.drain(..).collect(),
+                Err(_) => return,
+            };
+            if batch.is_empty() {
+                return;
+            }
+            self.inner.cv.notify_all();
+            for h in batch {
+                let _ = h.join();
+            }
+        }
     }
 }
 
 enum Work {
     Queued(Job),
     Scoped(ScopedRef),
+}
+
+/// Supervision guard living on every worker's stack.  If the worker
+/// unwinds (a queued job panicked), the guard's `Drop` runs during the
+/// unwind and spawns a replacement, so pool capacity survives any panic
+/// storm.  Requeue semantics stay with the job's owner: the router
+/// catches engine panics itself and retries the in-flight batch exactly
+/// once, so the supervisor never re-runs user code (no double execution).
+struct RespawnSentinel {
+    inner: Arc<PoolInner>,
+}
+
+impl Drop for RespawnSentinel {
+    fn drop(&mut self) {
+        if !thread::panicking() {
+            return; // normal shutdown exit
+        }
+        let n = self.inner.respawns.fetch_add(1, Ordering::SeqCst) + 1;
+        let inner = Arc::clone(&self.inner);
+        // Everything here is `if let`: a second panic during unwind would
+        // abort the process, so no unwraps on this path.
+        if let Ok(h) = thread::Builder::new()
+            .name(format!("sac-worker-r{n}"))
+            .spawn(move || supervised_worker(inner))
+        {
+            if let Ok(mut v) = self.inner.respawned.lock() {
+                v.push(h);
+            }
+        }
+    }
+}
+
+/// Worker entry point: installs the supervision sentinel, then drains the
+/// pool until shutdown.
+fn supervised_worker(inner: Arc<PoolInner>) {
+    let _sentinel = RespawnSentinel {
+        inner: Arc::clone(&inner),
+    };
+    worker_loop(&inner);
 }
 
 fn worker_loop(inner: &PoolInner) {
@@ -405,13 +476,13 @@ fn worker_loop(inner: &PoolInner) {
             }
         };
         match work {
-            // A panicking job must not kill the worker: the pool would
-            // silently lose capacity for the rest of the process.  The
-            // job's owner is responsible for reporting its own failures
-            // (the router converts panics to failure records itself).
-            Some(Work::Queued(j)) => {
-                let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(j));
-            }
+            // A panicking job unwinds the worker — deliberately.  The
+            // supervision sentinel on this thread's stack detects the
+            // unwind and spawns a replacement, so the pool never loses
+            // capacity; the job's owner is responsible for reporting its
+            // own failures (the router converts engine panics to failure
+            // records and retries transient ones itself).
+            Some(Work::Queued(j)) => j(),
             Some(Work::Scoped(sc)) => {
                 // SAFETY: `active` was incremented under the lock above,
                 // so the publishing caller is still waiting on us.
@@ -491,6 +562,40 @@ mod tests {
         pool.execute(move || d.store(true, Ordering::SeqCst));
         drop(pool);
         assert!(done.load(Ordering::SeqCst), "worker died with the panic");
+    }
+
+    #[test]
+    fn worker_pool_respawns_dead_workers() {
+        let pool = WorkerPool::new(1);
+        pool.execute(|| panic!("worker down"));
+        // wait for the supervisor to notice the death and replace the worker
+        let t0 = std::time::Instant::now();
+        while pool.respawns() == 0 && t0.elapsed() < std::time::Duration::from_secs(10) {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert_eq!(pool.respawns(), 1, "supervisor never respawned the worker");
+        // the replacement drains subsequent work
+        let done = Arc::new(AtomicBool::new(false));
+        let d = Arc::clone(&done);
+        pool.execute(move || d.store(true, Ordering::SeqCst));
+        drop(pool);
+        assert!(done.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn respawned_workers_are_themselves_supervised() {
+        // a panic storm kills the original worker and two replacements;
+        // each death is matched by a respawn and the final replacement
+        // still drains the queue (Drop's loop-join covers the chain)
+        let pool = WorkerPool::new(1);
+        for _ in 0..3 {
+            pool.execute(|| panic!("again"));
+        }
+        let done = Arc::new(AtomicBool::new(false));
+        let d = Arc::clone(&done);
+        pool.execute(move || d.store(true, Ordering::SeqCst));
+        drop(pool);
+        assert!(done.load(Ordering::SeqCst), "queue stranded by panic storm");
     }
 
     #[test]

@@ -258,6 +258,7 @@ fn router_concurrent_serving_exactly_once_with_golden_outputs() {
             max_wait: Duration::from_millis(2),
             flush_tick: Duration::from_micros(200),
             kernel_threads: None,
+            ..RouterConfig::default()
         },
         vec![
             ("alpha".into(), toy_engine(&nets[0], 4)),
@@ -349,6 +350,7 @@ fn router_deadline_flush_answers_tail_requests() {
             max_wait: Duration::from_millis(1),
             flush_tick: Duration::from_micros(200),
             kernel_threads: None,
+            ..RouterConfig::default()
         },
         vec![("tail".into(), toy_engine(&net, 8))],
     );
@@ -574,6 +576,7 @@ fn batched_router_serving_matches_scalar_golden() {
             max_wait: Duration::from_millis(2),
             flush_tick: Duration::from_micros(200),
             kernel_threads: None,
+            ..RouterConfig::default()
         },
         vec![
             ("balpha".into(), mk_engine(&nets[0], 4)),
@@ -675,6 +678,7 @@ fn router_submit_after_shutdown_is_rejected() {
             max_wait: Duration::from_millis(2),
             flush_tick: Duration::from_micros(200),
             kernel_threads: None,
+            ..RouterConfig::default()
         },
         vec![("shut".into(), toy_engine(&net, 8))],
     );
@@ -703,6 +707,7 @@ fn router_zero_pending_flush_is_noop() {
             max_wait: Duration::from_millis(2),
             flush_tick: Duration::from_micros(200),
             kernel_threads: None,
+            ..RouterConfig::default()
         },
         vec![("idle".into(), toy_engine(&net, 4))],
     );
@@ -744,6 +749,7 @@ fn router_per_task_metrics_aggregate_under_concurrency() {
             max_wait: Duration::from_millis(2),
             flush_tick: Duration::from_micros(200),
             kernel_threads: None,
+            ..RouterConfig::default()
         },
         engines,
     );

@@ -31,8 +31,8 @@ use std::sync::{Arc, Barrier, Mutex, MutexGuard};
 use std::time::Duration;
 
 use sac::coordinator::{
-    metrics_file_json, prometheus_exposition, synthetic_engine, KernelSnapshot, MetricsSnapshot,
-    Router, RouterConfig, ServeMetrics, StageSnapshot,
+    metrics_file_json, prometheus_exposition, synthetic_engine, HealthSnapshot, KernelSnapshot,
+    MetricsSnapshot, Router, RouterConfig, ServeMetrics, StageSnapshot,
 };
 use sac::faults::{
     chaos_corners, chaos_net, run_corner_with_metrics, run_infra_with_metrics, AnalogFault,
@@ -131,6 +131,25 @@ fn golden_snapshot() -> MetricsSnapshot {
             recorded: 5,
             dropped: 0,
         },
+        // rebuild_ns_total = 2^21 ns → exactly 0.002097152 s (dyadic)
+        health: HealthSnapshot {
+            lanes: vec![
+                ("alpha".into(), "degraded".into()),
+                ("beta".into(), "healthy".into()),
+            ],
+            probes: 6,
+            probe_disagreements: 2,
+            to_degraded: 1,
+            to_quarantined: 1,
+            recovered: 1,
+            rebuilds: 1,
+            rebuild_ns_total: 2_097_152,
+            shed_deadline: 3,
+            shed_queue: 1,
+            requeues: 1,
+            retries: 1,
+            respawns: 1,
+        },
     }
 }
 
@@ -172,7 +191,7 @@ fn golden_json_exposition_is_stable() {
     // the canonical text round-trips through the parser unchanged
     let back = json::parse(&text).unwrap();
     assert_eq!(back.to_string(), text);
-    assert_eq!(back.get("schema").unwrap().as_str().unwrap(), "sac-metrics/v2");
+    assert_eq!(back.get("schema").unwrap().as_str().unwrap(), "sac-metrics/v3");
     let snap_json = &back.get("snapshots").unwrap().as_arr().unwrap()[0];
     assert_eq!(snap_json.get("router").unwrap().as_str().unwrap(), "golden");
 }
@@ -659,7 +678,7 @@ fn bench_serve_metrics_out_counts_match_delivered_requests() {
     assert!(status.success());
 
     let j = json::parse_file(&out).unwrap();
-    assert_eq!(j.get("schema").unwrap().as_str().unwrap(), "sac-metrics/v2");
+    assert_eq!(j.get("schema").unwrap().as_str().unwrap(), "sac-metrics/v3");
     let snaps = j.get("snapshots").unwrap().as_arr().unwrap();
     assert_eq!(snaps.len(), 1);
     let snap = &snaps[0];
@@ -720,7 +739,7 @@ fn metrics_cli_emits_parseable_canonical_json() {
     );
     let stdout = String::from_utf8(output.stdout).unwrap();
     let j = json::parse(stdout.trim()).unwrap();
-    assert_eq!(j.get("schema").unwrap().as_str().unwrap(), "sac-metrics/v2");
+    assert_eq!(j.get("schema").unwrap().as_str().unwrap(), "sac-metrics/v3");
     let snap = &j.get("snapshots").unwrap().as_arr().unwrap()[0];
     assert_eq!(snap.get("router").unwrap().as_str().unwrap(), "metrics");
     let agg = snap.get("aggregate").unwrap();
@@ -752,6 +771,15 @@ fn metrics_cli_prometheus_exposition_is_wellformed() {
         "sac_stage_total",
         "sac_kernel_batches_total",
         "sac_grid_cache_total",
+        "sac_health_state",
+        "sac_health_transitions_total",
+        "sac_canary_probes_total",
+        "sac_shed_total",
+        "sac_requeues_total",
+        "sac_retries_total",
+        "sac_rebuilds_total",
+        "sac_rebuild_seconds_total",
+        "sac_worker_respawns_total",
         "sac_trace_recorded_total",
         "sac_trace_dropped_total",
         "sac_batch_latency_seconds",

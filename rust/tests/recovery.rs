@@ -1,0 +1,303 @@
+//! Self-healing serving suite (ISSUE 9 acceptance): canary drift
+//! detection, quarantine + rebuild, deadline shedding, and the chaos
+//! `--recover` CLI contract.
+//!
+//! What is pinned here:
+//!  * zero false positives — golden probes through nominal
+//!    paper-corner engines never leave `Healthy`, at any thread count;
+//!  * the full healing loop — a stale-calibration lane walks
+//!    Degraded → Quarantined → rebuild → Healthy within a bounded
+//!    number of batches, with exactly-once delivery throughout and
+//!    post-rebuild agreement back inside the paper envelope;
+//!  * determinism — identical-seed recovery replays serialize
+//!    bit-identically;
+//!  * CLI exit codes — envelope violations exit 1, IO/parse/plan
+//!    errors exit 2, a passing `--recover` run exits 0 and leaves the
+//!    health-timeline artifact behind.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use sac::cells::multiplier::Multiplier;
+use sac::coordinator::{Engine, HealthState, LaneSpec, Router, RouterConfig};
+use sac::faults::{
+    chaos_grid, chaos_net, eval_features, run_recovery, AnalogFault, ChaosConfig, DriftKind,
+    FaultPlan, MEAN_DEGRADATION_ENVELOPE,
+};
+use sac::nn::batch::BatchKernel;
+use sac::pdk::regime::Regime;
+use sac::pdk::{ProcessNode, CMOS180, FINFET7};
+use sac::runtime::Executable;
+use sac::sac::TableModel;
+
+fn small_cfg() -> ChaosConfig {
+    ChaosConfig {
+        trials: 1,
+        workers: 3,
+        eval_rows: 24,
+        kernel_threads: None,
+    }
+}
+
+/// A healthy engine: surrogate and multiplier calibrated at the same
+/// corner, served through the chaos prototype-detector net.
+fn corner_engine(node: &'static ProcessNode, regime: Regime, t_c: f64) -> Engine {
+    let net = chaos_net();
+    let act = net.activation_kind().unwrap();
+    let table = TableModel::calibrate(node, regime, t_c);
+    let mult = Multiplier::calibrate(&table, net.splines, net.c);
+    let kernel = BatchKernel::with_multiplier(
+        Box::new(table),
+        mult,
+        act,
+        net.splines,
+        net.c,
+        &chaos_grid(),
+    );
+    let exe = Executable::native_mlp_with_kernel(&net, 8, Arc::new(kernel)).unwrap();
+    Engine::from_parts(net, exe).unwrap()
+}
+
+#[test]
+fn canary_has_zero_false_positives_on_nominal_corner_engines() {
+    // Property (per corner × temperature × thread count): a lane whose
+    // engine matches its own calibration must never be flagged — no
+    // probe disagreement, no health transition, no fallback.
+    let corners: [(&'static ProcessNode, Regime, f64); 4] = [
+        (&CMOS180, Regime::WeakInversion, 27.0),
+        (&CMOS180, Regime::WeakInversion, 60.0),
+        (&FINFET7, Regime::ModerateInversion, 27.0),
+        (&FINFET7, Regime::ModerateInversion, 85.0),
+    ];
+    for threads in [1usize, 4] {
+        for &(node, regime, t_c) in &corners {
+            let engine = corner_engine(node, regime, t_c);
+            let router = Router::with_specs(
+                RouterConfig {
+                    workers: 2,
+                    kernel_threads: Some(threads),
+                    canary_every: 1,
+                    ..RouterConfig::default()
+                },
+                // probe labels self-captured from the lane's own engine
+                vec![LaneSpec::new("nominal", engine)],
+            );
+            for f in eval_features(7, 16) {
+                router.submit(0, f).unwrap();
+            }
+            router.drain(Duration::from_secs(60)).unwrap();
+            let h = router.health_snapshot();
+            let timeline = router.health_timeline();
+            let states = router.health_states();
+            router.shutdown();
+            assert!(
+                h.probes > 0,
+                "{}/{regime:?}@{t_c} t{threads}: canary never probed",
+                node.name
+            );
+            assert_eq!(
+                h.probe_disagreements, 0,
+                "{}/{regime:?}@{t_c} t{threads}: false-positive probe disagreement",
+                node.name
+            );
+            assert!(
+                timeline.is_empty(),
+                "{}/{regime:?}@{t_c} t{threads}: spurious transitions {timeline:?}",
+                node.name
+            );
+            assert_eq!(states[0].1, HealthState::Healthy);
+            assert_eq!(h.to_degraded, 0);
+            assert_eq!(h.to_quarantined, 0);
+        }
+    }
+}
+
+#[test]
+fn recovery_campaign_heals_quarantined_lane_within_bounded_batches() {
+    let plan = FaultPlan::default_plan(20260808);
+    let report = run_recovery(&plan, &small_cfg()).unwrap();
+
+    // the full walk, in order, on the drifted lane
+    let drifted: Vec<(HealthState, HealthState)> = report
+        .timeline
+        .iter()
+        .filter(|e| e.lane == "drifted")
+        .map(|e| (e.from, e.to))
+        .collect();
+    assert_eq!(
+        drifted,
+        vec![
+            (HealthState::Healthy, HealthState::Degraded),
+            (HealthState::Degraded, HealthState::Quarantined),
+            (HealthState::Quarantined, HealthState::Healthy),
+        ],
+        "unexpected healing walk: {:?}",
+        report.timeline
+    );
+    // detection is prompt: the whole walk happens within the first few
+    // completed batches on the lane
+    assert!(
+        report
+            .timeline
+            .iter()
+            .filter(|e| e.lane == "drifted")
+            .all(|e| e.at_batch <= 6),
+        "healing took too many batches: {:?}",
+        report.timeline
+    );
+    assert!(report.drift_detected);
+    assert!(report.quarantined);
+    assert!(report.rebuilt_healthy);
+    assert!(report.recovered_in_bound);
+    assert_eq!(report.rebuilds, 1, "expected exactly one rebuild");
+    assert!(
+        report.post_rebuild_agreement >= 1.0 - MEAN_DEGRADATION_ENVELOPE,
+        "post-rebuild agreement {} still outside the envelope",
+        report.post_rebuild_agreement
+    );
+    // liveness under the storm that rode along
+    assert!(report.resolved_exactly_once);
+    assert!(report.transient_panic_retried);
+    assert!(report.retries >= 1);
+    // deadline shedding hit only the overdue backlog
+    assert!(report.fresh_request_answered);
+    assert!(report.sheds_only_overdue);
+    assert!(report.shed_deadline >= 1);
+    // and the healthy reference lane was never flagged
+    assert!(report.no_false_positives);
+    assert!(report.pass(), "violations: {:?}", report.violations());
+}
+
+#[test]
+fn recovery_identical_seed_replay_is_bit_identical() {
+    let plan = FaultPlan::default_plan(4242);
+    let cfg = small_cfg();
+    let a = run_recovery(&plan, &cfg).unwrap();
+    let b = run_recovery(&plan, &cfg).unwrap();
+    assert_eq!(
+        a.canonical_json(),
+        b.canonical_json(),
+        "identical-seed recovery replay diverged — determinism contract broken"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// CLI exit-code contract (`sac chaos`): 0 pass, 1 envelope violation,
+// 2 IO / parse / plan error.
+// ---------------------------------------------------------------------------
+
+fn sac_chaos(args: &[&str]) -> std::process::Output {
+    std::process::Command::new(env!("CARGO_BIN_EXE_sac"))
+        .arg("chaos")
+        .args(args)
+        .output()
+        .expect("spawning the sac binary")
+}
+
+#[test]
+fn chaos_cli_exits_2_on_io_and_parse_errors() {
+    let tmp = std::env::temp_dir().join(format!("sac_recovery_cli_{}", std::process::id()));
+    std::fs::create_dir_all(&tmp).unwrap();
+    let out = tmp.to_str().unwrap();
+
+    // missing plan file: IO error
+    let o = sac_chaos(&["--plan", "/nonexistent/no_such_plan.json", "--out", out]);
+    assert_eq!(o.status.code(), Some(2), "stderr: {}", String::from_utf8_lossy(&o.stderr));
+
+    // unparseable plan: parse error
+    let bad = tmp.join("bad_plan.json");
+    std::fs::write(&bad, "{this is not json").unwrap();
+    let o = sac_chaos(&["--plan", bad.to_str().unwrap(), "--out", out]);
+    assert_eq!(o.status.code(), Some(2), "stderr: {}", String::from_utf8_lossy(&o.stderr));
+
+    // well-formed JSON, invalid plan (negative duration): typed PlanError
+    let invalid = tmp.join("invalid_plan.json");
+    std::fs::write(
+        &invalid,
+        r#"{"seed": 1, "analog": [], "infra": [{"kind": "slow_engine", "delay_us": -5}]}"#,
+    )
+    .unwrap();
+    let o = sac_chaos(&["--plan", invalid.to_str().unwrap(), "--out", out]);
+    assert_eq!(o.status.code(), Some(2), "stderr: {}", String::from_utf8_lossy(&o.stderr));
+    assert!(
+        String::from_utf8_lossy(&o.stderr).contains("invalid fault plan"),
+        "stderr should carry the typed plan error: {}",
+        String::from_utf8_lossy(&o.stderr)
+    );
+}
+
+#[test]
+fn chaos_cli_exits_1_on_envelope_violation() {
+    let tmp = std::env::temp_dir().join(format!("sac_recovery_cli_v_{}", std::process::id()));
+    std::fs::create_dir_all(&tmp).unwrap();
+
+    // a catastrophic plan: most of the multiplier grid stuck at a large
+    // value collapses agreement far below the envelope floor
+    let plan = FaultPlan {
+        seed: 31,
+        analog: vec![
+            AnalogFault::Mismatch { sigma_scale: 8.0 },
+            AnalogFault::TempDrift {
+                kind: DriftKind::Step,
+                from_c: 27.0,
+                to_c: 85.0,
+                steps: 2,
+            },
+            AnalogFault::StuckCells {
+                fraction: 0.9,
+                value: 5.0,
+            },
+        ],
+        infra: vec![],
+    };
+    let plan_path = tmp.join("catastrophic_plan.json");
+    plan.save(&plan_path).unwrap();
+    let o = sac_chaos(&[
+        "--plan",
+        plan_path.to_str().unwrap(),
+        "--trials",
+        "2",
+        "--workers",
+        "2",
+        "--out",
+        tmp.to_str().unwrap(),
+    ]);
+    assert_eq!(
+        o.status.code(),
+        Some(1),
+        "stderr: {}",
+        String::from_utf8_lossy(&o.stderr)
+    );
+    assert!(
+        String::from_utf8_lossy(&o.stderr).contains("VIOLATION"),
+        "violations should be printed: {}",
+        String::from_utf8_lossy(&o.stderr)
+    );
+}
+
+#[test]
+fn chaos_cli_recover_passes_and_writes_health_artifact() {
+    let tmp = std::env::temp_dir().join(format!("sac_recovery_cli_r_{}", std::process::id()));
+    std::fs::create_dir_all(&tmp).unwrap();
+    let o = sac_chaos(&[
+        "--recover",
+        "--seed",
+        "20260808",
+        "--workers",
+        "3",
+        "--out",
+        tmp.to_str().unwrap(),
+    ]);
+    assert_eq!(
+        o.status.code(),
+        Some(0),
+        "stdout: {}\nstderr: {}",
+        String::from_utf8_lossy(&o.stdout),
+        String::from_utf8_lossy(&o.stderr)
+    );
+    let health = std::fs::read_to_string(tmp.join("chaos_health.json")).unwrap();
+    assert!(health.contains("\"timeline\""));
+    assert!(health.contains("\"quarantined\""));
+    let report = std::fs::read_to_string(tmp.join("chaos_recovery.json")).unwrap();
+    assert!(report.contains("\"pass\":true"));
+}
