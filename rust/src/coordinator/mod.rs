@@ -22,6 +22,7 @@ pub mod batcher;
 pub mod health;
 pub mod metrics;
 pub mod router;
+pub mod scrape;
 pub mod telemetry;
 
 use std::time::Instant;
@@ -31,10 +32,12 @@ use anyhow::{anyhow, Result};
 pub use batcher::{Batch, DynamicBatcher};
 pub use health::{HealthConfig, HealthEvent, HealthState, LaneHealth};
 pub use metrics::ServeMetrics;
-pub use router::{LaneSpec, RebuildFn, RequestId, Response, Router, RouterConfig};
+pub use router::{trace_of, LaneSpec, RebuildFn, RequestId, Response, Router, RouterConfig};
+pub use scrape::ScrapeServer;
 pub use telemetry::{
-    kernel_stats, metrics_file_json, prometheus_exposition, HealthSnapshot, KernelSnapshot,
-    LatencyHistogram, MetricsSnapshot, StageCounters, StageSnapshot, METRICS_SCHEMA,
+    check_schema, kernel_stats, metrics_file_json, prometheus_exposition, signal_health_json,
+    Exemplar, ExemplarSet, HealthSnapshot, KernelSnapshot, LatencyHistogram, MetricsSnapshot,
+    SchemaError, StageCounters, StageSnapshot, METRICS_SCHEMA,
 };
 
 use crate::data::TrainedNet;
@@ -82,6 +85,12 @@ impl Engine {
     /// Which execution strategy this engine's executable uses.
     pub fn mode(&self) -> ExecMode {
         self.exe.mode()
+    }
+
+    /// Analog signal-health stats of the underlying batched kernel;
+    /// `None` for scalar engines (no grids, nothing to saturate).
+    pub fn signal_health(&self) -> Option<crate::nn::batch::SignalHealthStats> {
+        self.exe.signal_health()
     }
 
     /// Attach an infrastructure fault gate to the underlying executable

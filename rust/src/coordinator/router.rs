@@ -53,8 +53,11 @@ use anyhow::{anyhow, bail, Result};
 use super::batcher::{Batch, DynamicBatcher};
 use super::health::{HealthConfig, HealthEvent, HealthState, LaneHealth};
 use super::metrics::ServeMetrics;
-use super::telemetry::{HealthSnapshot, MetricsSnapshot, StageCounters, StageSnapshot};
+use super::telemetry::{
+    ExemplarSet, HealthSnapshot, MetricsSnapshot, StageCounters, StageSnapshot,
+};
 use super::{Answer, Engine};
+use crate::nn::batch::SignalHealthStats;
 use crate::util::pool::{PoolHandle, WorkerPool};
 use crate::util::rng::Rng;
 use crate::util::trace;
@@ -73,6 +76,15 @@ pub struct Response {
     pub id: u64,
     pub pred: usize,
     pub logits: Vec<f32>,
+}
+
+/// Deterministic per-request trace id, minted at admission and derivable
+/// from any [`RequestId`] — no extra field has to ride through the
+/// batcher.  Always nonzero (`0` means "uncorrelated" throughout the
+/// trace layer); the task lane lives in the high bits so ids stay unique
+/// across lanes.
+pub fn trace_of(task: usize, id: u64) -> u64 {
+    ((task as u64 + 1) << 48) + id + 1
 }
 
 /// Maximum in-place retries of a transient (panic-class) batch failure.
@@ -301,6 +313,10 @@ struct Lane {
     results: Mutex<LaneResults>,
     results_cv: Condvar,
     metrics: Mutex<ServeMetrics>,
+    /// request-latency exemplars (bucket → trace id), recorded at
+    /// delivery while tracing is enabled; kept outside `ServeMetrics`
+    /// so metric merges stay a pure integer law
+    exemplars: Mutex<ExemplarSet>,
 }
 
 /// Self-healing counters (telemetry `sac-metrics/v3` health block).
@@ -401,6 +417,7 @@ impl Router {
                     results: Mutex::new(LaneResults::default()),
                     results_cv: Condvar::new(),
                     metrics: Mutex::new(ServeMetrics::default()),
+                    exemplars: Mutex::new(ExemplarSet::default()),
                 }
             })
             .collect();
@@ -521,7 +538,7 @@ impl Router {
     /// `max_wait + flush_tick`.  Rejects (without side effects) when the
     /// router is shut down or the admission queue is full.
     pub fn submit(&self, task: usize, features: Vec<f32>) -> Result<RequestId> {
-        let _span = trace::span("router.submit");
+        let mut span = trace::span("router.submit");
         if self.shared.shutdown.load(Ordering::SeqCst) {
             StageCounters::bump(&self.shared.stages.rejected);
             bail!("router is shut down");
@@ -563,6 +580,11 @@ impl Router {
         }
         StageCounters::bump(&self.shared.stages.submitted);
         let id = q.submit(features);
+        // Correlate the admission span with the request it just minted.
+        // The id exists only now — after the span opened — so the span
+        // takes the trace id explicitly rather than via a TLS scope
+        // (which would unwind before the span drops).
+        span.set_trace(trace_of(task, id));
         for b in q.pop_fulls() {
             enqueue_batch(&self.shared, &self.pool_handle, task, b);
         }
@@ -786,7 +808,37 @@ impl Router {
             kernel: crate::coordinator::telemetry::kernel_stats(),
             trace: trace::stats(),
             health: self.health_snapshot(),
+            exemplars: self.exemplar_sets(),
+            signal: self.signal_stats(),
         }
+    }
+
+    /// Per-lane request-latency exemplars, in lane order (empty sets
+    /// while tracing is disabled).
+    pub fn exemplar_sets(&self) -> Vec<(String, ExemplarSet)> {
+        self.shared
+            .lanes
+            .iter()
+            .map(|l| (l.name.clone(), l.exemplars.lock().unwrap().clone()))
+            .collect()
+    }
+
+    /// Per-lane analog signal-health stats, in lane order.  Engines
+    /// without a batched kernel (scalar mode) report all-zero stats.
+    pub fn signal_stats(&self) -> Vec<(String, SignalHealthStats)> {
+        self.shared
+            .lanes
+            .iter()
+            .map(|l| {
+                let stats = l
+                    .engine
+                    .read()
+                    .unwrap()
+                    .signal_health()
+                    .unwrap_or_default();
+                (l.name.clone(), stats)
+            })
+            .collect()
     }
 
     /// Worker failure messages collected so far (normally empty).
@@ -1079,6 +1131,13 @@ fn run_engine_once(lane: &Lane, batch: &Batch) -> Result<Vec<Answer>> {
 fn run_and_deliver(shared: &Arc<Shared>, li: usize, batch: &Batch, enqueued: Instant, attempt: u8) {
     let lane = &shared.lanes[li];
     let cfg = &shared.cfg;
+    // Correlate everything this worker does for the batch — engine run,
+    // slab spans, delivery — with the batch's first request.  A batch is
+    // one execution unit, so one representative trace id per batch keeps
+    // the ring usage bounded; the remaining requests still correlate via
+    // exemplars (`trace_of` is derivable from any RequestId).
+    let trace_id = batch.ids.first().map_or(0, |&id| trace_of(li, id));
+    let _corr = trace::correlate(trace_id);
     // Deadline-aware shedding at execution time: every request in this
     // batch was submitted before the batch materialized, so each has
     // waited at least `enqueued.elapsed()` — if the batch itself is past
@@ -1104,6 +1163,7 @@ fn run_and_deliver(shared: &Arc<Shared>, li: usize, batch: &Batch, enqueued: Ins
         }
     }
     let t0 = Instant::now();
+    let batch_span = trace::span("router.batch");
     let mut outcome = run_engine_once(lane, batch);
     // Transient (panic-class) failures get in-place retries under a
     // jittered exponential backoff: injected `panicking_window` faults
@@ -1125,6 +1185,7 @@ fn run_and_deliver(shared: &Arc<Shared>, li: usize, batch: &Batch, enqueued: Ins
             outcome = run_engine_once(lane, batch);
         }
     }
+    drop(batch_span);
     match outcome {
         Ok(rows) => {
             StageCounters::bump(&shared.stages.batches_completed);
@@ -1132,10 +1193,18 @@ fn run_and_deliver(shared: &Arc<Shared>, li: usize, batch: &Batch, enqueued: Ins
                 .stages
                 .rows_delivered
                 .fetch_add(batch.live as u64, std::sync::atomic::Ordering::Relaxed);
-            lane.metrics
-                .lock()
-                .unwrap()
-                .record_batch(batch.live, t0.elapsed());
+            let dt = t0.elapsed();
+            lane.metrics.lock().unwrap().record_batch(batch.live, dt);
+            // Exemplars only make sense while tracing is on — there is
+            // no span tree to follow otherwise, and the disabled path
+            // must stay one atomic load.
+            if trace::enabled() {
+                let ns = dt.as_nanos().min(u128::from(u64::MAX)) as u64;
+                let mut ex = lane.exemplars.lock().unwrap();
+                for &id in &batch.ids {
+                    ex.observe(ns, trace_of(li, id));
+                }
+            }
             let _deliver = trace::span("router.deliver");
             let mut res = lane.results.lock().unwrap();
             for (id, pred, logits) in rows {
@@ -1207,10 +1276,21 @@ fn run_canary(shared: &Arc<Shared>, li: usize, at_batch: u64) {
         .probe_disagreements
         .fetch_add(disagree as u64, Ordering::Relaxed);
     let frac = disagree as f64 / n.max(1) as f64;
+    // Analog signal health rides the same verdict scale as canary
+    // disagreement: a lane whose kernel reports saturation creep or
+    // rising exact-cell fallbacks degrades *before* probe agreement
+    // breaks (DESIGN.md §12).  With signal health disabled (the
+    // default) the score is exactly 0 and this is the identity.
+    let signal_score = lane
+        .engine
+        .read()
+        .unwrap()
+        .signal_health()
+        .map_or(0.0, |s| s.score());
     let (events, quarantined_now) = {
         let mut h = lane.health.lock().unwrap();
         let mut from = h.state();
-        let entered = h.observe(frac);
+        let entered = h.observe(frac.max(signal_score));
         let mut events = Vec::new();
         let mut quarantined_now = false;
         for to in entered {
@@ -1834,5 +1914,42 @@ mod tests {
         assert!(seq.contains(&(HealthState::Healthy, HealthState::Degraded)));
         assert!(seq.contains(&(HealthState::Degraded, HealthState::Quarantined)));
         assert!(seq.contains(&(HealthState::Quarantined, HealthState::Healthy)));
+    }
+
+    #[test]
+    fn trace_ids_are_nonzero_and_unique_across_lanes() {
+        assert_ne!(trace_of(0, 0), 0);
+        let mut seen = std::collections::HashSet::new();
+        for task in 0..4usize {
+            for id in 0..100u64 {
+                assert!(seen.insert(trace_of(task, id)), "collision {task}/{id}");
+            }
+        }
+        // derivable from a RequestId handle
+        let req = RequestId { task: 2, id: 41 };
+        assert_eq!(trace_of(req.task, req.id), (3u64 << 48) + 42);
+    }
+
+    #[test]
+    fn snapshot_carries_per_lane_signal_and_exemplar_blocks() {
+        let router = toy_router(2);
+        for i in 0..8 {
+            router.submit(0, vec![0.1 * i as f32; 3]).unwrap();
+        }
+        router.drain(Duration::from_secs(10)).unwrap();
+        let snap = router.metrics_snapshot("t");
+        assert_eq!(snap.signal.len(), 2);
+        assert_eq!(snap.exemplars.len(), 2);
+        assert_eq!(snap.signal[0].0, "alpha");
+        assert_eq!(snap.exemplars[1].0, "beta");
+        let j = snap.canonical_json();
+        assert!(j.contains("\"schema\":\"sac-metrics/v4\""), "{j}");
+        assert!(j.contains("\"signal\":[{"), "{j}");
+        assert!(j.contains("\"exemplars\":[{"), "{j}");
+        // the prometheus exposition exports the signal gauges per lane
+        let prom = snap.prometheus();
+        assert!(prom.contains("sac_signal_saturation_ratio{router=\"t\",task=\"alpha\"}"));
+        assert!(prom.contains("sac_signal_fallback_ratio{router=\"t\",task=\"beta\"}"));
+        assert!(prom.contains("sac_signal_margin_min{router=\"t\",task=\"alpha\"}"));
     }
 }

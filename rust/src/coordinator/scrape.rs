@@ -1,0 +1,248 @@
+//! Live scrape endpoint: a minimal std-only HTTP/1.1 listener exposing
+//! the router's telemetry while it serves (DESIGN.md §12).
+//!
+//! Three routes, all read-only:
+//!
+//! * `GET /metrics` — Prometheus text exposition (with exemplar
+//!   suffixes on the request-latency histogram while tracing is on);
+//! * `GET /metrics.json` — the canonical `sac-metrics/v4` file form;
+//! * `GET /healthz` — lane health states; `200` while every lane is
+//!   healthy or degraded, `503` once any lane is quarantined — the
+//!   same nonzero-exit semantics the CLI health check uses.
+//!
+//! No HTTP library: the accept loop parses exactly the request line of
+//! each connection and answers with `Connection: close`.  Scrape
+//! cadence is seconds, so a single-threaded accept loop is plenty; a
+//! read timeout keeps a stuck client from wedging the endpoint.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::telemetry::metrics_file_json;
+use super::{HealthState, Router};
+use crate::util::json::Json;
+
+/// Handle to a running scrape listener.  Dropping it stops the
+/// listener (idempotent with [`ScrapeServer::shutdown`]).
+pub struct ScrapeServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<thread::JoinHandle<()>>,
+}
+
+impl ScrapeServer {
+    /// The bound address (useful with a `:0` ephemeral-port bind).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop the listener and join its thread (idempotent).
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // wake a blocked accept with a throwaway connection
+        let _ = TcpStream::connect_timeout(&self.addr, Duration::from_millis(200));
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ScrapeServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Start the scrape listener on `addr` (e.g. `127.0.0.1:9464`, or port
+/// `0` for an ephemeral port), serving snapshots of `router` under the
+/// snapshot name `name`.
+pub fn serve(router: Arc<Router>, addr: &str, name: &str) -> Result<ScrapeServer> {
+    let listener = TcpListener::bind(addr)
+        .with_context(|| format!("bind metrics endpoint on {addr:?}"))?;
+    let bound = listener.local_addr().context("resolve bound address")?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let handle = {
+        let stop = Arc::clone(&stop);
+        let name = name.to_string();
+        thread::Builder::new()
+            .name("sac-scrape".into())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if stop.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    let Ok(stream) = conn else { continue };
+                    // best effort per connection; a bad client never
+                    // takes the endpoint down
+                    let _ = handle_conn(stream, &router, &name);
+                }
+            })
+            .context("spawn scrape listener thread")?
+    };
+    Ok(ScrapeServer {
+        addr: bound,
+        stop,
+        handle: Some(handle),
+    })
+}
+
+/// Serve exactly one request on `stream`.
+fn handle_conn(stream: TcpStream, router: &Router, name: &str) -> Result<()> {
+    stream.set_read_timeout(Some(Duration::from_millis(500)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(2)))?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("");
+    let path = parts.next().unwrap_or("");
+    // drain the header block so well-behaved clients see a clean close
+    let mut hdr = String::new();
+    while reader.read_line(&mut hdr).is_ok() && hdr.trim() != "" {
+        hdr.clear();
+    }
+    let mut stream = reader.into_inner();
+    if method != "GET" {
+        return respond(
+            &mut stream,
+            "405 Method Not Allowed",
+            "text/plain; charset=utf-8",
+            "only GET is supported\n",
+        );
+    }
+    // ignore any query string — the routes take no parameters
+    let route = path.split('?').next().unwrap_or(path);
+    match route {
+        "/metrics" => {
+            let body = router.metrics_snapshot(name).prometheus();
+            respond(
+                &mut stream,
+                "200 OK",
+                "text/plain; version=0.0.4; charset=utf-8",
+                &body,
+            )
+        }
+        "/metrics.json" => {
+            let snap = router.metrics_snapshot(name);
+            let body = format!("{}\n", metrics_file_json(std::slice::from_ref(&snap)));
+            respond(&mut stream, "200 OK", "application/json", &body)
+        }
+        "/healthz" => {
+            let states = router.health_states();
+            let quarantined = states
+                .iter()
+                .any(|(_, s)| *s == HealthState::Quarantined);
+            let body = format!(
+                "{}\n",
+                Json::obj(vec![
+                    (
+                        "lanes",
+                        Json::Arr(
+                            states
+                                .iter()
+                                .map(|(task, s)| {
+                                    Json::obj(vec![
+                                        ("state", Json::Str(s.name().to_string())),
+                                        ("task", Json::Str(task.clone())),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                    (
+                        "status",
+                        Json::Str(
+                            if quarantined { "unhealthy" } else { "ok" }.to_string(),
+                        ),
+                    ),
+                ])
+            );
+            let status = if quarantined {
+                "503 Service Unavailable"
+            } else {
+                "200 OK"
+            };
+            respond(&mut stream, status, "application/json", &body)
+        }
+        _ => respond(
+            &mut stream,
+            "404 Not Found",
+            "text/plain; charset=utf-8",
+            "try /metrics, /metrics.json or /healthz\n",
+        ),
+    }
+}
+
+fn respond(stream: &mut TcpStream, status: &str, content_type: &str, body: &str) -> Result<()> {
+    let head = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{synthetic_engine, RouterConfig};
+    use std::io::Read;
+
+    fn get(addr: SocketAddr, path: &str) -> (String, String) {
+        let mut s = TcpStream::connect(addr).unwrap();
+        write!(s, "GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut buf = String::new();
+        s.read_to_string(&mut buf).unwrap();
+        let (head, body) = buf.split_once("\r\n\r\n").unwrap();
+        (head.to_string(), body.to_string())
+    }
+
+    #[test]
+    fn scrape_endpoint_serves_all_routes() {
+        let router = Arc::new(Router::new(
+            RouterConfig {
+                workers: 2,
+                ..RouterConfig::default()
+            },
+            vec![("alpha".into(), synthetic_engine(41, &[3, 4, 2], 4).unwrap())],
+        ));
+        for i in 0..8 {
+            router.submit(0, vec![0.05 * i as f32; 3]).unwrap();
+        }
+        router.drain(Duration::from_secs(10)).unwrap();
+        let mut srv = serve(Arc::clone(&router), "127.0.0.1:0", "scrape-test").unwrap();
+        let addr = srv.addr();
+
+        let (head, body) = get(addr, "/metrics");
+        assert!(head.starts_with("HTTP/1.1 200 OK"), "{head}");
+        assert!(body.contains("sac_requests_total{router=\"scrape-test\",task=\"alpha\"} 8"));
+        assert!(body.contains("sac_signal_saturation_ratio"));
+
+        let (head, body) = get(addr, "/metrics.json");
+        assert!(head.starts_with("HTTP/1.1 200 OK"), "{head}");
+        assert!(head.contains("application/json"));
+        let parsed = crate::util::json::parse(&body).unwrap();
+        let schema = parsed.get("schema").unwrap();
+        assert_eq!(schema.to_string(), "\"sac-metrics/v4\"");
+
+        let (head, body) = get(addr, "/healthz");
+        assert!(head.starts_with("HTTP/1.1 200 OK"), "{head}");
+        assert!(body.contains("\"status\":\"ok\""), "{body}");
+        assert!(body.contains("\"task\":\"alpha\""), "{body}");
+
+        let (head, _) = get(addr, "/nope");
+        assert!(head.starts_with("HTTP/1.1 404"), "{head}");
+
+        srv.shutdown();
+        srv.shutdown(); // idempotent
+        assert!(TcpStream::connect_timeout(&addr, Duration::from_millis(200)).is_err());
+    }
+}

@@ -9,10 +9,12 @@
 //! associative and commutative, which is what makes multi-lane
 //! aggregation order-invariant (see the merge property test).
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
 use crate::coordinator::ServeMetrics;
+use crate::nn::batch::SignalHealthStats;
 use crate::util::json::Json;
 use crate::util::trace::TraceStats;
 
@@ -20,8 +22,46 @@ use crate::util::trace::TraceStats;
 /// `kernel` block (batched-kernel dispatch + grid-cache counters); v3
 /// added the `health` block (self-healing router: canary probes, health
 /// transitions, shed/retry/requeue counts, rebuild durations, worker
-/// respawns — DESIGN.md §11).
-pub const METRICS_SCHEMA: &str = "sac-metrics/v3";
+/// respawns — DESIGN.md §11); v4 added the `signal` block (per-lane
+/// analog signal-health: saturation / fallback fractions, grid heat,
+/// margin residuals) and per-lane latency `exemplars` linking histogram
+/// buckets to trace ids (DESIGN.md §12).
+pub const METRICS_SCHEMA: &str = "sac-metrics/v4";
+
+/// Typed rejection for a metrics file whose `schema` tag this build
+/// does not understand.  Readers must fail loudly instead of silently
+/// misparsing an older/newer layout.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SchemaError {
+    /// The schema string found in the file.
+    pub found: String,
+    /// The schema this build reads.
+    pub supported: &'static str,
+}
+
+impl std::fmt::Display for SchemaError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "unsupported metrics schema {:?}: this build reads {:?}",
+            self.found, self.supported
+        )
+    }
+}
+
+impl std::error::Error for SchemaError {}
+
+/// Accept exactly the current schema tag; anything else is an error.
+pub fn check_schema(found: &str) -> Result<(), SchemaError> {
+    if found == METRICS_SCHEMA {
+        Ok(())
+    } else {
+        Err(SchemaError {
+            found: found.to_string(),
+            supported: METRICS_SCHEMA,
+        })
+    }
+}
 
 /// Sub-bucket resolution: each octave is split into `2^SUB_BITS` buckets.
 pub const SUB_BITS: u32 = 5;
@@ -163,11 +203,20 @@ impl LatencyHistogram {
     /// cumulative counts to the target rank and linearly interpolates
     /// within the landing bucket; the result is clamped to the observed
     /// `[min_ns, max_ns]`, which makes single-sample histograms exact.
+    /// Edges are exact: `q <= 0` returns the observed minimum, `q >= 1`
+    /// the observed maximum, and an empty histogram returns `0.0`
+    /// (never NaN — a NaN `q` reads as `0`).
     pub fn quantile_ns(&self, q: f64) -> f64 {
         if self.count == 0 {
             return 0.0;
         }
-        let q = q.max(0.0).min(1.0);
+        let q = q.max(0.0).min(1.0); // NaN collapses to 0.0 here
+        if q <= 0.0 {
+            return self.min_ns as f64;
+        }
+        if q >= 1.0 {
+            return self.max_ns as f64;
+        }
         let target = (q * self.count as f64).max(1.0);
         let mut seen = 0u64;
         for (i, &c) in self.counts.iter().enumerate() {
@@ -203,6 +252,105 @@ impl LatencyHistogram {
             ("min_ns", Json::Num(self.min_ns() as f64)),
             ("sum_ns", Json::Num(self.sum_ns as f64)),
         ])
+    }
+}
+
+/// One latency exemplar: a concrete trace id that landed in a given
+/// histogram bucket, so a p99 bucket can be followed straight to the
+/// span tree of a request that produced it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Exemplar {
+    /// Histogram bucket index (`index_of(latency_ns)`).
+    pub bucket: usize,
+    /// Correlated trace id (never 0 — uncorrelated samples are skipped).
+    pub trace_id: u64,
+    /// The exact sample latency.
+    pub latency_ns: u64,
+}
+
+/// At most one exemplar per histogram bucket.  Retention is
+/// deterministic and order-invariant: the highest latency in the
+/// bucket wins, ties broken by the *lowest* trace id — both rules are
+/// commutative and associative, so merging lane sets in any order (or
+/// grouping) yields the identical set, mirroring the histogram-merge
+/// law the goldens rely on.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ExemplarSet {
+    slots: BTreeMap<usize, Exemplar>,
+}
+
+impl ExemplarSet {
+    /// Offer one exemplar; keeps it only if it beats the incumbent
+    /// under the (latency desc, trace id asc) retention rule.
+    fn absorb(&mut self, e: Exemplar) {
+        match self.slots.get_mut(&e.bucket) {
+            Some(cur) => {
+                if e.latency_ns > cur.latency_ns
+                    || (e.latency_ns == cur.latency_ns && e.trace_id < cur.trace_id)
+                {
+                    *cur = e;
+                }
+            }
+            None => {
+                self.slots.insert(e.bucket, e);
+            }
+        }
+    }
+
+    /// Record one correlated latency sample.  Uncorrelated samples
+    /// (`trace_id == 0`) are ignored.
+    pub fn observe(&mut self, latency_ns: u64, trace_id: u64) {
+        if trace_id == 0 {
+            return;
+        }
+        self.absorb(Exemplar {
+            bucket: index_of(latency_ns),
+            trace_id,
+            latency_ns,
+        });
+    }
+
+    /// Merge `other` into `self` under the same retention rule.
+    pub fn merge(&mut self, other: &ExemplarSet) {
+        for e in other.slots.values() {
+            self.absorb(*e);
+        }
+    }
+
+    /// Exemplar for bucket `i`, if one was retained.
+    pub fn get(&self, i: usize) -> Option<&Exemplar> {
+        self.slots.get(&i)
+    }
+
+    /// Retained exemplars in ascending bucket order.
+    pub fn iter(&self) -> impl Iterator<Item = &Exemplar> {
+        self.slots.values()
+    }
+
+    /// Number of buckets holding an exemplar.
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// True when no exemplar has been retained.
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Canonical JSON form: ascending-bucket array of exemplar objects.
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.slots
+                .values()
+                .map(|e| {
+                    Json::obj(vec![
+                        ("bucket", Json::Num(e.bucket as f64)),
+                        ("latency_ns", Json::Num(e.latency_ns as f64)),
+                        ("trace_id", Json::Num(e.trace_id as f64)),
+                    ])
+                })
+                .collect(),
+        )
     }
 }
 
@@ -420,6 +568,31 @@ fn health_state_gauge(state: &str) -> u64 {
     }
 }
 
+/// Canonical JSON form of one lane's analog signal-health stats
+/// (alphabetical keys).  Raw counters come first-class; the derived
+/// fractions are included so scrapers need no client-side math — they
+/// are deterministic functions of the integer counters.
+pub fn signal_health_json(s: &SignalHealthStats) -> Json {
+    Json::obj(vec![
+        ("act_fallbacks", Json::Num(s.act_fallbacks as f64)),
+        ("act_samples", Json::Num(s.act_samples as f64)),
+        ("act_sat_high", Json::Num(s.act_sat_high as f64)),
+        ("act_sat_low", Json::Num(s.act_sat_low as f64)),
+        ("enabled", Json::Bool(s.enabled)),
+        ("fallback_fraction", Json::Num(s.fallback_fraction())),
+        (
+            "heat",
+            Json::Arr(s.heat.iter().map(|&c| Json::Num(c as f64)).collect()),
+        ),
+        ("margin_min", Json::Num(s.margin_min)),
+        ("margin_sum", Json::Num(s.margin_sum)),
+        ("mul_elems", Json::Num(s.mul_elems as f64)),
+        ("mul_fallbacks", Json::Num(s.mul_fallbacks as f64)),
+        ("saturation_fraction", Json::Num(s.saturation_fraction())),
+        ("score", Json::Num(s.score())),
+    ])
+}
+
 /// One self-contained metrics snapshot: a named router (or campaign
 /// stage), its stage counters, per-lane and aggregate `ServeMetrics`,
 /// the kernel counters, and the trace-sink stats at capture time.
@@ -439,6 +612,10 @@ pub struct MetricsSnapshot {
     pub trace: TraceStats,
     /// Self-healing health block (lane states + recovery counters).
     pub health: HealthSnapshot,
+    /// Per-lane request-latency exemplars, in lane (task-id) order.
+    pub exemplars: Vec<(String, ExemplarSet)>,
+    /// Per-lane analog signal-health stats, in lane (task-id) order.
+    pub signal: Vec<(String, SignalHealthStats)>,
 }
 
 impl MetricsSnapshot {
@@ -446,6 +623,20 @@ impl MetricsSnapshot {
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("aggregate", self.aggregate.to_json()),
+            (
+                "exemplars",
+                Json::Arr(
+                    self.exemplars
+                        .iter()
+                        .map(|(task, set)| {
+                            Json::obj(vec![
+                                ("slots", set.to_json()),
+                                ("task", Json::Str(task.clone())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
             ("health", self.health.to_json()),
             ("kernel", self.kernel.to_json()),
             (
@@ -464,6 +655,20 @@ impl MetricsSnapshot {
             ),
             ("router", Json::Str(self.name.clone())),
             ("schema", Json::Str(METRICS_SCHEMA.to_string())),
+            (
+                "signal",
+                Json::Arr(
+                    self.signal
+                        .iter()
+                        .map(|(task, s)| {
+                            Json::obj(vec![
+                                ("stats", signal_health_json(s)),
+                                ("task", Json::Str(task.clone())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
             ("stages", self.stages.to_json()),
             (
                 "trace",
@@ -529,7 +734,13 @@ fn ns_as_seconds(ns: u64) -> String {
     }
 }
 
-fn push_histogram(out: &mut String, family: &str, labels: &str, h: &LatencyHistogram) {
+fn push_histogram(
+    out: &mut String,
+    family: &str,
+    labels: &str,
+    h: &LatencyHistogram,
+    exemplars: Option<&ExemplarSet>,
+) {
     use std::fmt::Write;
     let mut cum = 0u64;
     for (i, c) in h.buckets() {
@@ -540,7 +751,21 @@ fn push_histogram(out: &mut String, family: &str, labels: &str, h: &LatencyHisto
         } else {
             ns_as_seconds(hi)
         };
-        let _ = writeln!(out, "{family}_bucket{{{labels},le=\"{le}\"}} {cum}");
+        // OpenMetrics-style exemplar suffix: bucket line gains
+        // ` # {trace_id="N"} <seconds>` when a trace landed here.
+        match exemplars.and_then(|ex| ex.get(i)) {
+            Some(e) => {
+                let _ = writeln!(
+                    out,
+                    "{family}_bucket{{{labels},le=\"{le}\"}} {cum} # {{trace_id=\"{}\"}} {}",
+                    e.trace_id,
+                    ns_as_seconds(e.latency_ns)
+                );
+            }
+            None => {
+                let _ = writeln!(out, "{family}_bucket{{{labels},le=\"{le}\"}} {cum}");
+            }
+        }
     }
     let _ = writeln!(out, "{family}_bucket{{{labels},le=\"+Inf\"}} {}", h.count());
     let _ = writeln!(out, "{family}_sum{{{labels}}} {}", ns_as_seconds(h.sum_ns()));
@@ -818,6 +1043,57 @@ pub fn prometheus_exposition(snapshots: &[MetricsSnapshot]) -> String {
         );
     }
 
+    let _ = writeln!(
+        out,
+        "# HELP sac_signal_saturation_ratio Fraction of post-gain activations in the outer 5% of grid range."
+    );
+    let _ = writeln!(out, "# TYPE sac_signal_saturation_ratio gauge");
+    for s in snapshots {
+        let r = prom_escape(&s.name);
+        for (task, sig) in &s.signal {
+            let t = prom_escape(task);
+            let _ = writeln!(
+                out,
+                "sac_signal_saturation_ratio{{router=\"{r}\",task=\"{t}\"}} {}",
+                sig.saturation_fraction()
+            );
+        }
+    }
+
+    let _ = writeln!(
+        out,
+        "# HELP sac_signal_fallback_ratio Fraction of grid lookups forced onto the exact-cell fallback path."
+    );
+    let _ = writeln!(out, "# TYPE sac_signal_fallback_ratio gauge");
+    for s in snapshots {
+        let r = prom_escape(&s.name);
+        for (task, sig) in &s.signal {
+            let t = prom_escape(task);
+            let _ = writeln!(
+                out,
+                "sac_signal_fallback_ratio{{router=\"{r}\",task=\"{t}\"}} {}",
+                sig.fallback_fraction()
+            );
+        }
+    }
+
+    let _ = writeln!(
+        out,
+        "# HELP sac_signal_margin_min Worst margin-propagation residual observed (z units; negative = out of grid)."
+    );
+    let _ = writeln!(out, "# TYPE sac_signal_margin_min gauge");
+    for s in snapshots {
+        let r = prom_escape(&s.name);
+        for (task, sig) in &s.signal {
+            let t = prom_escape(task);
+            let _ = writeln!(
+                out,
+                "sac_signal_margin_min{{router=\"{r}\",task=\"{t}\"}} {}",
+                sig.margin_min
+            );
+        }
+    }
+
     // Histograms last (they dominate line count); HELP/TYPE once per family.
     let _ = writeln!(out, "# HELP sac_batch_latency_seconds Per-batch engine latency.");
     let _ = writeln!(out, "# TYPE sac_batch_latency_seconds histogram");
@@ -830,6 +1106,7 @@ pub fn prometheus_exposition(snapshots: &[MetricsSnapshot]) -> String {
                 "sac_batch_latency_seconds",
                 &format!("router=\"{r}\",task=\"{t}\""),
                 &m.batch_latency,
+                None,
             );
         }
     }
@@ -842,11 +1119,17 @@ pub fn prometheus_exposition(snapshots: &[MetricsSnapshot]) -> String {
         let r = prom_escape(&s.name);
         for (task, m) in &s.lanes {
             let t = prom_escape(task);
+            let ex = s
+                .exemplars
+                .iter()
+                .find(|(et, _)| et == task)
+                .map(|(_, set)| set);
             push_histogram(
                 &mut out,
                 "sac_request_latency_seconds",
                 &format!("router=\"{r}\",task=\"{t}\""),
                 &m.request_latency,
+                ex,
             );
         }
     }
@@ -1054,5 +1337,170 @@ mod tests {
         assert!(h.buckets().is_empty());
         let j = h.to_json().to_string();
         assert!(j.contains("\"count\":0"));
+    }
+
+    #[test]
+    fn quantile_edges_return_exact_extremes() {
+        let mut h = LatencyHistogram::default();
+        for ns in [100u64, 5_000, 123_456, 9_999_999] {
+            h.record_ns(ns);
+        }
+        // q <= 0 is the exact observed minimum, q >= 1 the exact maximum
+        assert_eq!(h.quantile_ns(0.0), 100.0);
+        assert_eq!(h.quantile_ns(-1.0), 100.0);
+        assert_eq!(h.quantile_ns(1.0), 9_999_999.0);
+        assert_eq!(h.quantile_ns(2.0), 9_999_999.0);
+        // NaN q collapses to the q=0 edge, never propagates
+        assert_eq!(h.quantile_ns(f64::NAN), 100.0);
+        // the empty histogram never returns NaN at any edge
+        let e = LatencyHistogram::default();
+        assert_eq!(e.quantile_ns(0.0), 0.0);
+        assert_eq!(e.quantile_ns(1.0), 0.0);
+        assert!(!e.quantile_ns(f64::NAN).is_nan());
+    }
+
+    #[test]
+    fn record_n_saturates_instead_of_wrapping() {
+        let mut h = LatencyHistogram::default();
+        h.record_n_ns(u64::MAX, u64::MAX);
+        h.record_n_ns(u64::MAX, u64::MAX);
+        assert_eq!(h.count(), u64::MAX);
+        assert_eq!(h.sum_ns(), u64::MAX);
+        // further recording and merging stay pinned, no wrap/panic
+        h.record_ns(1);
+        let mut other = LatencyHistogram::default();
+        other.record_n_ns(7, u64::MAX);
+        h.merge(&other);
+        assert_eq!(h.count(), u64::MAX);
+        assert_eq!(h.min_ns(), 1);
+        assert_eq!(h.max_ns(), u64::MAX);
+    }
+
+    #[test]
+    fn merged_quantiles_are_bracketed_by_part_quantiles() {
+        // merge-then-quantile must land between the per-part quantiles
+        // (mixture law), up to bucket resolution; the q=0 / q=1 edges
+        // are exact min-of-mins / max-of-maxes.
+        let mut a = LatencyHistogram::default();
+        let mut b = LatencyHistogram::default();
+        let mut s = 0x5AC0_D00Du64;
+        for i in 0..800u64 {
+            s = s
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            let ns = 50 + (s >> 40);
+            if i % 2 == 0 {
+                a.record_ns(ns);
+            } else {
+                b.record_ns(ns);
+            }
+        }
+        let mut m = a.clone();
+        m.merge(&b);
+        assert_eq!(m.quantile_ns(0.0), a.min_ns().min(b.min_ns()) as f64);
+        assert_eq!(m.quantile_ns(1.0), a.max_ns().max(b.max_ns()) as f64);
+        for k in 1..20 {
+            let q = k as f64 / 20.0;
+            let qa = a.quantile_ns(q);
+            let qb = b.quantile_ns(q);
+            let qm = m.quantile_ns(q);
+            let lo = qa.min(qb) * (1.0 - 1.0 / 16.0) - 1.0;
+            let hi = qa.max(qb) * (1.0 + 1.0 / 16.0) + 1.0;
+            assert!(
+                qm >= lo && qm <= hi,
+                "q={q}: merged {qm} outside [{lo},{hi}] (parts {qa}, {qb})"
+            );
+        }
+    }
+
+    #[test]
+    fn exemplar_retention_is_deterministic_and_order_invariant() {
+        // 1_000 and 1_001 share a bucket (width 16 at that octave):
+        // the higher latency wins, ties break to the lowest trace id.
+        assert_eq!(index_of(1_000), index_of(1_001));
+        let samples: [(u64, u64); 6] = [
+            (1_000, 7),
+            (1_001, 5),
+            (1_001, 4),
+            (1_048_576, 9),
+            (40, 2),
+            (40, 11),
+        ];
+        let mut fwd = ExemplarSet::default();
+        for &(ns, id) in &samples {
+            fwd.observe(ns, id);
+        }
+        let mut rev = ExemplarSet::default();
+        for &(ns, id) in samples.iter().rev() {
+            rev.observe(ns, id);
+        }
+        assert_eq!(fwd, rev);
+        // split + merge (either direction) gives the identical set
+        let (mut x, mut y) = (ExemplarSet::default(), ExemplarSet::default());
+        for (i, &(ns, id)) in samples.iter().enumerate() {
+            if i % 2 == 0 {
+                x.observe(ns, id);
+            } else {
+                y.observe(ns, id);
+            }
+        }
+        let mut xy = x.clone();
+        xy.merge(&y);
+        let mut yx = y.clone();
+        yx.merge(&x);
+        assert_eq!(xy, fwd);
+        assert_eq!(yx, fwd);
+        // retained winners
+        let e = fwd.get(index_of(1_001)).unwrap();
+        assert_eq!((e.latency_ns, e.trace_id), (1_001, 4));
+        let e = fwd.get(index_of(40)).unwrap();
+        assert_eq!((e.latency_ns, e.trace_id), (40, 2));
+        assert_eq!(fwd.len(), 3);
+        // uncorrelated samples are never retained
+        let mut z = ExemplarSet::default();
+        z.observe(1_000, 0);
+        assert!(z.is_empty());
+        // canonical JSON is ascending-bucket with alphabetical keys
+        let j = fwd.to_json().to_string();
+        assert!(j.starts_with("[{\"bucket\":40,\"latency_ns\":40,\"trace_id\":2}"));
+    }
+
+    #[test]
+    fn schema_check_rejects_unknown_versions() {
+        assert!(check_schema(METRICS_SCHEMA).is_ok());
+        let err = check_schema("sac-metrics/v3").unwrap_err();
+        assert_eq!(err.found, "sac-metrics/v3");
+        assert_eq!(err.supported, "sac-metrics/v4");
+        let msg = err.to_string();
+        assert!(msg.contains("sac-metrics/v3") && msg.contains("sac-metrics/v4"));
+        assert!(check_schema("sac-metrics/v99").is_err());
+        assert!(check_schema("").is_err());
+    }
+
+    #[test]
+    fn signal_health_json_is_canonical() {
+        let s = SignalHealthStats {
+            enabled: true,
+            mul_elems: 8,
+            mul_fallbacks: 3,
+            act_samples: 4,
+            act_sat_high: 1,
+            act_sat_low: 1,
+            act_fallbacks: 0,
+            heat: [1, 2, 2, 0, 0, 0, 0, 0],
+            margin_min: -0.5,
+            margin_sum: 2.25,
+        };
+        // dyadic inputs → exact decimal fractions in the pinned string
+        assert_eq!(s.saturation_fraction(), 0.5);
+        assert_eq!(s.fallback_fraction(), 0.25);
+        assert_eq!(
+            signal_health_json(&s).to_string(),
+            "{\"act_fallbacks\":0,\"act_samples\":4,\"act_sat_high\":1,\
+             \"act_sat_low\":1,\"enabled\":true,\"fallback_fraction\":0.25,\
+             \"heat\":[1,2,2,0,0,0,0,0],\"margin_min\":-0.5,\
+             \"margin_sum\":2.25,\"mul_elems\":8,\"mul_fallbacks\":3,\
+             \"saturation_fraction\":0.5,\"score\":0.5}"
+        );
     }
 }

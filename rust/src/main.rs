@@ -5,6 +5,7 @@
 //! serve <task>          batched inference through the multi-task router
 //! bench-serve           synthetic router throughput bench (no artifacts)
 //! metrics               synthetic serving run + telemetry exposition
+//! trace export          Chrome/Perfetto trace dump of a synthetic run
 //! characterize <cell>   DC sweep of a standard cell across corners
 //! mc <cell>             Monte-Carlo mismatch campaign
 //! chaos                 replay a fault-injection plan against the stack
@@ -15,6 +16,7 @@
 #![allow(clippy::needless_range_loop, clippy::manual_clamp)]
 
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, ensure, Result};
@@ -23,7 +25,8 @@ use sac::analysis::{dc, montecarlo as mc};
 use sac::cells::activations::CellKind;
 use sac::cells::CircuitCorner;
 use sac::coordinator::{
-    metrics_file_json, synthetic_engine_with_mode, Engine, MetricsSnapshot, Router, RouterConfig,
+    check_schema, metrics_file_json, scrape, synthetic_engine_with_mode, Engine, MetricsSnapshot,
+    Router, RouterConfig,
 };
 use sac::data::Dataset;
 use sac::faults::{
@@ -44,12 +47,14 @@ USAGE:
   sac repro <id|all> [--out results] [--limit N] [--threads N] [--mc-trials N]
   sac serve <task> [--artifacts DIR] [--requests N] [--workers N] [--engine scalar|batched]
                    [--threads N] [--deadline-ms MS] [--max-queue N] [--canary-every B]
-                   [--metrics-out FILE]
+                   [--metrics-out FILE] [--metrics-addr ADDR] [--hold-ms MS]
   sac bench-serve [--tasks K] [--workers N] [--submitters N] [--requests N] [--batch B]
                   [--engine scalar|batched] [--threads N] [--deadline-ms MS] [--max-queue N]
-                  [--canary-every B] [--metrics-out FILE]
+                  [--canary-every B] [--metrics-out FILE] [--metrics-addr ADDR] [--hold-ms MS]
   sac metrics [--tasks K] [--requests N] [--workers N] [--batch B] [--seed S]
-              [--format prom|json|both] [--out FILE]
+              [--format prom|json|both] [--out FILE] [--validate FILE]
+  sac trace export [--tasks K] [--requests N] [--workers N] [--batch B] [--threads N]
+                   [--seed S] [--capacity N] [--out FILE]
   sac characterize <cell> [--node NAME] [--regime WI|MI|SI] [--temp C] [--out results]
   sac mc <cell> [--node NAME] [--trials N]
   sac chaos [--plan FILE | --seed S] [--trials N] [--workers N] [--threads N] [--out results]
@@ -61,7 +66,12 @@ env: SAC_MC_TRIALS / SAC_MC_SEED override the mc campaign defaults (flags win)
      SAC_THREADS sets the default intra-batch row parallelism (--threads wins);
      results are bit-identical at any thread count
      SAC_TRACE=1 enables span tracing (SAC_TRACE_CAPACITY sizes the ring);
-     --metrics-out / sac metrics emit Prometheus + canonical JSON telemetry
+     SAC_SIGNAL_HEALTH=1 enables the analog signal-health accumulators
+     --metrics-out / sac metrics emit Prometheus + canonical JSON telemetry;
+     --metrics-addr ADDR serves /metrics, /metrics.json and /healthz live while
+     a serving command runs (--hold-ms keeps the endpoint up after the workload);
+     sac metrics --validate FILE checks a metrics file against this build's schema;
+     sac trace export prints a chrome://tracing / Perfetto trace of a seeded run
 serving resilience (DESIGN.md §11): --deadline-ms sheds requests still unexecuted
      past their deadline, --max-queue bounds the admission queue, --canary-every B
      probes each lane's health every B batches and quarantines + rebuilds on drift
@@ -81,6 +91,7 @@ fn main() {
         return;
     }
     sac::util::trace::init_from_env();
+    sac::nn::batch::signal_health_init_from_env();
     if let Err(e) = dispatch(&argv) {
         eprintln!("error: {e:#}");
         // exit-code contract for `sac chaos`: envelope / invariant
@@ -129,12 +140,48 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "serve" => cmd_serve(&args),
         "bench-serve" => cmd_bench_serve(&args),
         "metrics" => cmd_metrics(&args),
+        "trace" => cmd_trace(&args),
         "characterize" => cmd_characterize(&args),
         "mc" => cmd_mc(&args),
         "chaos" => cmd_chaos(&args),
         "info" => cmd_info(&args),
         other => bail!("unknown command {other:?}\n{USAGE}"),
     }
+}
+
+/// Start the live scrape endpoint when `--metrics-addr` is given
+/// (DESIGN.md §12).  Port `0` binds an ephemeral port; the resolved
+/// address is printed so callers can find it.
+fn scrape_endpoint_args(
+    args: &Args,
+    router: &Arc<Router>,
+    name: &str,
+) -> Result<Option<scrape::ScrapeServer>> {
+    match args.get("metrics-addr") {
+        Some(addr) => {
+            let srv = scrape::serve(Arc::clone(router), addr, name)?;
+            println!(
+                "metrics endpoint: http://{}/metrics (also /metrics.json, /healthz)",
+                srv.addr()
+            );
+            Ok(Some(srv))
+        }
+        None => Ok(None),
+    }
+}
+
+/// `--hold-ms` keeps the scrape endpoint up after the workload drains so
+/// external scrapers (the CI curl job) can hit a quiescent router.
+fn hold_scrape_endpoint(args: &Args, srv: Option<scrape::ScrapeServer>) -> Result<()> {
+    if let Some(mut srv) = srv {
+        let hold = args.get_usize("hold-ms", 0)? as u64;
+        if hold > 0 {
+            println!("holding metrics endpoint for {hold} ms");
+            std::thread::sleep(Duration::from_millis(hold));
+        }
+        srv.shutdown();
+    }
+    Ok(())
 }
 
 fn cmd_repro(args: &Args) -> Result<()> {
@@ -205,7 +252,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     )?;
     let resilient =
         cfg.deadline.is_some() || cfg.max_queue.is_some() || cfg.canary_every > 0;
-    let router = Router::new(cfg, vec![(task.to_string(), engine)]);
+    let router = Arc::new(Router::new(cfg, vec![(task.to_string(), engine)]));
+    let scrape_srv = scrape_endpoint_args(args, &router, "serve")?;
     let t0 = Instant::now();
     let mut reqs = Vec::with_capacity(n);
     let mut rejected = 0usize;
@@ -259,11 +307,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(path) = args.get("metrics-out") {
         write_metrics_file(path, &[router.metrics_snapshot("serve")])?;
     }
-    Ok(())
+    hold_scrape_endpoint(args, scrape_srv)
 }
 
-/// Write snapshots as a canonical `sac-metrics/v2` JSON file, creating
-/// parent directories as needed.
+/// Write snapshots as a canonical JSON metrics file (current schema:
+/// [`sac::coordinator::METRICS_SCHEMA`]), creating parent directories
+/// as needed.
 fn write_metrics_file(path: &str, snapshots: &[MetricsSnapshot]) -> Result<()> {
     let p = PathBuf::from(path);
     if let Some(dir) = p.parent() {
@@ -313,7 +362,8 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
     )?;
     let resilient =
         cfg.deadline.is_some() || cfg.max_queue.is_some() || cfg.canary_every > 0;
-    let router = Router::new(cfg, engines);
+    let router = Arc::new(Router::new(cfg, engines));
+    let scrape_srv = scrape_endpoint_args(args, &router, "bench-serve")?;
     let t0 = Instant::now();
     let admitted: usize = std::thread::scope(|scope| {
         let mut handles = Vec::with_capacity(submitters);
@@ -371,7 +421,7 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
         "end-to-end: {requests} requests in {wall:.2}s = {:.0} req/s",
         requests as f64 / wall
     );
-    Ok(())
+    hold_scrape_endpoint(args, scrape_srv)
 }
 
 /// Self-contained telemetry demo: run a deterministic synthetic serving
@@ -380,6 +430,17 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
 /// checkout — the schema-stability goldens in `tests/observability.rs`
 /// pin both formats.
 fn cmd_metrics(args: &Args) -> Result<()> {
+    // `--validate FILE`: schema-compat check only, no workload.  Unknown
+    // `sac-metrics/*` versions are a typed error (exit 1), so scripts
+    // that read metrics files fail loudly instead of misparsing.
+    if let Some(path) = args.get("validate") {
+        let doc = sac::util::json::parse_file(Path::new(path))?;
+        let schema = doc.get("schema")?.as_str()?.to_string();
+        check_schema(&schema)?;
+        let n = doc.get("snapshots")?.as_arr()?.len();
+        println!("ok: {path} is {schema} with {n} snapshot(s)");
+        return Ok(());
+    }
     let tasks = args.get_usize("tasks", 2)?.max(1);
     let requests = args.get_usize("requests", 128)?;
     let workers = args.get_usize("workers", 4)?.max(1);
@@ -432,6 +493,91 @@ fn cmd_metrics(args: &Args) -> Result<()> {
     }
     if let Some(path) = args.get("out") {
         write_metrics_file(path, std::slice::from_ref(&snap))?;
+    }
+    Ok(())
+}
+
+/// `sac trace export`: run a deterministic seeded synthetic workload
+/// with the span ring force-enabled and print it as a Chrome
+/// trace-event document (load in `chrome://tracing` or Perfetto).
+/// Every span carries the originating request's trace id, so a single
+/// request can be followed submit → batch → slab → deliver
+/// (DESIGN.md §12).  With `--out` the JSON goes to a file; otherwise it
+/// is the only thing written to stdout.
+fn cmd_trace(args: &Args) -> Result<()> {
+    let sub = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("export");
+    if sub != "export" {
+        bail!("unknown trace subcommand {sub:?} (use `sac trace export`)");
+    }
+    let tasks = args.get_usize("tasks", 2)?.max(1);
+    let requests = args.get_usize("requests", 64)?.max(1);
+    let workers = args.get_usize("workers", 2)?.max(1);
+    // defaults are sized so full batches take the row-sharded kernel
+    // path: 16 rows × 4 threads clears the 2×MIN_SLAB_ROWS serial
+    // cutoff, so the export shows the whole submit → batch → slab →
+    // deliver pipeline, not just the serial spine
+    let batch = args.get_usize("batch", 16)?.max(1);
+    let threads = args.get_usize("threads", 4)?.max(1);
+    let seed = args.get_usize("seed", 7)? as u64;
+    let capacity = args.get_usize("capacity", 4096)?.max(16);
+    // force the ring on for this run, whatever SAC_TRACE says — an
+    // export of zero spans helps nobody
+    sac::util::trace::enable(capacity);
+    const DIM: usize = 8;
+    let engines = (0..tasks)
+        .map(|t| {
+            Ok((
+                format!("task{t}"),
+                synthetic_engine_with_mode(
+                    seed + t as u64,
+                    &[DIM, 10, 4],
+                    batch,
+                    ExecMode::Batched,
+                )?,
+            ))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let router = Router::new(
+        RouterConfig {
+            workers,
+            kernel_threads: Some(threads),
+            // a generous flush deadline: submissions take microseconds,
+            // so batches fill completely and the trace shows full slabs
+            max_wait: Duration::from_millis(50),
+            ..RouterConfig::default()
+        },
+        engines,
+    );
+    let mut rng = Rng::new(seed ^ 0x7ACE);
+    let mut reqs = Vec::with_capacity(requests);
+    for k in 0..requests {
+        let feats: Vec<f32> = (0..DIM).map(|_| rng.uniform_in(-1.0, 1.0) as f32).collect();
+        reqs.push(router.submit(k % tasks, feats)?);
+    }
+    router.drain(Duration::from_secs(600))?;
+    for &req in &reqs {
+        router
+            .try_take(req)?
+            .ok_or_else(|| anyhow!("request {req:?} unanswered"))?;
+    }
+    let doc = sac::util::trace::export_chrome_live().to_string();
+    match args.get("out") {
+        Some(path) => {
+            let p = PathBuf::from(path);
+            if let Some(dir) = p.parent() {
+                if !dir.as_os_str().is_empty() {
+                    std::fs::create_dir_all(dir)?;
+                }
+            }
+            std::fs::write(&p, &doc)?;
+            println!("wrote {} ({} bytes)", p.display(), doc.len());
+        }
+        // bare JSON on stdout so `sac trace export | jq` just works
+        None => println!("{doc}"),
     }
     Ok(())
 }

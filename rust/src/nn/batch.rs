@@ -65,7 +65,7 @@
 
 use std::collections::HashMap;
 use std::fmt;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
@@ -233,6 +233,48 @@ impl MulGrid {
         acc[0]
     }
 
+    /// [`MulGrid::accumulate`] with per-element signal-health accounting
+    /// into `sig` (DESIGN.md §12).  Numerically identical to the plain
+    /// path — the instrumentation only counts; it never changes which of
+    /// grid / exact-cell evaluates an element.
+    pub fn accumulate_signal(
+        &self,
+        p: &dyn HProvider,
+        mult: &Multiplier,
+        xs: &[f64],
+        w: f64,
+        dst: &mut [f64],
+        sig: &mut SlabSignal,
+    ) {
+        debug_assert_eq!(xs.len(), dst.len());
+        let wp = self.a + w;
+        let wm = self.a - w;
+        let margin = self.grid.hi - wp.abs().max(wm.abs());
+        let lo = self.grid.lo;
+        let inv_span = HEAT_BINS as f64 / (self.grid.hi - lo);
+        sig.mul_elems += xs.len() as u64;
+        for (d, &x) in dst.iter_mut().zip(xs) {
+            // margin-propagation residual: headroom (in z units) left
+            // before this element would leave the proto grid; negative ⇒
+            // the element fell back to the exact cell
+            let residual = margin - x.abs();
+            if residual < sig.margin_min {
+                sig.margin_min = residual;
+            }
+            if residual > 0.0 {
+                sig.margin_sum += residual;
+                // access heat: bin the representative `wp + x` probe over
+                // the grid range (negative offsets saturate to bin 0)
+                let b = ((wp + x - lo) * inv_span) as usize;
+                sig.heat[b.min(HEAT_BINS - 1)] += 1;
+                *d += self.eval(x, wp, wm);
+            } else {
+                sig.mul_fallbacks += 1;
+                *d += mult.mul(p, x, w);
+            }
+        }
+    }
+
     /// Number of proto-shape samples backing the grid.
     pub fn points(&self) -> usize {
         self.grid.len()
@@ -277,6 +319,34 @@ impl ActGrid {
             *v = if self.grid.contains(z) {
                 self.grid.eval(z)
             } else {
+                self.act.eval(p, z, self.splines)
+            };
+        }
+    }
+
+    /// [`ActGrid::apply`] with per-element signal-health accounting into
+    /// `sig`: pre-activation values landing in the top/bottom 5% of the
+    /// grid's post-gain range count as saturated (dynamic-range misuse,
+    /// per Binas et al.), and out-of-range exact-cell evaluations count
+    /// as fallbacks.  Numerically identical to the plain path.
+    pub fn apply_signal(&self, p: &dyn HProvider, vals: &mut [f64], gain: f64, sig: &mut SlabSignal) {
+        let lo = self.grid.lo;
+        let hi = self.grid.hi;
+        let band = 0.05 * (hi - lo);
+        let lo_thr = lo + band;
+        let hi_thr = hi - band;
+        sig.act_samples += vals.len() as u64;
+        for v in vals.iter_mut() {
+            let z = *v * gain;
+            if z >= hi_thr {
+                sig.act_sat_high += 1;
+            } else if z <= lo_thr {
+                sig.act_sat_low += 1;
+            }
+            *v = if self.grid.contains(z) {
+                self.grid.eval(z)
+            } else {
+                sig.act_fallbacks += 1;
                 self.act.eval(p, z, self.splines)
             };
         }
@@ -408,6 +478,247 @@ fn grids_for(
 }
 
 // ---------------------------------------------------------------------------
+// Analog signal-health accounting (DESIGN.md §12)
+// ---------------------------------------------------------------------------
+
+/// Coarse access-heat bins per [`MulGrid`] (each bin covers 1/8 of the
+/// proto grid's z range).
+pub const HEAT_BINS: usize = 8;
+
+/// Process-global gate for signal-health accounting.  Off by default:
+/// the nominal forward path stays byte-identical with zero extra work
+/// beyond one relaxed load per slab.
+static SIGNAL_HEALTH: AtomicBool = AtomicBool::new(false);
+
+/// Turn signal-health accounting on/off process-wide.
+pub fn signal_health_set(on: bool) {
+    SIGNAL_HEALTH.store(on, Ordering::Release);
+}
+
+/// Whether the instrumented forward path is active.
+pub fn signal_health_enabled() -> bool {
+    SIGNAL_HEALTH.load(Ordering::Relaxed)
+}
+
+/// Enable signal-health accounting if `SAC_SIGNAL_HEALTH` is set to
+/// `1`/`true`/`on`/`yes` (case-insensitive).
+pub fn signal_health_init_from_env() {
+    let on = std::env::var("SAC_SIGNAL_HEALTH")
+        .map(|v| {
+            let v = v.trim().to_ascii_lowercase();
+            v == "1" || v == "true" || v == "on" || v == "yes"
+        })
+        .unwrap_or(false);
+    if on {
+        signal_health_set(true);
+    }
+}
+
+/// Slab-local signal counters: plain integers bumped in the hot loops,
+/// absorbed into the kernel's shared accumulators once per slab so the
+/// instrumented path adds no atomics or locks inside the element loops.
+#[derive(Clone, Copy, Debug)]
+pub struct SlabSignal {
+    /// multiplier elements processed (grid + fallback)
+    pub mul_elems: u64,
+    /// elements evaluated by the exact cell (outside the proto grid)
+    pub mul_fallbacks: u64,
+    /// activation inputs observed
+    pub act_samples: u64,
+    /// pre-activations in the top 5% of the act grid's post-gain range
+    pub act_sat_high: u64,
+    /// pre-activations in the bottom 5% of the range
+    pub act_sat_low: u64,
+    /// activation inputs outside the grid (exact-cell evaluations)
+    pub act_fallbacks: u64,
+    /// proto-grid access heat, binned over the grid's z range
+    pub heat: [u64; HEAT_BINS],
+    /// minimum margin-propagation residual seen (negative ⇒ fallback)
+    pub margin_min: f64,
+    /// sum of positive residuals (mean headroom = sum / in-grid elems)
+    pub margin_sum: f64,
+}
+
+impl Default for SlabSignal {
+    fn default() -> Self {
+        SlabSignal {
+            mul_elems: 0,
+            mul_fallbacks: 0,
+            act_samples: 0,
+            act_sat_high: 0,
+            act_sat_low: 0,
+            act_fallbacks: 0,
+            heat: [0; HEAT_BINS],
+            margin_min: f64::INFINITY,
+            margin_sum: 0.0,
+        }
+    }
+}
+
+/// Shared per-kernel accumulators (one [`BatchKernel`] per lane/corner,
+/// so these are per-corner totals).  Grids themselves are `Arc`-shared
+/// across kernels via the process-wide cache, so the mutable state lives
+/// here, not on [`MulGrid`]/[`ActGrid`].
+struct SignalHealth {
+    mul_elems: AtomicU64,
+    mul_fallbacks: AtomicU64,
+    act_samples: AtomicU64,
+    act_sat_high: AtomicU64,
+    act_sat_low: AtomicU64,
+    act_fallbacks: AtomicU64,
+    heat: [AtomicU64; HEAT_BINS],
+    /// f64 bit pattern of the minimum residual (init +∞)
+    margin_min_bits: AtomicU64,
+    /// positive-residual sum in micro-z units (integer so the merge is
+    /// atomic and associative)
+    margin_sum_micro: AtomicU64,
+}
+
+impl Default for SignalHealth {
+    fn default() -> Self {
+        SignalHealth {
+            mul_elems: AtomicU64::new(0),
+            mul_fallbacks: AtomicU64::new(0),
+            act_samples: AtomicU64::new(0),
+            act_sat_high: AtomicU64::new(0),
+            act_sat_low: AtomicU64::new(0),
+            act_fallbacks: AtomicU64::new(0),
+            heat: Default::default(),
+            margin_min_bits: AtomicU64::new(f64::INFINITY.to_bits()),
+            margin_sum_micro: AtomicU64::new(0),
+        }
+    }
+}
+
+impl SignalHealth {
+    fn absorb(&self, s: &SlabSignal) {
+        if s.mul_elems == 0 && s.act_samples == 0 {
+            return;
+        }
+        self.mul_elems.fetch_add(s.mul_elems, Ordering::Relaxed);
+        self.mul_fallbacks.fetch_add(s.mul_fallbacks, Ordering::Relaxed);
+        self.act_samples.fetch_add(s.act_samples, Ordering::Relaxed);
+        self.act_sat_high.fetch_add(s.act_sat_high, Ordering::Relaxed);
+        self.act_sat_low.fetch_add(s.act_sat_low, Ordering::Relaxed);
+        self.act_fallbacks.fetch_add(s.act_fallbacks, Ordering::Relaxed);
+        for (a, &v) in self.heat.iter().zip(&s.heat) {
+            if v != 0 {
+                a.fetch_add(v, Ordering::Relaxed);
+            }
+        }
+        if s.margin_min.is_finite() {
+            let mut cur = self.margin_min_bits.load(Ordering::Relaxed);
+            while s.margin_min < f64::from_bits(cur) {
+                match self.margin_min_bits.compare_exchange_weak(
+                    cur,
+                    s.margin_min.to_bits(),
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => break,
+                    Err(seen) => cur = seen,
+                }
+            }
+        }
+        let micro = (s.margin_sum * 1e6) as u64;
+        if micro != 0 {
+            self.margin_sum_micro.fetch_add(micro, Ordering::Relaxed);
+        }
+    }
+
+    fn snapshot(&self) -> SignalHealthStats {
+        let min_bits = self.margin_min_bits.load(Ordering::Relaxed);
+        let margin_min = f64::from_bits(min_bits);
+        let mut heat = [0u64; HEAT_BINS];
+        for (h, a) in heat.iter_mut().zip(&self.heat) {
+            *h = a.load(Ordering::Relaxed);
+        }
+        SignalHealthStats {
+            enabled: signal_health_enabled(),
+            mul_elems: self.mul_elems.load(Ordering::Relaxed),
+            mul_fallbacks: self.mul_fallbacks.load(Ordering::Relaxed),
+            act_samples: self.act_samples.load(Ordering::Relaxed),
+            act_sat_high: self.act_sat_high.load(Ordering::Relaxed),
+            act_sat_low: self.act_sat_low.load(Ordering::Relaxed),
+            act_fallbacks: self.act_fallbacks.load(Ordering::Relaxed),
+            heat,
+            margin_min: if margin_min.is_finite() { margin_min } else { 0.0 },
+            margin_sum: self.margin_sum_micro.load(Ordering::Relaxed) as f64 / 1e6,
+        }
+    }
+}
+
+/// Point-in-time copy of one kernel's signal-health accumulators
+/// (telemetry surface — `coordinator::telemetry` renders these per lane
+/// as the `sac-metrics/v4` `signal` block).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SignalHealthStats {
+    /// whether the instrumented path was active at snapshot time
+    pub enabled: bool,
+    /// multiplier elements processed
+    pub mul_elems: u64,
+    /// exact-cell fallbacks outside the proto grid
+    pub mul_fallbacks: u64,
+    /// activation inputs observed
+    pub act_samples: u64,
+    /// pre-activations in the top 5% of the act range
+    pub act_sat_high: u64,
+    /// pre-activations in the bottom 5% of the act range
+    pub act_sat_low: u64,
+    /// activation inputs outside the grid
+    pub act_fallbacks: u64,
+    /// proto-grid access heat bins
+    pub heat: [u64; HEAT_BINS],
+    /// minimum margin residual seen (0.0 when nothing was observed)
+    pub margin_min: f64,
+    /// sum of positive margin residuals
+    pub margin_sum: f64,
+}
+
+impl SignalHealthStats {
+    /// Fraction of pre-activations in the saturation bands.
+    pub fn saturation_fraction(&self) -> f64 {
+        (self.act_sat_high + self.act_sat_low) as f64 / self.act_samples.max(1) as f64
+    }
+
+    /// Fraction of all grid evaluations that fell back to exact cells.
+    pub fn fallback_fraction(&self) -> f64 {
+        (self.mul_fallbacks + self.act_fallbacks) as f64
+            / (self.mul_elems + self.act_samples).max(1) as f64
+    }
+
+    /// Health score on the canary disagreement scale: compared against
+    /// the paper's 0.15 / 0.40 degradation envelopes by the router, so
+    /// saturation creep degrades a lane before canary agreement breaks
+    /// (DESIGN.md §12).  Zero whenever accounting is disabled.
+    pub fn score(&self) -> f64 {
+        self.saturation_fraction().max(self.fallback_fraction())
+    }
+
+    /// Merge another kernel's stats (element-wise; min/sum laws).
+    pub fn merge(&mut self, other: &SignalHealthStats) {
+        // a side that saw no multiplier elements carries the 0.0
+        // placeholder min, which must not clobber a real observation
+        self.margin_min = match (self.mul_elems > 0, other.mul_elems > 0) {
+            (true, true) => self.margin_min.min(other.margin_min),
+            (false, true) => other.margin_min,
+            _ => self.margin_min,
+        };
+        self.enabled |= other.enabled;
+        self.mul_elems += other.mul_elems;
+        self.mul_fallbacks += other.mul_fallbacks;
+        self.act_samples += other.act_samples;
+        self.act_sat_high += other.act_sat_high;
+        self.act_sat_low += other.act_sat_low;
+        self.act_fallbacks += other.act_fallbacks;
+        for (a, b) in self.heat.iter_mut().zip(&other.heat) {
+            *a += *b;
+        }
+        self.margin_sum += other.margin_sum;
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Slab dispatch bookkeeping
 // ---------------------------------------------------------------------------
 
@@ -475,6 +786,7 @@ pub struct BatchKernel {
     mul_grid: Arc<MulGrid>,
     act_grid: Arc<ActGrid>,
     scratch: Mutex<Vec<Scratch>>,
+    signal: SignalHealth,
 }
 
 impl fmt::Debug for BatchKernel {
@@ -510,6 +822,7 @@ impl BatchKernel {
             mul_grid,
             act_grid,
             scratch: Mutex::new(Vec::new()),
+            signal: SignalHealth::default(),
         }
     }
 
@@ -547,7 +860,14 @@ impl BatchKernel {
             mul_grid,
             act_grid,
             scratch: Mutex::new(Vec::new()),
+            signal: SignalHealth::default(),
         }
+    }
+
+    /// Point-in-time copy of this kernel's signal-health accumulators
+    /// (all zero until [`signal_health_set`] turns accounting on).
+    pub fn signal_health(&self) -> SignalHealthStats {
+        self.signal.snapshot()
     }
 
     /// Stuck-at fault injection into the multiplier lookup grid (see
@@ -658,11 +978,16 @@ impl BatchKernel {
             let out = SendPtr(logits.as_mut_ptr());
             let base = rows / shards;
             let extra = rows % shards;
+            // The caller's correlation id is thread-local; capture it by
+            // value so the slab spans on pool threads stay attached to
+            // the request that dispatched them.
+            let caller_trace = crate::util::trace::current_trace();
             // The slab pool is distinct from the router's request pool:
             // router workers block right here waiting for slabs, so
             // dispatching slabs onto their own pool could deadlock (see
             // `util::pool` docs).
             crate::util::pool::shared_pool().run_scoped(shards, |s| {
+                let _corr = crate::util::trace::correlate(caller_trace);
                 let _slab = crate::util::trace::span("batch.slab");
                 let r0 = s * base + s.min(extra);
                 let r1 = r0 + base + usize::from(s < extra);
@@ -747,6 +1072,12 @@ impl BatchKernel {
         let p = self.provider.as_ref();
         let (mut cur, mut nxt) = (buf_a, buf_b);
 
+        // One relaxed load per slab decides the instrumented path; the
+        // slab-local counters are plain integers flushed once at the end,
+        // so the nominal path (`instrument == false`) is unchanged.
+        let instrument = signal_health_enabled();
+        let mut sig = SlabSignal::default();
+
         // columnar layout: cur[i·rows + r] holds input i of row r
         for r in r0..r1 {
             for i in 0..din {
@@ -773,15 +1104,30 @@ impl BatchKernel {
                 for k in 0..n_out {
                     let dst =
                         unsafe { std::slice::from_raw_parts_mut(nxt.add(k * rows + r0), seg) };
-                    self.mul_grid
-                        .accumulate(p, &self.mult, col, w[i * n_out + k], dst);
+                    if instrument {
+                        self.mul_grid.accumulate_signal(
+                            p,
+                            &self.mult,
+                            col,
+                            w[i * n_out + k],
+                            dst,
+                            &mut sig,
+                        );
+                    } else {
+                        self.mul_grid
+                            .accumulate(p, &self.mult, col, w[i * n_out + k], dst);
+                    }
                 }
             }
             if li < nl - 1 {
                 for k in 0..n_out {
                     let seg_mut =
                         unsafe { std::slice::from_raw_parts_mut(nxt.add(k * rows + r0), seg) };
-                    self.act_grid.apply(p, seg_mut, ACT_GAIN);
+                    if instrument {
+                        self.act_grid.apply_signal(p, seg_mut, ACT_GAIN, &mut sig);
+                    } else {
+                        self.act_grid.apply(p, seg_mut, ACT_GAIN);
+                    }
                 }
             }
             std::mem::swap(&mut cur, &mut nxt);
@@ -795,6 +1141,10 @@ impl BatchKernel {
             for k in 0..k_out {
                 unsafe { *logits.add(r * k_out + k) = *cur.add(k * rows + r) };
             }
+        }
+
+        if instrument {
+            self.signal.absorb(&sig);
         }
     }
 
@@ -1105,6 +1455,100 @@ mod tests {
         assert!(!c.shares_grids_with(&a), "rebuild must sample fresh grids");
         // a fragment matching nothing evicts nothing
         assert_eq!(grid_cache_invalidate("no-such-key-fragment"), 0);
+    }
+
+    #[test]
+    fn signal_health_accounting_is_numerically_identical_and_exact() {
+        let net = toy_net();
+        let kernel =
+            BatchKernel::for_net(Box::new(Algorithmic::relu()), &net, &GridConfig::default())
+                .unwrap();
+        let rows = 16;
+        let mut rng = Rng::new(17);
+        let mut x: Vec<f32> = (0..rows * 2)
+            .map(|_| rng.uniform_in(-1.0, 1.0) as f32)
+            .collect();
+        // force out-of-grid fallbacks and saturated activations
+        x[0] = 50.0;
+        x[3] = -40.0;
+        signal_health_set(false);
+        let want = kernel.forward_net(&net, &x, rows);
+        let zero = kernel.signal_health();
+        assert_eq!(zero.mul_elems, 0, "disabled path must not account");
+        signal_health_set(true);
+        let got = kernel.forward_net(&net, &x, rows);
+        signal_health_set(false);
+        assert_eq!(got, want, "instrumentation must not change the math");
+        let s = kernel.signal_health();
+        // toy net [2,3,2]: 2·3 + 3·2 = 12 mul elements and 3 activation
+        // inputs per row
+        assert_eq!(s.mul_elems, rows as u64 * 12);
+        assert_eq!(s.act_samples, rows as u64 * 3);
+        assert!(s.mul_fallbacks > 0, "x=50 must leave the proto grid");
+        let heat_total: u64 = s.heat.iter().sum();
+        assert_eq!(
+            heat_total + s.mul_fallbacks,
+            s.mul_elems,
+            "every element is either binned or a fallback"
+        );
+        assert!(s.margin_min < 0.0, "fallback ⇒ negative residual");
+        assert!(s.margin_sum > 0.0);
+        assert!(s.score() > 0.0 && s.score() <= 1.0);
+        // the parallel path flushes per slab and lands the same totals
+        let kernel2 =
+            BatchKernel::for_net(Box::new(Algorithmic::relu()), &net, &GridConfig::default())
+                .unwrap();
+        signal_health_set(true);
+        let par = kernel2.forward_batch_threads(&net.sizes, &net.weights, &net.biases, &x, rows, 4);
+        signal_health_set(false);
+        assert_eq!(par, want);
+        let s2 = kernel2.signal_health();
+        assert_eq!(s2.mul_elems, s.mul_elems);
+        assert_eq!(s2.mul_fallbacks, s.mul_fallbacks);
+        assert_eq!(s2.act_samples, s.act_samples);
+        assert_eq!(s2.heat, s.heat);
+    }
+
+    #[test]
+    fn signal_health_stats_merge_laws() {
+        let mut a = SignalHealthStats {
+            enabled: true,
+            mul_elems: 10,
+            mul_fallbacks: 2,
+            act_samples: 4,
+            act_sat_high: 1,
+            act_sat_low: 0,
+            act_fallbacks: 1,
+            heat: [1, 0, 0, 2, 0, 0, 0, 5],
+            margin_min: -0.5,
+            margin_sum: 3.25,
+        };
+        let b = SignalHealthStats {
+            enabled: false,
+            mul_elems: 6,
+            mul_fallbacks: 0,
+            act_samples: 2,
+            act_sat_high: 0,
+            act_sat_low: 2,
+            act_fallbacks: 0,
+            heat: [0, 1, 1, 0, 0, 0, 4, 0],
+            margin_min: 0.25,
+            margin_sum: 1.75,
+        };
+        a.merge(&b);
+        assert_eq!(a.mul_elems, 16);
+        assert_eq!(a.act_samples, 6);
+        assert_eq!(a.heat, [1, 1, 1, 2, 0, 0, 4, 5]);
+        assert_eq!(a.margin_min, -0.5);
+        assert_eq!(a.margin_sum, 5.0);
+        assert!((a.saturation_fraction() - 0.5).abs() < 1e-12);
+        // an empty side must not clobber the real min with its 0.0
+        let mut empty = SignalHealthStats::default();
+        empty.merge(&a);
+        assert_eq!(empty.margin_min, -0.5);
+        let mut c = a;
+        c.merge(&SignalHealthStats::default());
+        assert_eq!(c.margin_min, -0.5);
     }
 
     #[test]

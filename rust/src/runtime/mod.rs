@@ -231,6 +231,13 @@ impl Executable {
         self.exec.mode()
     }
 
+    /// Signal-health accumulators of the underlying batched kernel
+    /// (`None` in scalar mode).  Kernels are `Arc`-shared across clones,
+    /// so every router worker of a lane reads the same accumulators.
+    pub fn signal_health(&self) -> Option<crate::nn::batch::SignalHealthStats> {
+        self.exec.signal_health()
+    }
+
     /// Execute with f32 parameter buffers in manifest order.  Each buffer's
     /// length must match the manifest shape.  Returns the flat f32 outputs.
     pub fn run_f32(&self, params: &[&[f32]]) -> Result<Vec<f32>> {

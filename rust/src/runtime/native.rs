@@ -205,6 +205,12 @@ impl NativeExec {
         }
     }
 
+    /// Signal-health accumulators of the batched kernel (`None` on the
+    /// scalar path, which has no grids to fall out of).
+    pub fn signal_health(&self) -> Option<crate::nn::batch::SignalHealthStats> {
+        self.kernel.as_ref().map(|k| k.signal_health())
+    }
+
     /// Row-parallel variant (for the single-task CLI/bench path).
     pub fn with_par_threads(mut self, n: usize) -> NativeExec {
         self.par_threads = n.max(1);

@@ -15,11 +15,23 @@
 //! Tracing is process-global.  Enable it programmatically with
 //! [`enable`], or from the environment with [`init_from_env`]
 //! (`SAC_TRACE=1`, optional `SAC_TRACE_CAPACITY=<n>`).
+//!
+//! **Per-request correlation** (DESIGN.md §12): every span carries a
+//! `trace` id (0 = uncorrelated).  The id is minted at router admission
+//! and propagated through a thread-local — [`correlate`] installs it for
+//! the current scope and restores the previous id on drop, so nested
+//! work (engine run, kernel, delivery) inherits the request's id without
+//! any plumbing through function signatures.  Worker threads that fan a
+//! batch out (row slabs) re-install the caller's id inside the pool
+//! closure.  [`export_chrome`] reconstructs the per-request span trees
+//! from the ring as Chrome trace-event ("Perfetto") JSON.
 
 use std::cell::Cell;
 use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
+
+use crate::util::json::Json;
 
 /// Default ring capacity used by [`init_from_env`] when
 /// `SAC_TRACE_CAPACITY` is not set.
@@ -33,6 +45,8 @@ pub struct SpanRecord {
     pub name: &'static str,
     /// Small dense id of the recording thread (assigned on first span).
     pub thread: u32,
+    /// Request correlation id (0 = uncorrelated / infrastructure span).
+    pub trace: u64,
     /// Global sequence number in record order (gap-free while enabled).
     pub seq: u64,
     /// Nanoseconds from the trace epoch to span entry.
@@ -78,6 +92,7 @@ static NEXT_THREAD_ID: AtomicU32 = AtomicU32::new(1);
 
 thread_local! {
     static THREAD_ID: Cell<u32> = const { Cell::new(0) };
+    static CURRENT_TRACE: Cell<u64> = const { Cell::new(0) };
 }
 
 fn thread_id() -> u32 {
@@ -171,24 +186,142 @@ pub fn snapshot() -> Vec<SpanRecord> {
     }
 }
 
+/// Request correlation id currently installed on this thread
+/// (0 = none).
+pub fn current_trace() -> u64 {
+    CURRENT_TRACE.with(|c| c.get())
+}
+
+/// Guard returned by [`correlate`]; restores the previously installed
+/// trace id when dropped.
+#[must_use = "dropping the guard immediately uninstalls the trace id"]
+pub struct TraceScope {
+    prev: Option<u64>,
+}
+
+/// Install `trace` as the current thread's correlation id for the
+/// lifetime of the returned guard.  When tracing is disabled this is a
+/// relaxed atomic load and a one-word struct — the thread-local is not
+/// touched, so the disabled serving path stays free of TLS traffic.
+#[inline]
+pub fn correlate(trace: u64) -> TraceScope {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return TraceScope { prev: None };
+    }
+    TraceScope {
+        prev: Some(CURRENT_TRACE.with(|c| c.replace(trace))),
+    }
+}
+
+impl Drop for TraceScope {
+    fn drop(&mut self) {
+        if let Some(prev) = self.prev {
+            CURRENT_TRACE.with(|c| c.set(prev));
+        }
+    }
+}
+
+/// Span name of a correlated request's root (minted at router
+/// admission).  A correlated trace id present in the ring *without*
+/// this root span lost its head to ring overwrite and is marked
+/// truncated on export.
+pub const ROOT_SPAN: &str = "router.submit";
+
+/// Render spans as a Chrome trace-event ("Perfetto") JSON object:
+/// complete events (`ph:"X"`, microsecond `ts`/`dur`) with the
+/// correlation id and sequence number in `args`, plus a `metadata`
+/// block carrying the exact drop accounting and the list of correlated
+/// traces whose root span was evicted by ring overwrite (load the
+/// output in `chrome://tracing` or https://ui.perfetto.dev).
+pub fn export_chrome(spans: &[SpanRecord], stats: &TraceStats) -> Json {
+    let mut events = Vec::with_capacity(spans.len());
+    let mut seen = std::collections::BTreeSet::new();
+    let mut rooted = std::collections::BTreeSet::new();
+    for s in spans {
+        if s.trace != 0 {
+            seen.insert(s.trace);
+            if s.name == ROOT_SPAN {
+                rooted.insert(s.trace);
+            }
+        }
+        events.push(Json::obj(vec![
+            (
+                "args",
+                Json::obj(vec![
+                    ("seq", Json::Num(s.seq as f64)),
+                    ("trace_id", Json::Num(s.trace as f64)),
+                ]),
+            ),
+            ("cat", Json::Str("sac".into())),
+            ("dur", Json::Num(s.duration_ns() as f64 / 1000.0)),
+            ("name", Json::Str(s.name.into())),
+            ("ph", Json::Str("X".into())),
+            ("pid", Json::Num(1.0)),
+            ("tid", Json::Num(f64::from(s.thread))),
+            ("ts", Json::Num(s.t_enter_ns as f64 / 1000.0)),
+        ]));
+    }
+    let truncated: Vec<Json> = seen
+        .difference(&rooted)
+        .map(|&t| Json::Num(t as f64))
+        .collect();
+    Json::obj(vec![
+        ("displayTimeUnit", Json::Str("ms".into())),
+        (
+            "metadata",
+            Json::obj(vec![
+                ("capacity", Json::Num(stats.capacity as f64)),
+                ("dropped", Json::Num(stats.dropped as f64)),
+                ("recorded", Json::Num(stats.recorded as f64)),
+                ("schema", Json::Str("sac-trace/v1".into())),
+                ("truncated_traces", Json::Arr(truncated)),
+            ]),
+        ),
+        ("traceEvents", Json::Arr(events)),
+    ])
+}
+
+/// [`export_chrome`] over the live ring (chronological snapshot + current
+/// stats in one call).
+pub fn export_chrome_live() -> Json {
+    export_chrome(&snapshot(), &stats())
+}
+
 /// An in-flight span.  Records itself into the ring when dropped; does
 /// nothing (and allocated nothing) if tracing was disabled at entry.
 #[must_use = "a span records its duration when dropped; binding it to _ drops it immediately"]
 pub struct Span {
     name: &'static str,
     enter: Option<Instant>,
+    trace: u64,
+}
+
+impl Span {
+    /// Override the correlation id captured at entry — for spans opened
+    /// before the request id exists (router admission mints the id
+    /// mid-span).
+    pub fn set_trace(&mut self, trace: u64) {
+        self.trace = trace;
+    }
 }
 
 /// Open a span.  When tracing is disabled this is a relaxed atomic load
-/// and a two-word struct — no clock read, no lock, no allocation.
+/// and a small struct — no clock read, no lock, no allocation.  The
+/// span inherits the thread's current correlation id (see
+/// [`correlate`]).
 #[inline]
 pub fn span(name: &'static str) -> Span {
     if !ENABLED.load(Ordering::Relaxed) {
-        return Span { name, enter: None };
+        return Span {
+            name,
+            enter: None,
+            trace: 0,
+        };
     }
     Span {
         name,
         enter: Some(Instant::now()),
+        trace: current_trace(),
     }
 }
 
@@ -216,6 +349,7 @@ impl Drop for Span {
         let rec = SpanRecord {
             name: self.name,
             thread: tid,
+            trace: self.trace,
             seq: r.seq,
             t_enter_ns: ns(enter),
             t_exit_ns: ns(exit),
@@ -283,6 +417,68 @@ mod tests {
             .filter(|r| r.name.starts_with("trace.test.pre_epoch"))
             .all(|r| r.t_exit_ns >= r.t_enter_ns));
         disable();
+    }
+
+    // NOTE: correlation tests that need the global ring (correlate
+    // nesting, set_trace capture) live in tests/observability.rs behind
+    // its serialization guard — the ring is process-global and the unit
+    // tests here run concurrently.
+
+    #[test]
+    fn chrome_export_shape_and_truncation_marking() {
+        let spans = vec![
+            SpanRecord {
+                name: ROOT_SPAN,
+                thread: 1,
+                trace: 5,
+                seq: 0,
+                t_enter_ns: 1_000,
+                t_exit_ns: 3_500,
+            },
+            SpanRecord {
+                name: "batch.forward",
+                thread: 2,
+                trace: 5,
+                seq: 1,
+                t_enter_ns: 1_200,
+                t_exit_ns: 2_000,
+            },
+            // trace 8 has no ROOT_SPAN record → truncated
+            SpanRecord {
+                name: "router.deliver",
+                thread: 1,
+                trace: 8,
+                seq: 2,
+                t_enter_ns: 4_000,
+                t_exit_ns: 4_100,
+            },
+        ];
+        let st = TraceStats {
+            enabled: true,
+            capacity: 4,
+            recorded: 7,
+            dropped: 3,
+        };
+        let j = export_chrome(&spans, &st);
+        let events = j.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 3);
+        let e0 = &events[0];
+        assert_eq!(e0.get("ph").unwrap().as_str().unwrap(), "X");
+        assert_eq!(e0.get("name").unwrap().as_str().unwrap(), ROOT_SPAN);
+        assert_eq!(e0.get("ts").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(e0.get("dur").unwrap().as_f64().unwrap(), 2.5);
+        assert_eq!(
+            e0.get("args").unwrap().get("trace_id").unwrap().as_f64().unwrap(),
+            5.0
+        );
+        let meta = j.get("metadata").unwrap();
+        assert_eq!(meta.get("dropped").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(meta.get("recorded").unwrap().as_f64().unwrap(), 7.0);
+        let trunc = meta.get("truncated_traces").unwrap().as_arr().unwrap();
+        assert_eq!(trunc, &[Json::Num(8.0)]);
+        // valid JSON round-trip
+        let text = j.to_string();
+        assert_eq!(crate::util::json::parse(&text).unwrap(), j);
     }
 
     #[test]

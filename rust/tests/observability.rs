@@ -31,13 +31,15 @@ use std::sync::{Arc, Barrier, Mutex, MutexGuard};
 use std::time::Duration;
 
 use sac::coordinator::{
-    metrics_file_json, prometheus_exposition, synthetic_engine, HealthSnapshot, KernelSnapshot,
-    MetricsSnapshot, Router, RouterConfig, ServeMetrics, StageSnapshot,
+    metrics_file_json, prometheus_exposition, synthetic_engine, trace_of, ExemplarSet,
+    HealthSnapshot, KernelSnapshot, MetricsSnapshot, Router, RouterConfig, ServeMetrics,
+    StageSnapshot,
 };
 use sac::faults::{
     chaos_corners, chaos_net, run_corner_with_metrics, run_infra_with_metrics, AnalogFault,
     ChaosConfig, DriftKind, FaultPlan, InfraFault,
 };
+use sac::nn::batch::SignalHealthStats;
 use sac::prop_assert;
 use sac::runtime::FaultyExec;
 use sac::util::json::{self, Json};
@@ -104,6 +106,24 @@ fn golden_snapshot() -> MetricsSnapshot {
     let beta = ServeMetrics::default();
     let mut aggregate = alpha.clone();
     aggregate.merge(&beta);
+    // exemplar: lane 0's first request (trace_of(0, 0) = 2^48 + 1,
+    // exact in f64) at the same dyadic 2^20 ns latency as the histogram
+    let mut alpha_ex = ExemplarSet::default();
+    alpha_ex.observe(1 << 20, trace_of(0, 0));
+    // dyadic signal block: saturation 2/4 = 0.5, fallbacks 3/12 = 0.25,
+    // margin stats exact halves/quarters
+    let alpha_sig = SignalHealthStats {
+        enabled: true,
+        mul_elems: 8,
+        mul_fallbacks: 3,
+        act_samples: 4,
+        act_sat_high: 1,
+        act_sat_low: 1,
+        act_fallbacks: 0,
+        heat: [1, 2, 2, 0, 0, 0, 0, 0],
+        margin_min: -0.5,
+        margin_sum: 2.25,
+    };
     MetricsSnapshot {
         name: "golden".into(),
         stages: StageSnapshot {
@@ -150,6 +170,14 @@ fn golden_snapshot() -> MetricsSnapshot {
             retries: 1,
             respawns: 1,
         },
+        exemplars: vec![
+            ("alpha".into(), alpha_ex),
+            ("beta".into(), ExemplarSet::default()),
+        ],
+        signal: vec![
+            ("alpha".into(), alpha_sig),
+            ("beta".into(), SignalHealthStats::default()),
+        ],
     }
 }
 
@@ -191,7 +219,7 @@ fn golden_json_exposition_is_stable() {
     // the canonical text round-trips through the parser unchanged
     let back = json::parse(&text).unwrap();
     assert_eq!(back.to_string(), text);
-    assert_eq!(back.get("schema").unwrap().as_str().unwrap(), "sac-metrics/v3");
+    assert_eq!(back.get("schema").unwrap().as_str().unwrap(), "sac-metrics/v4");
     let snap_json = &back.get("snapshots").unwrap().as_arr().unwrap()[0];
     assert_eq!(snap_json.get("router").unwrap().as_str().unwrap(), "golden");
 }
@@ -220,6 +248,18 @@ fn golden_values_are_hand_checkable() {
     assert_eq!(m.p99_latency_ms(), 1.048576);
     assert_eq!(m.throughput_rps(), 1907.3486328125);
     assert_eq!(snap.aggregate, snap.lanes[0].1);
+    // the exemplar sits in the same bucket as the histogram sample and
+    // carries lane 0's first trace id exactly
+    let (_, ex) = &snap.exemplars[0];
+    let e = ex.get(512).unwrap();
+    assert_eq!(e.trace_id, (1u64 << 48) + 1);
+    assert_eq!(e.latency_ns, 1 << 20);
+    assert_eq!(ex.len(), 1);
+    // the signal fractions behind the golden text are exact dyadics
+    let (_, sig) = &snap.signal[0];
+    assert_eq!(sig.saturation_fraction(), 0.5);
+    assert_eq!(sig.fallback_fraction(), 0.25);
+    assert_eq!(sig.score(), 0.5);
 }
 
 // ---------------------------------------------------------------------
@@ -341,6 +381,142 @@ fn ring_wraps_and_counts_drops_exactly() {
     assert_eq!(st.capacity, 16);
     assert_eq!(st.recorded, 40);
     assert_eq!(st.dropped, 24);
+    trace::disable();
+}
+
+// ---------------------------------------------------------------------
+// ISSUE 10 tentpole: per-request trace correlation
+// ---------------------------------------------------------------------
+
+#[test]
+fn correlate_nests_and_set_trace_overrides() {
+    let _g = trace_lock();
+    trace::enable(64);
+    assert_eq!(trace::current_trace(), 0);
+    {
+        let _outer = trace::correlate(7);
+        assert_eq!(trace::current_trace(), 7);
+        {
+            let _inner = trace::correlate(9);
+            assert_eq!(trace::current_trace(), 9);
+            drop(trace::span("obs.inner"));
+        }
+        // the inner guard restored the outer id on drop
+        assert_eq!(trace::current_trace(), 7);
+        drop(trace::span("obs.outer"));
+        // admission mints the request id mid-span: set_trace overrides
+        // the id the span inherited at entry
+        let mut minted = trace::span("obs.minted");
+        minted.set_trace(11);
+        drop(minted);
+    }
+    assert_eq!(trace::current_trace(), 0, "outermost guard restores the idle id");
+    let snap = trace::snapshot();
+    let tr = |name: &str| snap.iter().find(|r| r.name == name).unwrap().trace;
+    assert_eq!(tr("obs.inner"), 9);
+    assert_eq!(tr("obs.outer"), 7);
+    assert_eq!(tr("obs.minted"), 11);
+    trace::disable();
+}
+
+/// A request whose early spans were evicted by ring overwrite still
+/// exports as a well-formed Chrome document: the rootless trace is
+/// listed in `metadata.truncated_traces` and the drop accounting is
+/// exact (satellite 3).
+#[test]
+fn partially_evicted_trace_exports_truncation_marked() {
+    let _g = trace_lock();
+    trace::enable(4);
+    // trace 5: a complete submit → deliver pair, recorded first
+    {
+        let _c = trace::correlate(5);
+        drop(trace::span("router.submit"));
+        drop(trace::span("router.deliver"));
+    }
+    // trace 6: three spans; the third overwrites trace 5's admission
+    // root (ring of 4, fifth record evicts seq 0)
+    {
+        let _c = trace::correlate(6);
+        drop(trace::span("router.submit"));
+        drop(trace::span("router.deliver"));
+        drop(trace::span("router.deliver"));
+    }
+    let doc = trace::export_chrome_live();
+    let text = doc.to_string();
+    // well-formed: the canonical text round-trips through the parser
+    assert_eq!(json::parse(&text).unwrap().to_string(), text);
+    let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    assert_eq!(events.len(), 4, "ring capacity bounds the exported events");
+    let meta = doc.get("metadata").unwrap();
+    assert_eq!(meta.get("capacity").unwrap().as_usize().unwrap(), 4);
+    assert_eq!(meta.get("recorded").unwrap().as_usize().unwrap(), 5);
+    assert_eq!(meta.get("dropped").unwrap().as_usize().unwrap(), 1);
+    // trace 5 lost its root span; trace 6 is fully rooted
+    let trunc = meta.get("truncated_traces").unwrap().as_arr().unwrap();
+    assert_eq!(trunc.len(), 1);
+    assert_eq!(trunc[0].as_usize().unwrap(), 5);
+    // the surviving orphan span still carries its correlation id
+    let orphan = events
+        .iter()
+        .find(|e| {
+            e.get("args").unwrap().get("trace_id").unwrap().as_usize().unwrap() == 5
+        })
+        .expect("trace 5's deliver span survives the wrap");
+    assert_eq!(orphan.get("name").unwrap().as_str().unwrap(), "router.deliver");
+    trace::disable();
+}
+
+/// End to end through the live router: the trace id minted at admission
+/// reappears on the pipeline spans, and delivery records exemplars that
+/// link the latency histogram back to live traces.
+#[test]
+fn request_trace_flows_from_submit_to_deliver_with_exemplars() {
+    let _g = trace_lock();
+    trace::enable(8192);
+    let engine = synthetic_engine(21, &[6, 8, 3], 8).unwrap();
+    let router = Router::new(
+        RouterConfig {
+            workers: 2,
+            ..RouterConfig::default()
+        },
+        vec![("lane".into(), engine)],
+    );
+    let ids: Vec<_> = (0..8)
+        .map(|i| router.submit(0, vec![0.1 * i as f32; 6]).unwrap())
+        .collect();
+    router.drain(Duration::from_secs(30)).unwrap();
+    for id in ids {
+        router.try_take(id).unwrap().unwrap();
+    }
+    let snap = trace::snapshot();
+    // lane 0's first request: its root span was tagged at admission
+    let t0 = trace_of(0, 0);
+    assert!(
+        snap.iter().any(|r| r.name == "router.submit" && r.trace == t0),
+        "admission root span missing trace id {t0}"
+    );
+    // the batch pipeline correlates each stage to its lead request
+    for expected in ["router.batch", "engine.run_batch", "router.deliver"] {
+        assert!(
+            snap.iter().any(|r| r.name == expected && r.trace != 0),
+            "no correlated {expected:?} span"
+        );
+    }
+    // delivery recorded exemplars, every one tied to a real trace
+    let m = router.metrics_snapshot("trace-flow");
+    let (task, ex) = &m.exemplars[0];
+    assert_eq!(task, "lane");
+    assert!(!ex.is_empty(), "tracing on: delivery must retain exemplars");
+    for e in ex.iter() {
+        assert_ne!(e.trace_id, 0);
+    }
+    // and the Prometheus exposition carries the OpenMetrics suffix
+    let prom = m.prometheus();
+    assert!(
+        prom.contains("# {trace_id=\""),
+        "exemplar suffix missing from: {prom}"
+    );
+    router.shutdown();
     trace::disable();
 }
 
@@ -678,7 +854,7 @@ fn bench_serve_metrics_out_counts_match_delivered_requests() {
     assert!(status.success());
 
     let j = json::parse_file(&out).unwrap();
-    assert_eq!(j.get("schema").unwrap().as_str().unwrap(), "sac-metrics/v3");
+    assert_eq!(j.get("schema").unwrap().as_str().unwrap(), "sac-metrics/v4");
     let snaps = j.get("snapshots").unwrap().as_arr().unwrap();
     assert_eq!(snaps.len(), 1);
     let snap = &snaps[0];
@@ -739,7 +915,7 @@ fn metrics_cli_emits_parseable_canonical_json() {
     );
     let stdout = String::from_utf8(output.stdout).unwrap();
     let j = json::parse(stdout.trim()).unwrap();
-    assert_eq!(j.get("schema").unwrap().as_str().unwrap(), "sac-metrics/v3");
+    assert_eq!(j.get("schema").unwrap().as_str().unwrap(), "sac-metrics/v4");
     let snap = &j.get("snapshots").unwrap().as_arr().unwrap()[0];
     assert_eq!(snap.get("router").unwrap().as_str().unwrap(), "metrics");
     let agg = snap.get("aggregate").unwrap();
@@ -782,6 +958,9 @@ fn metrics_cli_prometheus_exposition_is_wellformed() {
         "sac_worker_respawns_total",
         "sac_trace_recorded_total",
         "sac_trace_dropped_total",
+        "sac_signal_saturation_ratio",
+        "sac_signal_fallback_ratio",
+        "sac_signal_margin_min",
         "sac_batch_latency_seconds",
         "sac_request_latency_seconds",
     ] {
@@ -872,4 +1051,106 @@ fn chaos_metrics_out_writes_one_snapshot_per_stage() {
     let _ = std::fs::remove_file(&metrics);
     let _ = std::fs::remove_file(&plan_path);
     let _ = std::fs::remove_dir_all(&out_dir);
+}
+
+// ---------------------------------------------------------------------
+// ISSUE 10 satellites: schema-version compat + `sac trace export`
+// ---------------------------------------------------------------------
+
+#[test]
+fn metrics_validate_accepts_current_and_rejects_unknown_schema() {
+    // a current-schema file written by the binary itself
+    let good = temp_path("validate-good.json");
+    let status = sac_bin()
+        .args([
+            "metrics", "--tasks", "1", "--requests", "16", "--batch", "8", "--format", "json",
+            "--out", good.to_str().unwrap(),
+        ])
+        .status()
+        .unwrap();
+    assert!(status.success());
+    let out = sac_bin()
+        .args(["metrics", "--validate", good.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(String::from_utf8_lossy(&out.stdout).contains("sac-metrics/v4"));
+
+    // the same file tagged with a future schema version: typed error,
+    // exit code 1, and the offending tag named on stderr
+    let bad = temp_path("validate-bad.json");
+    let doc = std::fs::read_to_string(&good).unwrap();
+    std::fs::write(&bad, doc.replace("sac-metrics/v4", "sac-metrics/v9")).unwrap();
+    let out = sac_bin()
+        .args(["metrics", "--validate", bad.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(1));
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("unsupported metrics schema"), "stderr: {err}");
+    assert!(err.contains("sac-metrics/v9"), "stderr: {err}");
+    assert!(err.contains("sac-metrics/v4"), "stderr names the supported version: {err}");
+    let _ = std::fs::remove_file(&good);
+    let _ = std::fs::remove_file(&bad);
+}
+
+#[test]
+fn trace_export_cli_emits_wellformed_chrome_trace() {
+    let out = sac_bin().args(["trace", "export"]).output().unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8(out.stdout).unwrap();
+    let j = json::parse(stdout.trim()).unwrap();
+    let meta = j.get("metadata").unwrap();
+    assert_eq!(meta.get("schema").unwrap().as_str().unwrap(), "sac-trace/v1");
+    let events = j.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!events.is_empty());
+    let mut names = std::collections::BTreeSet::new();
+    for e in events {
+        assert_eq!(e.get("ph").unwrap().as_str().unwrap(), "X");
+        assert_eq!(e.get("cat").unwrap().as_str().unwrap(), "sac");
+        assert!(e.get("dur").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(e.get("ts").unwrap().as_f64().unwrap() >= 0.0);
+        names.insert(e.get("name").unwrap().as_str().unwrap().to_string());
+    }
+    // the whole pipeline is visible: admission, batch execution, the
+    // row-sharded kernel slabs, and delivery
+    for expected in [
+        "router.submit",
+        "router.batch",
+        "engine.run_batch",
+        "native.run",
+        "batch.slab",
+        "router.deliver",
+    ] {
+        assert!(names.contains(expected), "missing {expected:?} in {names:?}");
+    }
+    // the default capacity swallows the default workload whole: exact
+    // accounting says nothing was dropped, so no trace lost its root
+    assert_eq!(meta.get("dropped").unwrap().as_usize().unwrap(), 0);
+    assert_eq!(
+        meta.get("truncated_traces").unwrap().as_arr().unwrap().len(),
+        0
+    );
+    // every correlated trace in the document has its admission root
+    let mut seen = std::collections::BTreeSet::new();
+    let mut rooted = std::collections::BTreeSet::new();
+    for e in events {
+        let t = e.get("args").unwrap().get("trace_id").unwrap().as_usize().unwrap();
+        if t != 0 {
+            seen.insert(t);
+            if e.get("name").unwrap().as_str().unwrap() == "router.submit" {
+                rooted.insert(t);
+            }
+        }
+    }
+    assert!(!seen.is_empty(), "export must carry correlated spans");
+    assert_eq!(seen, rooted, "every trace follows submit → … → deliver unbroken");
 }
